@@ -1,0 +1,77 @@
+//! Coordinator hot-path bench: train/eval step latency per attention
+//! variant on the tiny artifacts, plus the host-side costs around them
+//! (state literal conversion, checkpoint I/O).
+//!
+//! Run: `cargo bench --bench coordinator` (needs `make artifacts`).
+
+use darkformer::bench::bench;
+use darkformer::config::ExperimentConfig;
+use darkformer::coordinator::{Trainer, Workbench};
+use darkformer::rng::Pcg64;
+
+fn main() {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("tiny").exists() {
+        eprintln!("skipping coordinator bench: run `make artifacts` first");
+        return;
+    }
+    let cache = std::path::PathBuf::from("runs/bench/_cache");
+    let wb = Workbench::prepare(&artifacts, "tiny", 400, 42, &cache)
+        .expect("workbench");
+    let mut rng = Pcg64::seed(5);
+
+    println!("== per-variant train/eval step latency (tiny) ==");
+    for variant in ["exact", "performer", "darkformer", "lfk"] {
+        let cfg = ExperimentConfig {
+            variant: variant.into(),
+            model_config: "tiny".into(),
+            out_dir: format!("runs/bench/{variant}").into(),
+            ..Default::default()
+        };
+        let trainer = match Trainer::new(cfg, &wb) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("  {variant}: {e:#}");
+                continue;
+            }
+        };
+        let mut state = trainer.initial_state().expect("init");
+        let batch = wb.dataset.train_batch(wb.meta.batch_size, &mut rng);
+        // Warm the executable, then time.
+        bench(&format!("train_step/{variant}"), 2, 10, || {
+            trainer
+                .train_step(&mut state, &batch, rng.clone().next_u32(), 1e-3)
+                .expect("step");
+        });
+        bench(&format!("eval/{variant}/4batches"), 1, 5, || {
+            trainer.evaluate(&state, 4).expect("eval");
+        });
+    }
+
+    println!("\n== host-side costs ==");
+    let cfg = ExperimentConfig {
+        variant: "darkformer".into(),
+        model_config: "tiny".into(),
+        out_dir: "runs/bench/host".into(),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(cfg, &wb).expect("trainer");
+    let state = trainer.initial_state().expect("init");
+    bench("host/state_to_literals", 2, 20, || {
+        std::hint::black_box(state.state_literals().expect("literals"));
+    });
+    let ckpt_path = std::path::PathBuf::from("runs/bench/host/ck.dkft");
+    bench("host/checkpoint_save", 1, 10, || {
+        state.save(&ckpt_path).expect("save");
+    });
+    bench("host/checkpoint_load", 1, 10, || {
+        std::hint::black_box(
+            darkformer::checkpoint::Checkpoint::load(&ckpt_path).expect("load"),
+        );
+    });
+    bench("host/train_batch_sample", 2, 50, || {
+        std::hint::black_box(
+            wb.dataset.train_batch(wb.meta.batch_size, &mut rng),
+        );
+    });
+}

@@ -1,0 +1,73 @@
+//! Fig. 1 bench: exact O(L^2 d) vs PRF O(L m d) attention wall-clock
+//! across sequence lengths, using the AOT attention probes.
+//!
+//! Run: `cargo bench --bench fig1_scaling` (needs `make artifacts`).
+
+use darkformer::bench::bench;
+use darkformer::rng::Pcg64;
+use darkformer::runtime::Runtime;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts/scaling");
+    if !dir.exists() {
+        eprintln!("skipping fig1_scaling: run `make artifacts` first");
+        return;
+    }
+    let runtime = Runtime::cpu().expect("PJRT cpu client");
+    let mut rng = Pcg64::seed(11);
+    let (h, dh) = (4usize, 32usize);
+
+    println!("== Fig 1: attention latency vs sequence length ==");
+    let mut rows = Vec::new();
+    for l in [64usize, 128, 256, 512, 1024] {
+        let mut pair = Vec::new();
+        for variant in ["exact", "performer"] {
+            let path = dir.join(format!("attn_{variant}_L{l}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let program = runtime.load_program(&path).expect("load probe");
+            let n = h * l * dh;
+            let data: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let mk = || {
+                xla::Literal::vec1(&data)
+                    .reshape(&[1, h as i64, l as i64, dh as i64])
+                    .unwrap()
+            };
+            let (q, k, v) = (mk(), mk(), mk());
+            let seed = xla::Literal::scalar(3u32);
+            let result = bench(&format!("attn/{variant}/L{l}"), 2, 8, || {
+                program
+                    .run(&[&q, &k, &v, &seed].map(Clone::clone))
+                    .expect("probe run");
+            });
+            pair.push(result.mean_ms);
+        }
+        if pair.len() == 2 {
+            rows.push((l, pair[0], pair[1]));
+        }
+    }
+    println!("\n{:>8} {:>12} {:>12} {:>9}", "L", "exact ms", "prf ms", "ratio");
+    for (l, e, p) in &rows {
+        println!("{l:>8} {e:>12.3} {p:>12.3} {:>8.2}x", e / p);
+    }
+    // The paper's shape claim: the exact/PRF ratio must grow with L.
+    if rows.len() >= 2 {
+        let first = rows.first().unwrap();
+        let last = rows.last().unwrap();
+        let r0 = first.1 / first.2;
+        let r1 = last.1 / last.2;
+        println!(
+            "\nratio growth {:.2}x -> {:.2}x across L={}..{} ({})",
+            r0,
+            r1,
+            first.0,
+            last.0,
+            if r1 > r0 {
+                "linear-attention advantage grows: OK"
+            } else {
+                "UNEXPECTED"
+            }
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Substrate throughput bench: tokenizer, corpus synthesis, JSON,
+//! checkpoint CRC, linalg kernels — the non-XLA pieces of the hot path.
+//!
+//! Run: `cargo bench --bench substrates`.
+
+use darkformer::bench::{bench, bench_throughput};
+use darkformer::checkpoint::{Checkpoint, Tensor};
+use darkformer::data::{CorpusGenerator, CorpusSpec};
+use darkformer::linalg::Matrix;
+use darkformer::rng::{GaussianExt, Pcg64};
+use darkformer::ser::parse;
+use darkformer::tokenizer::BpeTrainer;
+
+fn main() {
+    let mut rng = Pcg64::seed(9);
+
+    // Corpus synthesis.
+    let mut gen = CorpusGenerator::new(CorpusSpec::default(), 1);
+    bench_throughput("corpus/generate_100_docs", 1, 5, 100.0, || {
+        std::hint::black_box(gen.documents(100));
+    });
+
+    // Tokenizer.
+    let mut gen2 = CorpusGenerator::new(CorpusSpec::default(), 2);
+    let corpus = gen2.documents(800);
+    let bpe = BpeTrainer::new(768).train(corpus.as_bytes()).expect("bpe");
+    let sample = &corpus[..corpus.len().min(20_000)];
+    bench_throughput(
+        "bpe/encode_20kB",
+        1,
+        5,
+        sample.len() as f64,
+        || {
+            std::hint::black_box(bpe.encode(sample));
+        },
+    );
+    let ids = bpe.encode(sample);
+    bench_throughput("bpe/decode", 1, 20, ids.len() as f64, || {
+        std::hint::black_box(bpe.decode(&ids));
+    });
+
+    // JSON manifest parse.
+    let manifest = std::fs::read_to_string("artifacts/tiny/darkformer/manifest.json")
+        .unwrap_or_else(|_| {
+            r#"{"variant":"x","config":"t","params":[{"name":"a","shape":[64,64],"dtype":"f32"}],"programs":[]}"#
+                .to_string()
+        });
+    bench("json/parse_manifest", 5, 100, || {
+        std::hint::black_box(parse(&manifest).expect("parse"));
+    });
+
+    // Checkpoint round trip (1M f32 ~ a small-config state).
+    let data: Vec<f32> = (0..1_000_000).map(|_| rng.next_f32()).collect();
+    let mut ck = Checkpoint::new();
+    ck.insert("blob", Tensor::from_f32(vec![1000, 1000], &data));
+    let path = std::path::PathBuf::from("runs/bench/substrate_ck.dkft");
+    std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir");
+    bench("checkpoint/save_4MB", 1, 5, || {
+        ck.save(&path).expect("save");
+    });
+    bench("checkpoint/load_4MB", 1, 5, || {
+        std::hint::black_box(Checkpoint::load(&path).expect("load"));
+    });
+
+    // Linalg.
+    let a = Matrix::from_vec(
+        128,
+        128,
+        (0..128 * 128).map(|_| rng.gaussian()).collect(),
+    );
+    let b = Matrix::from_vec(
+        128,
+        128,
+        (0..128 * 128).map(|_| rng.gaussian()).collect(),
+    );
+    bench("linalg/matmul_128", 2, 20, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    let spd = {
+        let g = a.matmul(&a.transpose());
+        g.add(&Matrix::identity(128).scale(128.0))
+    };
+    bench("linalg/cholesky_128", 2, 20, || {
+        std::hint::black_box(spd.cholesky().expect("spd"));
+    });
+
+    // RNG.
+    bench_throughput("rng/gaussian_1M", 1, 5, 1e6, || {
+        for _ in 0..1_000_000 {
+            std::hint::black_box(rng.gaussian());
+        }
+    });
+}

@@ -1,0 +1,114 @@
+//! Theory bench: Theorem 3.2 variance table + estimator latency.
+//!
+//! Regenerates the expected-Monte-Carlo-variance comparison (isotropic vs
+//! optimal proposal) at bench scale and times the estimator hot paths.
+//! Run: `cargo bench --bench variance`.
+
+use darkformer::bench::bench;
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
+use darkformer::rfa::{optimal_proposal, variance, PrfEstimator};
+use darkformer::rng::Pcg64;
+
+fn main() {
+    let d = 8;
+    let m = 16;
+    let mut rng = Pcg64::seed(3);
+
+    println!("== Theorem 3.2 variance table (d={d}, m={m}) ==");
+    println!(
+        "{:>6} {:>14} {:>14} {:>9}",
+        "eps", "V(p_I)", "V(psi*)", "ratio"
+    );
+    let mut ratios = Vec::new();
+    for eps in [0.0, 0.4, 0.8] {
+        let lambda = anisotropic_covariance(d, 0.2, eps, &mut rng);
+        let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+        let psi = MultivariateGaussian::new(
+            optimal_proposal(&lambda).expect("valid lambda"),
+        )
+        .unwrap();
+        let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let opt = PrfEstimator::new(d, m, Sampling::Proposal(psi));
+        let v_iso =
+            variance::expected_mc_variance(&iso, &dist, 50, 2000, &mut rng);
+        let v_opt =
+            variance::expected_mc_variance(&opt, &dist, 50, 2000, &mut rng);
+        println!(
+            "{:>6.2} {:>14.6e} {:>14.6e} {:>9.3}",
+            eps,
+            v_iso,
+            v_opt,
+            v_iso / v_opt
+        );
+        ratios.push((eps, v_iso / v_opt));
+    }
+    let grows = ratios.windows(2).all(|w| w[1].1 >= w[0].1 * 0.9);
+    println!(
+        "variance-reduction factor grows with anisotropy: {}",
+        if grows { "OK" } else { "UNEXPECTED" }
+    );
+
+    // Ablation: Performer's orthogonal-random-feature coupling on top of
+    // iid isotropic sampling (DESIGN.md: variance-reduction extensions).
+    println!("\n== ablation: iid vs block-orthogonal features (m=8) ==");
+    {
+        use darkformer::rfa::orthogonal::orthogonal_prf_estimate;
+        use darkformer::rng::GaussianExt;
+        let d = 8;
+        let m = 8;
+        let q: Vec<f64> = rng.gaussian_vec(d).iter().map(|x| 0.4 * x).collect();
+        let k: Vec<f64> = rng.gaussian_vec(d).iter().map(|x| 0.4 * x).collect();
+        let reps = 4000;
+        let var_of = |vals: &[f64]| {
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+                / (vals.len() - 1) as f64
+        };
+        let iid = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let v_iid = var_of(
+            &(0..reps).map(|_| iid.estimate(&q, &k, &mut rng)).collect::<Vec<_>>(),
+        );
+        let v_ort = var_of(
+            &(0..reps)
+                .map(|_| orthogonal_prf_estimate(&q, &k, m, &mut rng))
+                .collect::<Vec<_>>(),
+        );
+        println!(
+            "estimator variance: iid {v_iid:.6e}  orthogonal {v_ort:.6e}  (ratio {:.3})",
+            v_iid / v_ort
+        );
+    }
+
+    println!("\n== estimator hot-path latency ==");
+    let lambda = anisotropic_covariance(d, 0.2, 0.6, &mut rng);
+    let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+    let q = dist.sample(&mut rng);
+    let k = dist.sample(&mut rng);
+    let iso = PrfEstimator::new(d, 64, Sampling::Isotropic);
+    bench("estimate/isotropic/m64", 3, 50, || {
+        std::hint::black_box(iso.estimate(&q, &k, &mut rng.clone()));
+    });
+    let psi = MultivariateGaussian::new(optimal_proposal(&lambda).unwrap())
+        .unwrap();
+    let opt = PrfEstimator::new(d, 64, Sampling::Proposal(psi));
+    bench("estimate/importance/m64", 3, 50, || {
+        std::hint::black_box(opt.estimate(&q, &k, &mut rng.clone()));
+    });
+    let dark = PrfEstimator::new(
+        d,
+        64,
+        Sampling::DataAware(MultivariateGaussian::new(lambda.clone()).unwrap()),
+    );
+    bench("estimate/data_aware/m64", 3, 50, || {
+        std::hint::black_box(dark.estimate(&q, &k, &mut rng.clone()));
+    });
+    bench("cholesky/d64", 3, 50, || {
+        let big = anisotropic_covariance(64, 0.2, 0.5, &mut rng.clone());
+        std::hint::black_box(big.cholesky());
+    });
+    bench("jacobi_eigen/d32", 1, 10, || {
+        let big = anisotropic_covariance(32, 0.2, 0.5, &mut rng.clone());
+        std::hint::black_box(big.jacobi_eigen());
+    });
+}

@@ -1,0 +1,71 @@
+//! Long-context scaling demo (the paper's Fig. 1 story): exact softmax
+//! attention is O(L^2 d) while PRF linear attention is O(L m d) — time
+//! both AOT attention probes as the sequence length grows.
+//!
+//! ```bash
+//! make artifacts     # emits artifacts/scaling/attn_*_L*.hlo.txt
+//! cargo run --release --example long_context
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use darkformer::rng::Pcg64;
+use darkformer::runtime::Runtime;
+use darkformer::ser::parse;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from("artifacts/scaling");
+    let meta = parse(&std::fs::read_to_string(dir.join("meta.json"))?)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let h = meta.field("n_heads").and_then(|v| v.as_usize()).context("meta")?;
+    let dh = meta.field("head_dim").and_then(|v| v.as_usize()).context("meta")?;
+    let m = meta.field("m_features").and_then(|v| v.as_usize()).context("meta")?;
+    let seq_lens: Vec<usize> = meta
+        .field("seq_lens")
+        .and_then(|v| v.as_arr())
+        .context("meta")?
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect();
+
+    let runtime = Runtime::cpu()?;
+    let mut rng = Pcg64::seed(1);
+    println!("attention probes: h={h} dh={dh} m={m}");
+    println!(
+        "{:>8} {:>14} {:>14} {:>10}",
+        "L", "exact (ms)", "PRF (ms)", "speedup"
+    );
+    for &l in &seq_lens {
+        let mut row = Vec::new();
+        for variant in ["exact", "performer"] {
+            let program = runtime
+                .load_program(&dir.join(format!("attn_{variant}_L{l}.hlo.txt")))?;
+            let n = h * l * dh;
+            let data: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let mk = || {
+                xla::Literal::vec1(&data)
+                    .reshape(&[1, h as i64, l as i64, dh as i64])
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))
+            };
+            let (q, k, v) = (mk()?, mk()?, mk()?);
+            let seed = xla::Literal::scalar(3u32);
+            program.run(&[&q, &k, &v, &seed].map(Clone::clone))?; // warmup
+            let reps = 5;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                program.run(&[&q, &k, &v, &seed].map(Clone::clone))?;
+            }
+            row.push(t0.elapsed().as_secs_f64() * 1e3 / reps as f64);
+        }
+        println!(
+            "{:>8} {:>14.3} {:>14.3} {:>9.2}x",
+            l,
+            row[0],
+            row[1],
+            row[0] / row[1]
+        );
+    }
+    println!("\nexact grows ~quadratically; PRF ~linearly (crossover where m < L)");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: train a tiny DARKFormer for a handful of steps.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-lower the JAX/Pallas programs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the whole public API surface in ~40 lines: prepare data
+//! (synthetic corpus + BPE), load the AOT artifacts via PJRT, run a short
+//! training loop, evaluate, checkpoint.
+
+use anyhow::Result;
+use darkformer::config::ExperimentConfig;
+use darkformer::coordinator::{Trainer, Workbench};
+
+fn main() -> Result<()> {
+    let cfg = ExperimentConfig {
+        model_config: "tiny".into(),
+        variant: "darkformer".into(),
+        steps: 20,
+        base_lr: 3e-3,
+        corpus_docs: 400,
+        out_dir: "runs/quickstart".into(),
+        eval_every: 10,
+        ..Default::default()
+    };
+
+    let wb = Workbench::prepare(
+        &cfg.artifacts_dir,
+        &cfg.model_config,
+        cfg.corpus_docs,
+        cfg.seed,
+        &cfg.out_dir.join("_cache"),
+    )?;
+    println!(
+        "corpus: {} tokens, vocab {} (BPE)",
+        wb.dataset.n_tokens(),
+        wb.bpe.vocab_size()
+    );
+
+    let trainer = Trainer::new(cfg, &wb)?;
+    println!("platform: {}", trainer.platform());
+    let report = trainer.run()?;
+    println!(
+        "\ndone: loss {:.4} -> (tail acc {:.4}), {:.1} ms/step",
+        report.final_loss, report.tail_acc, report.mean_step_ms
+    );
+    println!("checkpoint at {}", report.checkpoint_path.display());
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Theorem 3.2 demo, pure Rust: the optimal importance-sampling proposal
+//! strictly reduces PRF Monte-Carlo variance under anisotropic inputs,
+//! and matches the closed form `Sigma* = (I + 2L)(I - 2L)^{-1}`.
+//!
+//! ```bash
+//! cargo run --release --example variance_demo
+//! ```
+
+use anyhow::Result;
+use darkformer::linalg::Matrix;
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
+use darkformer::rfa::proposal::{anisotropy_index, optimal_eigenvalue};
+use darkformer::rfa::{optimal_proposal, variance, PrfEstimator};
+use darkformer::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let d = 8;
+    let m = 16;
+    let mut rng = Pcg64::seed(7);
+
+    println!("Theorem 3.2(1): Sigma* isotropic iff Lambda isotropic");
+    let iso_lambda = Matrix::identity(d).scale(0.2);
+    let sigma_iso = optimal_proposal(&iso_lambda).unwrap();
+    println!(
+        "  Lambda = 0.2 I  ->  Sigma* diag ~ {:.4} (closed form {:.4}), anisotropy {:.3}",
+        sigma_iso[(0, 0)],
+        optimal_eigenvalue(0.2),
+        anisotropy_index(&sigma_iso)
+    );
+
+    println!("\nTheorem 3.2(2): V(psi*) < V(p_I), growing with anisotropy");
+    println!(
+        "{:>6} {:>12} {:>14} {:>14} {:>9}",
+        "eps", "aniso(Σ*)", "V(p_I)", "V(ψ*)", "ratio"
+    );
+    for eps in [0.0, 0.3, 0.6, 0.9] {
+        let lambda = anisotropic_covariance(d, 0.2, eps, &mut rng);
+        let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+        let sigma_star = optimal_proposal(&lambda).unwrap();
+        let aniso = anisotropy_index(&sigma_star);
+        let psi = MultivariateGaussian::new(sigma_star).unwrap();
+
+        let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let opt = PrfEstimator::new(d, m, Sampling::Proposal(psi));
+        let v_iso = variance::expected_mc_variance(&iso, &dist, 60, 2000, &mut rng);
+        let v_opt = variance::expected_mc_variance(&opt, &dist, 60, 2000, &mut rng);
+        println!(
+            "{:>6.2} {:>12.3} {:>14.6e} {:>14.6e} {:>9.3}",
+            eps,
+            aniso,
+            v_iso,
+            v_opt,
+            v_iso / v_opt
+        );
+    }
+    println!("\n(ratio > 1 everywhere except eps = 0, where Sigma* ∝ I)");
+    Ok(())
+}

@@ -1,0 +1,224 @@
+"""AOT lowering: jax -> HLO *text* artifacts + JSON manifest (compile path).
+
+This is the only place Python touches the system; `make artifacts` runs it
+once and the Rust coordinator is self-contained afterwards.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per (config, variant) we emit:
+    init.hlo.txt            (seed u32)                       -> params
+    train_step.hlo.txt      (params, m, v, tokens, seed, lr, clip, step)
+                            -> (params, m, v, loss, acc, gnorm)
+    train_step_qkv.hlo.txt  same, gradient-masked to q/k/v + M (Fig. 4)
+    eval_step.hlo.txt       (params, tokens, seed)           -> (loss, acc)
+    manifest.json           canonical flat-parameter order + arg layout
+
+plus one meta.json per config. Parameters flatten in sorted-name order
+(dict flattening order in jax), which the manifest records explicitly so
+the Rust runtime never guesses.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, QKV_VARIANTS, VARIANTS, get_config
+from .model import param_spec
+from .train import make_eval_step, make_init, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract_params(cfg, variant):
+    spec = param_spec(cfg, variant)
+    return {
+        name: jax.ShapeDtypeStruct(shape, jnp.float32)
+        for name, shape in spec.items()
+    }
+
+
+def _scalar(dtype):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def lower_variant(cfg, variant, out_dir):
+    """Lower all step functions for one (config, variant) pair."""
+    os.makedirs(out_dir, exist_ok=True)
+    params = _abstract_params(cfg, variant)
+    tokens = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len + 1), jnp.int32)
+    seed = _scalar(jnp.uint32)
+    lr = _scalar(jnp.float32)
+    clip = _scalar(jnp.float32)
+    step = _scalar(jnp.int32)
+
+    def wrap_seed(fn):
+        # Lower with a raw uint32 seed; the PRNG key is built inside so the
+        # host only ever ships one scalar.
+        return fn
+
+    emitted = {}
+
+    init = make_init(cfg, variant)
+    lowered = jax.jit(
+        lambda s: init(jax.random.PRNGKey(s)), keep_unused=True
+    ).lower(seed)
+    emitted["init"] = to_hlo_text(lowered)
+
+    def _step(qkv_only):
+        inner = make_train_step(cfg, variant, qkv_only=qkv_only)
+
+        def step_fn(p, m, v, tok, s, lr_, clip_, st):
+            return inner(p, m, v, tok, jax.random.PRNGKey(s), lr_, clip_, st)
+
+        return step_fn
+
+    lowered = jax.jit(_step(False), keep_unused=True).lower(
+        params, params, params, tokens, seed, lr, clip, step
+    )
+    emitted["train_step"] = to_hlo_text(lowered)
+
+    if variant in QKV_VARIANTS:
+        lowered = jax.jit(_step(True), keep_unused=True).lower(
+            params, params, params, tokens, seed, lr, clip, step
+        )
+        emitted["train_step_qkv"] = to_hlo_text(lowered)
+
+    ev = make_eval_step(cfg, variant)
+    lowered = jax.jit(
+        lambda p, tok, s: ev(p, tok, jax.random.PRNGKey(s)),
+        keep_unused=True,
+    ).lower(params, tokens, seed)
+    emitted["eval_step"] = to_hlo_text(lowered)
+
+    for name, text in emitted.items():
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+
+    spec = param_spec(cfg, variant)
+    manifest = {
+        "variant": variant,
+        "config": cfg.name,
+        "params": [
+            {"name": n, "shape": list(spec[n]), "dtype": "f32"}
+            for n in sorted(spec)
+        ],
+        "programs": sorted(emitted),
+        "train_step": {
+            "inputs": "params, opt_m, opt_v (each in manifest param order), "
+                      "tokens i32[batch, seq_len+1], seed u32, lr f32, "
+                      "clip f32 (<=0 disables), step i32",
+            "outputs": "params, opt_m, opt_v (same order), loss f32, "
+                       "acc f32, grad_norm f32",
+        },
+        "eval_step": {
+            "inputs": "params, tokens, seed",
+            "outputs": "loss f32, acc f32",
+        },
+        "init": {"inputs": "seed u32", "outputs": "params"},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return emitted
+
+
+def emit_config(cfg, variants, root):
+    cfg_dir = os.path.join(root, cfg.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    with open(os.path.join(cfg_dir, "meta.json"), "w") as f:
+        json.dump({**cfg.as_dict(), "variants": list(variants)}, f, indent=1)
+    for variant in variants:
+        out_dir = os.path.join(cfg_dir, variant)
+        emitted = lower_variant(cfg, variant, out_dir)
+        sizes = {k: len(v) for k, v in emitted.items()}
+        print(f"[aot] {cfg.name}/{variant}: {sizes}")
+
+
+def emit_scaling_probes(root, seq_lens, n_heads=4, head_dim=32, m_features=32):
+    """Fig. 1 probes: attention-only programs at several sequence lengths.
+
+    Each probe takes (q, k, v) of shape (1, h, L, dh) plus a seed and
+    returns the attention output, for both the exact O(L^2 d) softmax path
+    and the O(L m d) PRF linear path. The Rust fig1 harness times these to
+    regenerate the paper's complexity figure.
+    """
+    from .kernels import prf
+    from .kernels import ref as kref
+    from .kernels.linear_attention import causal_linear_attention
+
+    out_dir = os.path.join(root, "scaling")
+    os.makedirs(out_dir, exist_ok=True)
+
+    def exact_fn(q, k, v, seed):
+        del seed
+        return (kref.causal_softmax_attention_ref(q, k, v),)
+
+    def performer_fn(q, k, v, seed):
+        key = jax.random.PRNGKey(seed)
+        w = jax.random.normal(key, (n_heads, m_features, head_dim), jnp.float32)
+        phi_q = prf.prf_features(q, w[None], is_query=True)
+        phi_k = prf.prf_features(k, w[None], is_query=False)
+        # The O(L m d) chunked path — NOT the O(L^2) oracle — so the probe
+        # actually measures the complexity the paper's Fig. 1 plots.
+        return (causal_linear_attention(phi_q, phi_k, v, 64),)
+
+    emitted = {}
+    for L in seq_lens:
+        qkv = jax.ShapeDtypeStruct((1, n_heads, L, head_dim), jnp.float32)
+        seed = _scalar(jnp.uint32)
+        for name, fn in [("exact", exact_fn), ("performer", performer_fn)]:
+            lowered = jax.jit(fn, keep_unused=True).lower(qkv, qkv, qkv, seed)
+            text = to_hlo_text(lowered)
+            fname = f"attn_{name}_L{L}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            emitted[fname] = len(text)
+    meta = {
+        "seq_lens": list(seq_lens),
+        "n_heads": n_heads,
+        "head_dim": head_dim,
+        "m_features": m_features,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] scaling probes: {emitted}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root")
+    ap.add_argument(
+        "--configs", nargs="*", default=["tiny", "small"],
+        choices=sorted(CONFIGS),
+    )
+    ap.add_argument("--variants", nargs="*", default=list(VARIANTS))
+    ap.add_argument(
+        "--scaling-seq-lens", nargs="*", type=int,
+        default=[64, 128, 256, 512, 1024],
+        help="Fig. 1 probe sequence lengths (empty disables)",
+    )
+    args = ap.parse_args()
+    for name in args.configs:
+        emit_config(get_config(name), args.variants, args.out)
+    if args.scaling_seq_lens:
+        emit_scaling_probes(args.out, args.scaling_seq_lens)
+    # Stamp file lets `make artifacts` skip cleanly when inputs unchanged.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

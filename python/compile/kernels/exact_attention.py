@@ -1,0 +1,105 @@
+"""Tiled causal softmax attention (exact baseline) as a Pallas kernel.
+
+Flash-attention-style streaming softmax: one program per (batch * head)
+slice, an outer loop over query chunks and an inner loop over the key
+chunks visible to that query chunk, carrying the running row-max,
+denominator and output accumulator. Memory per program is O(C^2 + C d)
+instead of O(L^2) — the standard IO-aware schedule of Dao et al.,
+re-expressed as a Pallas grid + fori_loop for TPU (DESIGN.md section 6).
+
+Forward = Pallas, backward = autodiff of the jnp oracle (ref.py) via
+``jax.custom_vjp``, same contract as linear_attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_CHUNK = 32
+NEG_INF = -1e30
+
+
+def _causal_softmax_kernel(q_ref, k_ref, v_ref, out_ref, *, chunk):
+    q = q_ref[0]  # (L, d)
+    k = k_ref[0]
+    v = v_ref[0]
+    L, d = q.shape
+    n_chunks = L // chunk
+
+    # Strictly-lower+diag mask for the diagonal (i == j) block.
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    diag_mask = row >= col
+
+    def outer(i, _):
+        qi = jax.lax.dynamic_slice(q, (i * chunk, 0), (chunk, d))
+
+        def inner(j, carry):
+            m_run, den, acc = carry
+            kj = jax.lax.dynamic_slice(k, (j * chunk, 0), (chunk, d))
+            vj = jax.lax.dynamic_slice(v, (j * chunk, 0), (chunk, d))
+            s = qi @ kj.T  # (C, C)
+            s = jnp.where((j == i) & ~diag_mask, NEG_INF, s)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            scale = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[:, None])
+            den = den * scale + jnp.sum(p, axis=-1)
+            acc = acc * scale[:, None] + p @ vj
+            return (m_new, den, acc)
+
+        m0 = jnp.full((chunk,), NEG_INF, dtype=q.dtype)
+        den0 = jnp.zeros((chunk,), dtype=q.dtype)
+        acc0 = jnp.zeros((chunk, d), dtype=q.dtype)
+        m_run, den, acc = jax.lax.fori_loop(0, i + 1, inner, (m0, den0, acc0))
+        out_ref[0, pl.ds(i * chunk, chunk), :] = acc / den[:, None]
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, outer, 0)
+
+
+def _pallas_forward(q, k, v, chunk):
+    batch_shape = q.shape[:-2]
+    L, d = q.shape[-2:]
+    bh = 1
+    for s in batch_shape:
+        bh *= s
+    if L % chunk != 0:
+        raise ValueError(f"sequence length {L} not divisible by chunk {chunk}")
+
+    kernel = functools.partial(_causal_softmax_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, L, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, L, d), v.dtype),
+        interpret=True,
+    )(q.reshape(bh, L, d), k.reshape(bh, L, d), v.reshape(bh, L, d))
+    return out.reshape(*batch_shape, L, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def causal_softmax_attention(q, k, v, chunk=DEFAULT_CHUNK):
+    """Exact causal attention: Pallas tiled forward, oracle backward."""
+    return _pallas_forward(q, k, v, chunk)
+
+
+def _fwd(q, k, v, chunk):
+    return _pallas_forward(q, k, v, chunk), (q, k, v)
+
+
+def _bwd(chunk, residuals, g):
+    q, k, v = residuals
+    _, vjp = jax.vjp(ref.causal_softmax_attention_ref, q, k, v)
+    return vjp(g)
+
+
+causal_softmax_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,130 @@
+"""Chunked causal linear attention — the paper's compute hot-spot as a
+Pallas kernel.
+
+The random-feature attention path (Performer / DARKFormer) computes
+
+    out_i = sum_{j<=i} (phi_q_i . phi_k_j) v_j / sum_{j<=i} phi_q_i . phi_k_j
+
+in O(L m d) by carrying the running moment matrix ``S = sum phi_k v^T``
+(m x d) and normalizer ``z = sum phi_k`` (m) across sequence chunks:
+each chunk combines an intra-chunk masked quadratic term (C x C — small)
+with an inter-chunk linear term against (S, z).
+
+Hardware adaptation (see DESIGN.md section 6): the CUDA formulation of this
+schedule assigns one threadblock per query block with the running state in
+shared memory. On TPU the natural mapping is a Pallas grid over (batch x
+head) programs with the chunk loop inside the kernel and (S, z) living in
+VMEM registers/scratch; the three inner products per chunk —
+phi_q_c @ phi_k_c^T (C x m)(m x C), A @ v_c (C x C)(C x d) and
+phi_k_c^T @ v_c (m x C)(C x d) — are all MXU-shaped matmuls.
+
+The kernel is lowered with ``interpret=True`` (the CPU PJRT client cannot
+execute Mosaic custom-calls); correctness is pinned to the pure-jnp oracle
+in ref.py, which also provides the backward rule via ``jax.custom_vjp``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_CHUNK = 32
+
+
+def _causal_linear_attention_kernel(phi_q_ref, phi_k_ref, v_ref, out_ref, *, chunk):
+    """Pallas kernel body: one program per (batch * head) slice.
+
+    Refs are (1, L, m/d) blocks; the leading 1 is the grid-mapped axis.
+    """
+    phi_q = phi_q_ref[0]  # (L, m)
+    phi_k = phi_k_ref[0]  # (L, m)
+    v = v_ref[0]  # (L, d)
+    L, m = phi_q.shape
+    d = v.shape[-1]
+    n_chunks = L // chunk
+
+    # Lower-triangular mask for the intra-chunk quadratic term.
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=phi_q.dtype))
+
+    def body(c, carry):
+        s, z = carry  # s: (m, d) running sum phi_k v^T ; z: (m,) running sum phi_k
+        start = c * chunk
+        pq = jax.lax.dynamic_slice(phi_q, (start, 0), (chunk, m))
+        pk = jax.lax.dynamic_slice(phi_k, (start, 0), (chunk, m))
+        vc = jax.lax.dynamic_slice(v, (start, 0), (chunk, d))
+
+        # Intra-chunk: masked (C x C) kernel block.
+        a = (pq @ pk.T) * tri
+        num = a @ vc + pq @ s
+        den = jnp.sum(a, axis=-1) + pq @ z
+        out_c = num / (den + ref.EPS)[:, None]
+
+        out_ref[0, pl.ds(start, chunk), :] = out_c
+
+        # Inter-chunk state update (the TPU analogue of the CUDA
+        # shared-memory accumulator).
+        s = s + pk.T @ vc
+        z = z + jnp.sum(pk, axis=0)
+        return (s, z)
+
+    s0 = jnp.zeros((m, d), dtype=phi_q.dtype)
+    z0 = jnp.zeros((m,), dtype=phi_q.dtype)
+    jax.lax.fori_loop(0, n_chunks, body, (s0, z0))
+
+
+def _pallas_forward(phi_q, phi_k, v, chunk):
+    """Run the chunked kernel over (..., L, m/d) inputs."""
+    batch_shape = phi_q.shape[:-2]
+    L, m = phi_q.shape[-2:]
+    d = v.shape[-1]
+    bh = 1
+    for s in batch_shape:
+        bh *= s
+    pq = phi_q.reshape(bh, L, m)
+    pk = phi_k.reshape(bh, L, m)
+    vv = v.reshape(bh, L, d)
+
+    if L % chunk != 0:
+        raise ValueError(f"sequence length {L} not divisible by chunk {chunk}")
+
+    kernel = functools.partial(_causal_linear_attention_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, L, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, L, d), v.dtype),
+        interpret=True,
+    )(pq, pk, vv)
+    return out.reshape(*batch_shape, L, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def causal_linear_attention(phi_q, phi_k, v, chunk=DEFAULT_CHUNK):
+    """Causal linear attention with a Pallas forward and oracle backward.
+
+    Numerically identical (to float tolerance) to
+    ``ref.causal_linear_attention_ref``; the backward pass differentiates
+    the oracle, so gradients are consistent with the forward values.
+    """
+    return _pallas_forward(phi_q, phi_k, v, chunk)
+
+
+def _fwd(phi_q, phi_k, v, chunk):
+    return _pallas_forward(phi_q, phi_k, v, chunk), (phi_q, phi_k, v)
+
+
+def _bwd(chunk, residuals, g):
+    phi_q, phi_k, v = residuals
+    _, vjp = jax.vjp(ref.causal_linear_attention_ref, phi_q, phi_k, v)
+    return vjp(g)
+
+
+causal_linear_attention.defvjp(_fwd, _bwd)

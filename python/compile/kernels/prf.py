@@ -1,0 +1,81 @@
+"""Positive-random-feature maps: isotropic (Performer), data-aware
+(DARKFormer) and learned (LFK).
+
+The central implementation identity (paper App. B, derivation of Eq. 3):
+with Sigma = M^T M and omega~ = M^T w, w ~ N(0, I_r),
+
+    phi_Sigma(x, omega~) = exp(omega~^T x - 1/2 x^T Sigma x)
+                         = exp(w^T (M x) - 1/2 ||M x||^2)
+                         = phi_plus(M x, w)
+
+so DARKFormer's data-aware PRF is exactly the isotropic PRF applied to the
+re-embedded inputs M q, M k — differentiable through M. This module
+implements the stabilized phi_plus and the re-embedding; the model picks
+M trainable (darkformer), M = I frozen (performer), or replaces w with a
+trainable omega (lfk).
+
+Stabilization: queries subtract a per-token max over the feature axis —
+a per-row multiplicative constant that depends only on that query, so it
+is *causal* and cancels exactly in the attention normalizer. Keys must
+NOT subtract a data-dependent max: a max over positions would leak future
+keys into past outputs (breaking causality) and a per-key max would bias
+the kernel. Instead key logits get a fixed overflow clamp that is inert
+in normal operation (logit = omega.x - |x|^2/2 <= |omega|^2/2, small for
+RMSNorm-scale inputs) and merely guards exp() in pathological regimes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+#: Key-logit overflow guard: exp(KEY_LOGIT_CAP) and its squares must stay
+#: comfortably inside f32 range. exp(30) ~ 1e13.
+KEY_LOGIT_CAP = 30.0
+
+
+def prf_features(x, omega, is_query):
+    """Stabilized positive random features, m^{-1/2} exp(omega x - |x|^2/2 - c).
+
+    Args:
+        x: (..., L, d) inputs with attention scaling absorbed.
+        omega: (..., m, d) projection vectors (broadcast against x's batch
+            dims; typically (h, m, d) against (b, h, L, d)).
+        is_query: queries subtract a per-token max (causal, cancels in the
+            normalizer); keys are clamped at ``KEY_LOGIT_CAP`` only.
+
+    Returns:
+        (..., L, m) strictly positive features.
+    """
+    m = omega.shape[-2]
+    proj = jnp.einsum("...ld,...md->...lm", x, omega)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    logits = proj - sq
+    if is_query:
+        stab = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        logits = logits - stab
+    else:
+        logits = jnp.minimum(logits, KEY_LOGIT_CAP)
+    return jnp.exp(logits) / jnp.sqrt(m)
+
+
+def reembed(x, m_proj):
+    """Apply the learned re-embedding x -> M x per head.
+
+    Args:
+        x: (b, h, L, d) queries or keys.
+        m_proj: (h, r, d) per-head re-embedding matrices.
+
+    Returns:
+        (b, h, L, r) re-embedded inputs.
+    """
+    return jnp.einsum("bhld,hrd->bhlr", x, m_proj)
+
+
+def draw_noise(key, n_layers, n_heads, m, r, dtype=jnp.float32):
+    """Standard Gaussian projection noise w ~ N(0, I_r), fresh per step.
+
+    Shape (n_layers, n_heads, m, r): independent projections per layer and
+    head. The host (Rust coordinator) supplies only the PRNG key; the draw
+    itself lowers into the train-step HLO so resampling costs no extra
+    host round-trip.
+    """
+    return jax.random.normal(key, (n_layers, n_heads, m, r), dtype=dtype)

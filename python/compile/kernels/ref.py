@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness signal: each Pallas kernel in this package is
+tested (pytest + hypothesis) against the oracle here with
+``assert_allclose``. They are also the backward rule: the Pallas forward
+kernels install a ``jax.custom_vjp`` whose backward pass differentiates
+these references (see linear_attention.py / exact_attention.py), so a
+train step that runs the Pallas forward produces gradients consistent
+with the oracle.
+
+All oracles materialize the full L x L interaction matrix — O(L^2) time
+and memory — which is exactly the cost the paper's random-feature path
+avoids.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def prf_features_ref(x, omega, stabilizer=None):
+    """Positive random features phi+ of Choromanski et al. (Eq. 1).
+
+    phi(x)_j = m^{-1/2} * exp(omega_j^T x - ||x||^2 / 2 - stabilizer)
+
+    Args:
+        x: (..., L, d) inputs (queries or keys, scaling already absorbed).
+        omega: (m, d) projection vectors.
+        stabilizer: optional broadcastable log-space shift. The attention
+            normalization cancels any per-query constant; per-key constants
+            must be shared across keys (a global max) to stay exact.
+
+    Returns:
+        (..., L, m) non-negative features.
+    """
+    m = omega.shape[0]
+    proj = jnp.einsum("...ld,md->...lm", x, omega)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    logits = proj - sq
+    if stabilizer is not None:
+        logits = logits - stabilizer
+    return jnp.exp(logits) / jnp.sqrt(m)
+
+
+def softmax_kernel_ref(q, k):
+    """Exact (unnormalized) softmax kernel exp(q_i . k_j), (..., L, L)."""
+    return jnp.exp(jnp.einsum("...id,...jd->...ij", q, k))
+
+
+def causal_linear_attention_ref(phi_q, phi_k, v):
+    """Naive causal linear attention via the explicit L x L kernel matrix.
+
+    out_i = sum_{j<=i} (phi_q_i . phi_k_j) v_j / (sum_{j<=i} phi_q_i . phi_k_j)
+
+    Args:
+        phi_q, phi_k: (..., L, m) feature maps.
+        v: (..., L, d) values.
+
+    Returns:
+        (..., L, d) attention output.
+    """
+    L = phi_q.shape[-2]
+    a = jnp.einsum("...im,...jm->...ij", phi_q, phi_k)
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    a = jnp.where(mask, a, 0.0)
+    num = jnp.einsum("...ij,...jd->...id", a, v)
+    den = jnp.sum(a, axis=-1, keepdims=True)
+    return num / (den + EPS)
+
+
+def causal_softmax_attention_ref(q, k, v):
+    """Exact causal softmax attention (scaling absorbed into q)."""
+    L = q.shape[-2]
+    scores = jnp.einsum("...id,...jd->...ij", q, k)
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("...ij,...jd->...id", w, v)

@@ -1,0 +1,228 @@
+"""Gemma-style decoder-only transformer with pluggable attention (L2).
+
+Structure mirrors the paper's Gemma testbed: RMSNorm pre-norms, rotary
+position embeddings, multi-head attention, GeGLU MLP, tied input/output
+embeddings. The attention mechanism is selected per DESIGN.md:
+
+    exact       causal softmax (Pallas tiled kernel)
+    performer   isotropic PRF linear attention  (Choromanski et al. 2021)
+    darkformer  data-aware PRF linear attention on re-embedded M q, M k
+                with trainable per-head M  (this paper)
+    lfk         learned feature kernel: trainable projections omega
+    random      rank-free random attention weights (paper baseline)
+    constant    uniform causal attention (paper baseline)
+
+Parameters live in a *flat* ``dict[str, Array]``; sorted key order is the
+canonical flattening used by the AOT manifest and the Rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, VARIANTS
+from .kernels import prf
+from .kernels import ref as kref
+from .kernels.exact_attention import causal_softmax_attention
+from .kernels.linear_attention import causal_linear_attention
+
+RMS_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig, variant: str):
+    """Flat name -> shape spec for a variant. Sorted names define the
+    canonical argument order everywhere (manifest, checkpoints, runtime)."""
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    d, h, dh, ff, r, m = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.d_ff,
+        cfg.r_proj,
+        cfg.m_features,
+    )
+    spec = {"emb": (cfg.vocab_size, d), "final_norm": (d,)}
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        spec[p + "ln1"] = (d,)
+        spec[p + "ln2"] = (d,)
+        spec[p + "attn.wq"] = (d, h * dh)
+        spec[p + "attn.wk"] = (d, h * dh)
+        spec[p + "attn.wv"] = (d, h * dh)
+        spec[p + "attn.wo"] = (h * dh, d)
+        if variant == "darkformer":
+            spec[p + "attn.m_proj"] = (h, r, dh)
+        if variant == "lfk":
+            spec[p + "attn.omega"] = (h, m, dh)
+        spec[p + "mlp.wg"] = (d, ff)
+        spec[p + "mlp.wu"] = (d, ff)
+        spec[p + "mlp.wd"] = (ff, d)
+    return spec
+
+
+def init_params(key, cfg: ModelConfig, variant: str):
+    """Initialize the flat parameter dict.
+
+    Linear weights are LeCun-normal; norms start at 1; DARKFormer's M
+    starts at (truncated) identity so it is exactly a Performer at step 0
+    and *learns* to depart toward the whitening geometry; LFK's omega
+    starts as a fixed Gaussian draw (a frozen-at-init Performer).
+    """
+    spec = param_spec(cfg, variant)
+    params = {}
+    names = sorted(spec)
+    keys = jax.random.split(key, len(names))
+    for name, k in zip(names, keys):
+        shape = spec[name]
+        if name.endswith(("ln1", "ln2")) or name == "final_norm":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("m_proj"):
+            eye = jnp.eye(cfg.head_dim, dtype=jnp.float32)[: cfg.r_proj]
+            params[name] = jnp.broadcast_to(eye, shape).copy()
+        elif name.endswith("omega"):
+            params[name] = jax.random.normal(k, shape, jnp.float32)
+        elif name == "emb":
+            params[name] = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+                float(cfg.d_model)
+            )
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            params[name] = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+                float(fan_in)
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gain):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + RMS_EPS) * gain
+
+
+def rope(x, base):
+    """Rotary position embedding over the last axis of (b, h, L, dh)."""
+    L, dh = x.shape[-2], x.shape[-1]
+    half = dh // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = jnp.arange(L, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x, h, dh):
+    b, L, _ = x.shape
+    return x.reshape(b, L, h, dh).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, L, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, L, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention variants
+# ---------------------------------------------------------------------------
+
+
+def _linear_attention(phi_q, phi_k, v, cfg: ModelConfig):
+    if cfg.use_pallas:
+        chunk = min(32, cfg.seq_len)
+        return causal_linear_attention(phi_q, phi_k, v, chunk)
+    return kref.causal_linear_attention_ref(phi_q, phi_k, v)
+
+
+def attention(q, k, v, *, variant, cfg: ModelConfig, params, prefix, key):
+    """Dispatch one layer's attention. q, k, v: (b, h, L, dh)."""
+    scale = cfg.head_dim ** -0.25  # split the 1/sqrt(dh) between q and k
+    qs, ks = q * scale, k * scale
+
+    if variant == "exact":
+        if cfg.use_pallas:
+            chunk = min(32, cfg.seq_len)
+            return causal_softmax_attention(qs, ks, v, chunk)
+        return kref.causal_softmax_attention_ref(qs, ks, v)
+
+    if variant in ("performer", "darkformer"):
+        # Fresh isotropic base noise every step; DARKFormer re-embeds the
+        # inputs through its learned M, realizing omega~ ~ N(0, M^T M)
+        # (paper Eq. 3 via the identity phi_Sigma(x) = phi+(Mx)).
+        w = jax.random.normal(
+            key, (cfg.n_heads, cfg.m_features, cfg.r_proj), jnp.float32
+        )
+        if variant == "darkformer":
+            m_proj = params[prefix + "attn.m_proj"]  # (h, r, dh)
+            qs = prf.reembed(qs, m_proj)
+            ks = prf.reembed(ks, m_proj)
+        phi_q = prf.prf_features(qs, w[None], is_query=True)
+        phi_k = prf.prf_features(ks, w[None], is_query=False)
+        return _linear_attention(phi_q, phi_k, v, cfg)
+
+    if variant == "lfk":
+        omega = params[prefix + "attn.omega"]  # (h, m, dh) trainable
+        phi_q = prf.prf_features(qs, omega[None], is_query=True)
+        phi_k = prf.prf_features(ks, omega[None], is_query=False)
+        return _linear_attention(phi_q, phi_k, v, cfg)
+
+    if variant == "random":
+        b, h, L, _ = q.shape
+        scores = jax.random.normal(key, (h, L, L), jnp.float32)
+        mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+        wgt = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("hij,bhjd->bhid", wgt, v)
+
+    if variant == "constant":
+        L = v.shape[-2]
+        csum = jnp.cumsum(v, axis=-2)
+        counts = jnp.arange(1, L + 1, dtype=v.dtype)[:, None]
+        return csum / counts
+
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, key, *, cfg: ModelConfig, variant: str):
+    """Next-token logits.
+
+    Args:
+        params: flat dict (see param_spec).
+        tokens: (b, T) int32 input token ids.
+        key: PRNG key driving PRF resampling / random baseline.
+
+    Returns:
+        (b, T, vocab) float32 logits.
+    """
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["emb"][tokens] * jnp.sqrt(float(cfg.d_model))
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        lkey = jax.random.fold_in(key, i)
+        y = rms_norm(x, params[p + "ln1"])
+        q = _split_heads(y @ params[p + "attn.wq"], h, dh)
+        k = _split_heads(y @ params[p + "attn.wk"], h, dh)
+        v = _split_heads(y @ params[p + "attn.wv"], h, dh)
+        q = rope(q, cfg.rope_base)
+        k = rope(k, cfg.rope_base)
+        o = attention(
+            q, k, v, variant=variant, cfg=cfg, params=params, prefix=p, key=lkey
+        )
+        x = x + _merge_heads(o) @ params[p + "attn.wo"]
+        y = rms_norm(x, params[p + "ln2"])
+        g = jax.nn.gelu(y @ params[p + "mlp.wg"])
+        x = x + (g * (y @ params[p + "mlp.wu"])) @ params[p + "mlp.wd"]
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["emb"].T

@@ -1,0 +1,118 @@
+"""Training/eval steps lowered to HLO: loss, AdamW, gradient masking.
+
+No optax in this image — AdamW is implemented directly (decoupled weight
+decay, bias correction, optional global-norm clipping). Learning rate and
+clip threshold are *runtime scalars*, so a single lowered artifact serves
+every point of the Fig. 5 learning-rate sweep and every LR schedule the
+Rust coordinator implements.
+
+Argument order contract with the Rust runtime (see aot.py manifest):
+flat params / opt_m / opt_v in sorted-name order, then tokens, key, lr,
+clip, step. Dict flattening in jax is sorted-key, matching the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import forward
+
+CLIP_EPS = 1e-8
+
+
+def loss_and_accuracy(params, tokens, key, *, cfg: ModelConfig, variant: str):
+    """Next-token cross-entropy (nats/token) and argmax accuracy.
+
+    tokens: (b, seq_len + 1) int32; inputs are tokens[:, :-1], targets
+    tokens[:, 1:].
+    """
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inputs, key, cfg=cfg, variant=variant)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - tgt_logit)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+    return loss, acc
+
+
+def qkv_mask(params, variant: str):
+    """Fig. 4 trainability mask: 1.0 for q/k/v projections and (DARKFormer)
+    the PRF covariance parameter M; 0.0 for everything else."""
+    trainable_suffixes = ("attn.wq", "attn.wk", "attn.wv", "attn.m_proj")
+    return {
+        name: jnp.float32(1.0 if name.endswith(trainable_suffixes) else 0.0)
+        for name in params
+    }
+
+
+def adamw_update(params, grads, opt_m, opt_v, *, lr, clip, step, mask, cfg):
+    """One AdamW step. ``mask`` gates both the gradient and weight decay,
+    so frozen parameters are bit-identical across steps."""
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in grads.values()) + CLIP_EPS
+    )
+    # clip <= 0 disables clipping (Fig. 5 stability runs want raw updates).
+    factor = jnp.where(clip > 0.0, jnp.minimum(1.0, clip / gnorm), 1.0)
+
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.adam_b1 ** t
+    bc2 = 1.0 - cfg.adam_b2 ** t
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name] * factor * mask[name]
+        m = cfg.adam_b1 * opt_m[name] + (1.0 - cfg.adam_b1) * g
+        v = cfg.adam_b2 * opt_v[name] + (1.0 - cfg.adam_b2) * (g * g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.adam_eps)
+        decay = cfg.weight_decay * params[name] * mask[name]
+        new_p[name] = params[name] - lr * (update + decay)
+        new_m[name] = m
+        new_v[name] = v
+    return new_p, new_m, new_v, gnorm
+
+
+def make_train_step(cfg: ModelConfig, variant: str, qkv_only: bool = False):
+    """Build the jittable train step for AOT lowering.
+
+    Signature: (params, opt_m, opt_v, tokens, key, lr, clip, step)
+             -> (params, opt_m, opt_v, loss, acc, gnorm)
+    """
+
+    def train_step(params, opt_m, opt_v, tokens, key, lr, clip, step):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: loss_and_accuracy(
+                p, tokens, key, cfg=cfg, variant=variant
+            ),
+            has_aux=True,
+        )(params)
+        mask = (
+            qkv_mask(params, variant)
+            if qkv_only
+            else {n: jnp.float32(1.0) for n in params}
+        )
+        params, opt_m, opt_v, gnorm = adamw_update(
+            params, grads, opt_m, opt_v,
+            lr=lr, clip=clip, step=step, mask=mask, cfg=cfg,
+        )
+        return params, opt_m, opt_v, loss, acc, gnorm
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, variant: str):
+    """(params, tokens, key) -> (loss, acc)."""
+
+    def eval_step(params, tokens, key):
+        return loss_and_accuracy(params, tokens, key, cfg=cfg, variant=variant)
+
+    return eval_step
+
+
+def make_init(cfg: ModelConfig, variant: str):
+    """(key,) -> params (flat dict, sorted-name order when flattened)."""
+    from .model import init_params
+
+    def init(key):
+        return init_params(key, cfg, variant)
+
+    return init

@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; fixed-seed numpy draws give the values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.exact_attention import causal_softmax_attention
+from compile.kernels.linear_attention import causal_linear_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=0.5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), jnp.float32)
+
+
+# ---------------------------------------------------------------------
+# Chunked causal linear attention
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    lc=st.sampled_from([(32, 32), (64, 32), (64, 16), (128, 32)]),
+    m=st.sampled_from([8, 16, 33]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_attention_matches_ref(b, h, lc, m, d, seed):
+    L, chunk = lc
+    phi_q = jnp.abs(rand((b, h, L, m), seed)) + 1e-3
+    phi_k = jnp.abs(rand((b, h, L, m), seed + 1)) + 1e-3
+    v = rand((b, h, L, d), seed + 2)
+    out = causal_linear_attention(phi_q, phi_k, v, chunk)
+    expected = ref.causal_linear_attention_ref(phi_q, phi_k, v)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-5)
+
+
+def test_linear_attention_rejects_bad_chunk():
+    x = jnp.ones((1, 1, 30, 4))
+    with pytest.raises(ValueError, match="not divisible"):
+        causal_linear_attention(x, x, jnp.ones((1, 1, 30, 4)), 16)
+
+
+def test_linear_attention_first_token_is_v0():
+    # Causality base case: output at position 0 equals v_0 exactly
+    # (single key in the prefix, normalization cancels).
+    phi_q = jnp.abs(rand((1, 1, 32, 8), 3)) + 1e-3
+    phi_k = jnp.abs(rand((1, 1, 32, 8), 4)) + 1e-3
+    v = rand((1, 1, 32, 4), 5)
+    out = causal_linear_attention(phi_q, phi_k, v, 16)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=2e-4, atol=1e-5)
+
+
+def test_linear_attention_is_causal():
+    # Perturbing a future key/value must not change earlier outputs.
+    phi_q = jnp.abs(rand((1, 1, 64, 8), 7)) + 1e-3
+    phi_k = jnp.abs(rand((1, 1, 64, 8), 8)) + 1e-3
+    v = rand((1, 1, 64, 4), 9)
+    base = causal_linear_attention(phi_q, phi_k, v, 16)
+    v2 = v.at[0, 0, 40].set(100.0)
+    pk2 = phi_k.at[0, 0, 40].set(5.0)
+    out2 = causal_linear_attention(phi_q, pk2, v2, 16)
+    np.testing.assert_allclose(base[0, 0, :40], out2[0, 0, :40], rtol=1e-5)
+    assert not np.allclose(base[0, 0, 40:], out2[0, 0, 40:])
+
+
+def test_linear_attention_gradients_match_ref():
+    phi_q = jnp.abs(rand((1, 2, 32, 8), 11)) + 1e-3
+    phi_k = jnp.abs(rand((1, 2, 32, 8), 12)) + 1e-3
+    v = rand((1, 2, 32, 8), 13)
+
+    def loss_pallas(pq, pk, vv):
+        return jnp.sum(causal_linear_attention(pq, pk, vv, 16) ** 2)
+
+    def loss_ref(pq, pk, vv):
+        return jnp.sum(ref.causal_linear_attention_ref(pq, pk, vv) ** 2)
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(phi_q, phi_k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(phi_q, phi_k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# Tiled causal softmax attention
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 4),
+    lc=st.sampled_from([(32, 32), (64, 32), (64, 16), (128, 32)]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_exact_attention_matches_ref(b, h, lc, d, seed):
+    L, chunk = lc
+    q = rand((b, h, L, d), seed)
+    k = rand((b, h, L, d), seed + 1)
+    v = rand((b, h, L, d), seed + 2)
+    out = causal_softmax_attention(q, k, v, chunk)
+    expected = ref.causal_softmax_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-5)
+
+
+def test_exact_attention_handles_large_scores():
+    # Streaming-softmax stability: logits ~ +-40 must not overflow.
+    q = rand((1, 1, 64, 16), 21, scale=5.0)
+    k = rand((1, 1, 64, 16), 22, scale=5.0)
+    v = rand((1, 1, 64, 16), 23)
+    out = causal_softmax_attention(q, k, v, 16)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    expected = ref.causal_softmax_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expected, rtol=1e-3, atol=1e-4)
+
+
+def test_exact_attention_is_causal():
+    q = rand((1, 1, 64, 8), 31)
+    k = rand((1, 1, 64, 8), 32)
+    v = rand((1, 1, 64, 8), 33)
+    base = causal_softmax_attention(q, k, v, 16)
+    v2 = v.at[0, 0, 50].set(9.0)
+    out2 = causal_softmax_attention(q, k, v2, 16)
+    np.testing.assert_allclose(base[0, 0, :50], out2[0, 0, :50], rtol=1e-5)
+
+
+def test_exact_attention_gradients_match_ref():
+    q = rand((1, 1, 32, 8), 41)
+    k = rand((1, 1, 32, 8), 42)
+    v = rand((1, 1, 32, 8), 43)
+
+    def loss_pallas(a, b, c):
+        return jnp.sum(causal_softmax_attention(a, b, c, 16) ** 3)
+
+    def loss_ref(a, b, c):
+        return jnp.sum(ref.causal_softmax_attention_ref(a, b, c) ** 3)
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-5)
+
+
+def test_uniform_values_passthrough():
+    # With all values equal, attention output equals that value everywhere
+    # regardless of the weights — sanity for both kernels.
+    q = rand((1, 1, 32, 8), 51)
+    k = rand((1, 1, 32, 8), 52)
+    v = jnp.ones((1, 1, 32, 8), jnp.float32) * 2.5
+    out = causal_softmax_attention(q, k, v, 16)
+    np.testing.assert_allclose(out, 2.5, rtol=1e-5)
+    phi = jnp.abs(q) + 1e-3
+    out2 = causal_linear_attention(phi, phi, v, 16)
+    np.testing.assert_allclose(out2, 2.5, rtol=1e-4)

@@ -1,0 +1,117 @@
+"""L2 model tests: shapes, causality, variant behaviour, init geometry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import TINY, VARIANTS, get_config
+from compile.model import forward, init_params, param_spec
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+KEY = jax.random.PRNGKey(0)
+
+
+def tokens(b, t, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, CFG.vocab_size)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_forward_shapes(variant):
+    params = init_params(KEY, CFG, variant)
+    tok = tokens(2, CFG.seq_len)
+    logits = forward(params, tok, KEY, cfg=CFG, variant=variant)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_causality(variant):
+    """Changing a future token must not change earlier logits."""
+    params = init_params(KEY, CFG, variant)
+    tok = tokens(1, CFG.seq_len, seed=3)
+    cut = CFG.seq_len // 2
+    logits1 = forward(params, tok, KEY, cfg=CFG, variant=variant)
+    tok2 = tok.at[0, cut:].set((tok[0, cut:] + 1) % CFG.vocab_size)
+    logits2 = forward(params, tok2, KEY, cfg=CFG, variant=variant)
+    np.testing.assert_allclose(
+        logits1[0, : cut - 1], logits2[0, : cut - 1], rtol=2e-3, atol=2e-4
+    )
+
+
+def test_param_spec_variant_extras():
+    base = set(param_spec(CFG, "exact"))
+    dark = set(param_spec(CFG, "darkformer"))
+    lfk = set(param_spec(CFG, "lfk"))
+    extra_dark = dark - base
+    extra_lfk = lfk - base
+    assert all(n.endswith("m_proj") for n in extra_dark)
+    assert len(extra_dark) == CFG.n_layers
+    assert all(n.endswith("omega") for n in extra_lfk)
+
+
+def test_param_spec_rejects_unknown_variant():
+    with pytest.raises(ValueError):
+        param_spec(CFG, "bogus")
+
+
+def test_darkformer_m_initialized_to_identity():
+    params = init_params(KEY, CFG, "darkformer")
+    m = params["layer00.attn.m_proj"]
+    eye = jnp.eye(CFG.head_dim)[: CFG.r_proj]
+    for h in range(CFG.n_heads):
+        np.testing.assert_array_equal(m[h], eye)
+
+
+def test_darkformer_at_identity_matches_performer():
+    """With M = I (its init), DARKFormer must compute exactly what
+    Performer computes under the same key: it *is* a Performer at step 0."""
+    p_dark = init_params(KEY, CFG, "darkformer")
+    p_perf = {k: v for k, v in p_dark.items() if not k.endswith("m_proj")}
+    tok = tokens(1, CFG.seq_len, seed=5)
+    out_dark = forward(p_dark, tok, KEY, cfg=CFG, variant="darkformer")
+    out_perf = forward(p_perf, tok, KEY, cfg=CFG, variant="performer")
+    np.testing.assert_allclose(out_dark, out_perf, rtol=1e-4, atol=1e-5)
+
+
+def test_performer_approximates_exact_attention():
+    """With a large feature budget the PRF logits should correlate tightly
+    with exact-softmax logits (same weights)."""
+    big = get_config("tiny", m_features=512)
+    params = init_params(KEY, big, "exact")
+    tok = tokens(1, big.seq_len, seed=7)
+    exact = forward(params, tok, KEY, cfg=big, variant="exact")
+    perf = forward(params, tok, KEY, cfg=big, variant="performer")
+    corr = np.corrcoef(np.ravel(exact), np.ravel(perf))[0, 1]
+    assert corr > 0.9, f"corr={corr}"
+    err = float(jnp.mean((exact - perf) ** 2) / jnp.mean(exact**2))
+    assert err < 0.25, f"relative mse={err}"
+
+
+def test_prf_variants_use_fresh_noise_per_key():
+    params = init_params(KEY, CFG, "performer")
+    tok = tokens(1, CFG.seq_len, seed=9)
+    out1 = forward(params, tok, jax.random.PRNGKey(1), cfg=CFG, variant="performer")
+    out2 = forward(params, tok, jax.random.PRNGKey(2), cfg=CFG, variant="performer")
+    assert not np.allclose(out1, out2), "different keys must resample features"
+
+
+def test_constant_variant_ignores_queries():
+    params = init_params(KEY, CFG, "constant")
+    tok = tokens(1, CFG.seq_len, seed=11)
+    out1 = forward(params, tok, KEY, cfg=CFG, variant="constant")
+    p2 = dict(params)
+    p2["layer00.attn.wq"] = params["layer00.attn.wq"] * 3.0
+    out2 = forward(p2, tok, KEY, cfg=CFG, variant="constant")
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_use_pallas_false_matches_pallas_path():
+    ref_cfg = get_config("tiny", use_pallas=False)
+    params = init_params(KEY, CFG, "exact")
+    tok = tokens(1, CFG.seq_len, seed=13)
+    out_pallas = forward(params, tok, KEY, cfg=CFG, variant="exact")
+    out_ref = forward(params, tok, KEY, cfg=ref_cfg, variant="exact")
+    np.testing.assert_allclose(out_pallas, out_ref, rtol=2e-4, atol=2e-5)

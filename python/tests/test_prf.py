@@ -1,0 +1,123 @@
+"""PRF feature-map properties: unbiasedness, the DARKFormer re-embedding
+identity (paper Eq. 3 via App. B), and stabilizer exactness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prf, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=0.5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), jnp.float32)
+
+
+def test_prf_is_unbiased_for_softmax_kernel():
+    # E_omega[phi(q) . phi(k)] = exp(q . k): check with a large draw.
+    d, m = 4, 200_000
+    q = rand((1, d), 1)
+    k = rand((1, d), 2)
+    omega = rand((m, d), 3, scale=1.0)
+    phi_q = ref.prf_features_ref(q, omega)
+    phi_k = ref.prf_features_ref(k, omega)
+    est = float((phi_q @ phi_k.T)[0, 0])
+    exact = float(jnp.exp(q @ k.T)[0, 0])
+    assert abs(est - exact) / exact < 0.02, (est, exact)
+
+
+def test_darkformer_identity_phi_sigma_equals_phi_of_mx():
+    """phi_Sigma(x, M^T w) == phi+(Mx, w): the implementation identity that
+    lets DARKFormer reuse the standard PRF pipeline (App. B)."""
+    d, r, m = 6, 6, 32
+    x = rand((5, d), 11)
+    m_mat = rand((r, d), 12)
+    w = rand((m, r), 13, scale=1.0)
+
+    # Left side: features of x with omega~ = M^T w and Mahalanobis h.
+    omega_tilde = w @ m_mat  # (m, d)
+    sigma = m_mat.T @ m_mat
+    proj = x @ omega_tilde.T
+    quad = 0.5 * jnp.einsum("ld,de,le->l", x, sigma, x)[:, None]
+    lhs = jnp.exp(proj - quad) / jnp.sqrt(m)
+
+    # Right side: standard PRF of the re-embedded inputs.
+    rhs = ref.prf_features_ref(x @ m_mat.T, w)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)
+
+
+def test_data_aware_estimator_unbiased_for_sigma_kernel():
+    d, m = 4, 200_000
+    q = rand((1, d), 21)
+    k = rand((1, d), 22)
+    m_mat = 0.3 * rand((d, d), 23) + 0.8 * jnp.eye(d)
+    sigma = m_mat.T @ m_mat
+    w = rand((m, d), 24, scale=1.0)
+    phi_q = ref.prf_features_ref(q @ m_mat.T, w)
+    phi_k = ref.prf_features_ref(k @ m_mat.T, w)
+    est = float((phi_q @ phi_k.T)[0, 0])
+    exact = float(jnp.exp(q @ sigma @ k.T)[0, 0])
+    assert abs(est - exact) / exact < 0.03, (est, exact)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.integers(2, 16),
+    d=st.sampled_from([4, 8, 16]),
+    m=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_stabilizers_cancel_in_attention(L, d, m, seed):
+    """Normalized attention weights computed from stabilized features must
+    equal weights from unstabilized features: per-query shifts cancel in
+    the normalizer and the global key shift is key-uniform."""
+    q = rand((1, 1, L, d), seed)
+    k = rand((1, 1, L, d), seed + 1)
+    omega = rand((1, 1, m, d), seed + 2, scale=1.0)
+
+    phi_q_s = prf.prf_features(q, omega, is_query=True)
+    phi_k_s = prf.prf_features(k, omega, is_query=False)
+    phi_q_u = ref.prf_features_ref(q, omega[0, 0])
+    phi_k_u = ref.prf_features_ref(k, omega[0, 0])
+
+    def attn_weights(pq, pk):
+        a = jnp.einsum("...im,...jm->...ij", pq, pk)
+        mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+        a = jnp.where(mask, a, 0.0)
+        return a / (jnp.sum(a, axis=-1, keepdims=True) + 1e-30)
+
+    np.testing.assert_allclose(
+        attn_weights(phi_q_s, phi_k_s),
+        attn_weights(phi_q_u, phi_k_u),
+        rtol=2e-3,
+        atol=1e-5,
+    )
+
+
+def test_prf_features_positive_and_finite_under_extreme_inputs():
+    x = rand((1, 1, 8, 16), 31, scale=8.0)  # big norms would overflow naive exp
+    omega = rand((1, 1, 64, 16), 32, scale=1.0)
+    feats = prf.prf_features(x, omega, is_query=True)
+    assert bool(jnp.all(jnp.isfinite(feats)))
+    assert bool(jnp.all(feats >= 0))
+
+
+def test_reembed_shapes_and_identity():
+    x = rand((2, 3, 5, 8), 41)
+    eye = jnp.broadcast_to(jnp.eye(8), (3, 8, 8))
+    np.testing.assert_allclose(prf.reembed(x, eye), x, rtol=1e-6)
+    m_rect = rand((3, 4, 8), 42)
+    assert prf.reembed(x, m_rect).shape == (2, 3, 5, 4)
+
+
+def test_draw_noise_is_key_deterministic():
+    k = jax.random.PRNGKey(0)
+    a = prf.draw_noise(k, 2, 3, 4, 5)
+    b = prf.draw_noise(k, 2, 3, 4, 5)
+    assert a.shape == (2, 3, 4, 5)
+    np.testing.assert_array_equal(a, b)
+    c = prf.draw_noise(jax.random.PRNGKey(1), 2, 3, 4, 5)
+    assert not np.allclose(a, c)

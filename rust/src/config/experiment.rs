@@ -1,0 +1,285 @@
+//! Typed experiment configuration: everything a training run needs,
+//! loadable from TOML with CLI-friendly defaults.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::toml::{parse_toml, TomlDoc};
+
+/// Learning-rate schedule shapes supported by the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Linear warmup then cosine decay to `final_frac * base_lr`.
+    WarmupCosine { warmup_steps: u64, final_frac: f64 },
+    /// Linear warmup then linear decay to `final_frac * base_lr`.
+    WarmupLinear { warmup_steps: u64, final_frac: f64 },
+}
+
+impl LrSchedule {
+    /// LR multiplier at `step` of `total` steps (both 0-based / exclusive).
+    pub fn multiplier(&self, step: u64, total: u64) -> f64 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::WarmupCosine { warmup_steps, final_frac } => {
+                if step < warmup_steps {
+                    (step + 1) as f64 / warmup_steps.max(1) as f64
+                } else {
+                    let t = (step - warmup_steps) as f64
+                        / (total.saturating_sub(warmup_steps)).max(1) as f64;
+                    let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                    final_frac + (1.0 - final_frac) * cos
+                }
+            }
+            LrSchedule::WarmupLinear { warmup_steps, final_frac } => {
+                if step < warmup_steps {
+                    (step + 1) as f64 / warmup_steps.max(1) as f64
+                } else {
+                    let t = (step - warmup_steps) as f64
+                        / (total.saturating_sub(warmup_steps)).max(1) as f64;
+                    final_frac + (1.0 - final_frac) * (1.0 - t)
+                }
+            }
+        }
+    }
+}
+
+/// Which parameters train (Fig. 2/3 vs Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    /// All parameters (uses `train_step.hlo.txt`).
+    Full,
+    /// q/k/v projections + DARKFormer's M only (`train_step_qkv.hlo.txt`).
+    QkvOnly,
+}
+
+impl TrainMode {
+    pub fn program_name(&self) -> &'static str {
+        match self {
+            TrainMode::Full => "train_step",
+            TrainMode::QkvOnly => "train_step_qkv",
+        }
+    }
+}
+
+/// Full description of one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Root of the AOT artifacts (contains `<config>/<variant>/...`).
+    pub artifacts_dir: PathBuf,
+    /// Model size config name (must match an artifacts subdirectory).
+    pub model_config: String,
+    /// Attention variant.
+    pub variant: String,
+    pub mode: TrainMode,
+    pub steps: u64,
+    pub base_lr: f64,
+    pub schedule: LrSchedule,
+    /// Global-norm clip; <= 0 disables.
+    pub clip: f64,
+    pub seed: u64,
+    /// Evaluate on the validation split every `eval_every` steps (0 = off).
+    pub eval_every: u64,
+    /// Checkpoint every `checkpoint_every` steps (0 = only at the end).
+    pub checkpoint_every: u64,
+    /// Start from this checkpoint instead of `init` (finetuning).
+    pub init_checkpoint: Option<PathBuf>,
+    /// Output directory for metrics + checkpoints.
+    pub out_dir: PathBuf,
+    /// Corpus synthesis: number of documents.
+    pub corpus_docs: usize,
+    /// Loader prefetch depth (bounded-channel backpressure).
+    pub prefetch_depth: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model_config: "tiny".into(),
+            variant: "darkformer".into(),
+            mode: TrainMode::Full,
+            steps: 50,
+            base_lr: 1e-3,
+            schedule: LrSchedule::Constant,
+            clip: 1.0,
+            seed: 42,
+            eval_every: 0,
+            checkpoint_every: 0,
+            init_checkpoint: None,
+            out_dir: PathBuf::from("runs/default"),
+            corpus_docs: 2000,
+            prefetch_depth: 4,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text. Unknown keys are ignored (forward compat);
+    /// structural errors and bad enum values are hard errors.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = ExperimentConfig::default();
+        let mode = match doc.str_or("train", "mode", "full") {
+            "full" => TrainMode::Full,
+            "qkv" | "qkv_only" => TrainMode::QkvOnly,
+            other => bail!("unknown train mode {other:?}"),
+        };
+        let schedule = match doc.str_or("train", "schedule", "constant") {
+            "constant" => LrSchedule::Constant,
+            "warmup_cosine" => LrSchedule::WarmupCosine {
+                warmup_steps: doc.i64_or("train", "warmup_steps", 20) as u64,
+                final_frac: doc.f64_or("train", "final_frac", 0.1),
+            },
+            "warmup_linear" => LrSchedule::WarmupLinear {
+                warmup_steps: doc.i64_or("train", "warmup_steps", 20) as u64,
+                final_frac: doc.f64_or("train", "final_frac", 0.1),
+            },
+            other => bail!("unknown schedule {other:?}"),
+        };
+        let init_checkpoint = doc
+            .get("train", "init_checkpoint")
+            .and_then(|v| v.as_str())
+            .map(PathBuf::from);
+        Ok(Self {
+            artifacts_dir: PathBuf::from(doc.str_or(
+                "",
+                "artifacts_dir",
+                d.artifacts_dir.to_str().unwrap(),
+            )),
+            model_config: doc.str_or("", "model_config", &d.model_config).into(),
+            variant: doc.str_or("", "variant", &d.variant).into(),
+            mode,
+            steps: doc.i64_or("train", "steps", d.steps as i64) as u64,
+            base_lr: doc.f64_or("train", "base_lr", d.base_lr),
+            schedule,
+            clip: doc.f64_or("train", "clip", d.clip),
+            seed: doc.i64_or("", "seed", d.seed as i64) as u64,
+            eval_every: doc.i64_or("train", "eval_every", 0) as u64,
+            checkpoint_every: doc.i64_or("train", "checkpoint_every", 0) as u64,
+            init_checkpoint,
+            out_dir: PathBuf::from(doc.str_or(
+                "",
+                "out_dir",
+                d.out_dir.to_str().unwrap(),
+            )),
+            corpus_docs: doc.i64_or("data", "corpus_docs", d.corpus_docs as i64)
+                as usize,
+            prefetch_depth: doc.i64_or("data", "prefetch_depth", 4) as usize,
+        })
+    }
+
+    /// LR at a given step under this config's schedule.
+    pub fn lr_at(&self, step: u64) -> f64 {
+        self.base_lr * self.schedule.multiplier(step, self.steps)
+    }
+
+    pub fn variant_dir(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.model_config).join(&self.variant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty_toml() {
+        let cfg = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.variant, "darkformer");
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.mode, TrainMode::Full);
+    }
+
+    #[test]
+    fn full_document_parses() {
+        let text = r#"
+model_config = "small"
+variant = "performer"
+seed = 7
+out_dir = "runs/x"
+
+[train]
+steps = 300
+base_lr = 5e-4
+schedule = "warmup_cosine"
+warmup_steps = 30
+final_frac = 0.05
+clip = 0.0
+mode = "qkv"
+eval_every = 50
+
+[data]
+corpus_docs = 5000
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.model_config, "small");
+        assert_eq!(cfg.variant, "performer");
+        assert_eq!(cfg.steps, 300);
+        assert_eq!(cfg.mode, TrainMode::QkvOnly);
+        assert_eq!(cfg.clip, 0.0);
+        assert_eq!(cfg.corpus_docs, 5000);
+        match cfg.schedule {
+            LrSchedule::WarmupCosine { warmup_steps, final_frac } => {
+                assert_eq!(warmup_steps, 30);
+                assert!((final_frac - 0.05).abs() < 1e-12);
+            }
+            _ => panic!("wrong schedule"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_mode() {
+        assert!(
+            ExperimentConfig::from_toml_str("[train]\nmode = \"bogus\"\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine { warmup_steps: 10, final_frac: 0.1 };
+        // Ramps up during warmup.
+        assert!(s.multiplier(0, 100) < s.multiplier(5, 100));
+        assert!((s.multiplier(9, 100) - 1.0).abs() < 1e-9);
+        // Decays after warmup.
+        assert!(s.multiplier(50, 100) > s.multiplier(99, 100));
+        // Ends near final_frac.
+        assert!((s.multiplier(100, 100) - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn schedule_monotonic_decay_after_warmup() {
+        for sched in [
+            LrSchedule::WarmupCosine { warmup_steps: 5, final_frac: 0.0 },
+            LrSchedule::WarmupLinear { warmup_steps: 5, final_frac: 0.0 },
+        ] {
+            let mut prev = f64::INFINITY;
+            for step in 5..200 {
+                let m = sched.multiplier(step, 200);
+                assert!(m <= prev + 1e-12, "not monotone at {step}");
+                prev = m;
+            }
+        }
+    }
+
+    #[test]
+    fn lr_at_composes_base_and_schedule() {
+        let cfg = ExperimentConfig {
+            base_lr: 2.0,
+            schedule: LrSchedule::Constant,
+            ..Default::default()
+        };
+        assert_eq!(cfg.lr_at(17), 2.0);
+    }
+}

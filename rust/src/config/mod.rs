@@ -1,0 +1,12 @@
+//! Configuration substrate: a TOML-subset parser and the typed experiment
+//! configuration consumed by the coordinator and CLI.
+//!
+//! The environment has no serde/toml crates, so [`toml`] implements the
+//! subset the project needs: `[section]` headers, string / integer /
+//! float / bool scalars, homogeneous arrays, `#` comments.
+
+mod experiment;
+mod toml;
+
+pub use experiment::{ExperimentConfig, LrSchedule, TrainMode};
+pub use toml::{parse_toml, TomlDoc, TomlValue};

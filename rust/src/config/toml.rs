@@ -1,0 +1,304 @@
+//! TOML-subset parser (sections, scalars, arrays, comments).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`. Top-level keys live in the
+/// `""` section.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse_toml(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                });
+            };
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(TomlError {
+                line: lineno,
+                msg: format!("expected key = value, got {line:?}"),
+            });
+        };
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(TomlError { line: lineno, msg: "empty key".into() });
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        doc.sections.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let err = |msg: &str| TomlError { line, msg: msg.to_string() };
+    let text = text.trim();
+    if text.is_empty() {
+        return Err(err("missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(err("unterminated string"));
+        };
+        // Basic escapes.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(err("bad escape in string")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            return Err(err("unterminated array"));
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(&format!("cannot parse value {text:?}")))
+}
+
+/// Split top-level array items, respecting quoted strings (nested arrays
+/// are not needed by this project's configs).
+fn split_array_items(inner: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&inner[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_document() {
+        let doc = parse_toml("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Str("hi".into())));
+        assert_eq!(doc.get("", "d"), Some(&TomlValue::Bool(true)));
+    }
+
+    #[test]
+    fn parses_sections() {
+        let doc = parse_toml("[train]\nsteps = 100\n[eval]\nsteps = 10\n").unwrap();
+        assert_eq!(doc.i64_or("train", "steps", 0), 100);
+        assert_eq!(doc.i64_or("eval", "steps", 0), 10);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse_toml("lrs = [0.1, 0.2, 0.3]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let lrs: Vec<f64> = doc
+            .get("", "lrs")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(lrs, vec![0.1, 0.2, 0.3]);
+        let names: Vec<&str> = doc
+            .get("", "names")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn strips_comments_but_not_in_strings() {
+        let doc =
+            parse_toml("a = 1 # trailing\ns = \"has # inside\"\n").unwrap();
+        assert_eq!(doc.i64_or("", "a", 0), 1);
+        assert_eq!(doc.str_or("", "s", ""), "has # inside");
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = parse_toml("[x]\n").unwrap();
+        assert_eq!(doc.f64_or("x", "missing", 1.25), 1.25);
+        assert_eq!(doc.bool_or("y", "missing", true), true);
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let doc = parse_toml("lr = 3e-4\nbig = 1.5E6\n").unwrap();
+        assert_eq!(doc.f64_or("", "lr", 0.0), 3e-4);
+        assert_eq!(doc.f64_or("", "big", 0.0), 1.5e6);
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let err = parse_toml("good = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse_toml(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a\nb\t\"c\"");
+    }
+}

@@ -1,0 +1,563 @@
+//! Figure/table harnesses: each function regenerates one piece of the
+//! paper's evaluation (DESIGN.md section 3 maps ids to paper figures).
+//!
+//! All harnesses write machine-readable CSV under the experiment output
+//! root and print the headline comparison to stderr, so `darkformer exp
+//! figN` is the full regeneration command for figure N.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExperimentConfig, LrSchedule, TrainMode};
+use crate::linalg::Matrix;
+use crate::metrics::MetricLogger;
+use crate::rfa::{
+    self, estimators::Sampling, gaussian::anisotropic_covariance,
+    gaussian::MultivariateGaussian, variance, PrfEstimator,
+};
+use crate::rng::Pcg64;
+
+use super::trainer::{TrainReport, Trainer};
+use super::workbench::Workbench;
+
+/// Shared harness context.
+pub struct ExpContext {
+    pub artifacts_dir: PathBuf,
+    pub model_config: String,
+    pub out_root: PathBuf,
+    pub seed: u64,
+    pub corpus_docs: usize,
+}
+
+impl ExpContext {
+    fn workbench(&self) -> Result<Workbench> {
+        Workbench::prepare(
+            &self.artifacts_dir,
+            &self.model_config,
+            self.corpus_docs,
+            self.seed,
+            &self.out_root.join("_cache"),
+        )
+    }
+
+    fn base_cfg(&self, variant: &str, out: &Path) -> ExperimentConfig {
+        ExperimentConfig {
+            artifacts_dir: self.artifacts_dir.clone(),
+            model_config: self.model_config.clone(),
+            variant: variant.to_string(),
+            out_dir: out.to_path_buf(),
+            seed: self.seed,
+            corpus_docs: self.corpus_docs,
+            ..Default::default()
+        }
+    }
+}
+
+fn run_one(cfg: ExperimentConfig, wb: &Workbench) -> Result<TrainReport> {
+    let trainer = Trainer::new(cfg.clone(), wb)?;
+    eprintln!(
+        "[exp] {} {} mode={:?} steps={} lr={}",
+        cfg.model_config, cfg.variant, cfg.mode, cfg.steps, cfg.base_lr
+    );
+    trainer.run()
+}
+
+/// Merge per-variant metrics.jsonl files into one long-format CSV:
+/// `step,variant,loss,acc,lr,grad_norm,wall_ms`.
+fn merge_curves(runs: &[(String, PathBuf)], out_csv: &Path) -> Result<()> {
+    let mut csv = String::from("step,variant,loss,acc,lr,grad_norm,wall_ms\n");
+    for (variant, metrics_path) in runs {
+        for r in MetricLogger::read_all(metrics_path)? {
+            writeln!(
+                csv,
+                "{},{},{},{},{},{},{}",
+                r.step, variant, r.loss, r.acc, r.lr, r.grad_norm, r.wall_ms
+            )?;
+        }
+    }
+    std::fs::create_dir_all(out_csv.parent().context("csv parent")?)?;
+    std::fs::write(out_csv, csv)?;
+    Ok(())
+}
+
+fn print_report_table(title: &str, reports: &[TrainReport]) {
+    eprintln!("\n=== {title} ===");
+    eprintln!(
+        "{:<12} {:>8} {:>10} {:>10} {:>10} {:>8} {:>10}",
+        "variant", "steps", "loss", "acc", "tail_acc", "spikes", "ms/step"
+    );
+    for r in reports {
+        eprintln!(
+            "{:<12} {:>8} {:>10.4} {:>10.4} {:>10.4} {:>8} {:>10.1}",
+            r.variant,
+            r.steps,
+            r.final_loss,
+            r.final_acc,
+            r.tail_acc,
+            r.spike_events,
+            r.mean_step_ms
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 — pretraining + finetuning accuracy across all six variants
+// ---------------------------------------------------------------------
+
+pub const FIG2_VARIANTS: &[&str] =
+    &["exact", "darkformer", "performer", "lfk", "random", "constant"];
+
+/// Pretrain each variant from scratch; curves to `fig2/pretrain.csv`.
+pub fn fig2_pretrain(
+    ctx: &ExpContext,
+    variants: &[&str],
+    steps: u64,
+    base_lr: f64,
+) -> Result<Vec<TrainReport>> {
+    let wb = ctx.workbench()?;
+    let root = ctx.out_root.join("fig2/pretrain");
+    let mut reports = Vec::new();
+    let mut runs = Vec::new();
+    for &variant in variants {
+        let mut cfg = ctx.base_cfg(variant, &root.join(variant));
+        cfg.steps = steps;
+        cfg.base_lr = base_lr;
+        cfg.schedule = LrSchedule::WarmupCosine {
+            warmup_steps: (steps / 10).max(5),
+            final_frac: 0.1,
+        };
+        let report = run_one(cfg, &wb)?;
+        runs.push((variant.to_string(), report.metrics_path.clone()));
+        reports.push(report);
+    }
+    merge_curves(&runs, &root.join("../pretrain.csv"))?;
+    print_report_table("Fig 2 (pretraining)", &reports);
+    Ok(reports)
+}
+
+/// Ensure a pretrained exact-softmax checkpoint exists (the stand-in for
+/// the paper's pretrained Gemma weights); returns its path.
+pub fn ensure_pretrained(
+    ctx: &ExpContext,
+    steps: u64,
+    base_lr: f64,
+) -> Result<PathBuf> {
+    let dir = ctx.out_root.join("pretrained_exact");
+    let ckpt = dir.join("final.dkft");
+    if ckpt.exists() {
+        return Ok(ckpt);
+    }
+    let wb = ctx.workbench()?;
+    let mut cfg = ctx.base_cfg("exact", &dir);
+    cfg.steps = steps;
+    cfg.base_lr = base_lr;
+    cfg.schedule = LrSchedule::WarmupCosine {
+        warmup_steps: (steps / 10).max(5),
+        final_frac: 0.1,
+    };
+    run_one(cfg, &wb)?;
+    Ok(ckpt)
+}
+
+/// Finetune every variant from the shared exact-pretrained checkpoint.
+pub fn fig2_finetune(
+    ctx: &ExpContext,
+    variants: &[&str],
+    pretrain_steps: u64,
+    steps: u64,
+    base_lr: f64,
+) -> Result<Vec<TrainReport>> {
+    let ckpt = ensure_pretrained(ctx, pretrain_steps, 3e-3)?;
+    let wb = ctx.workbench()?;
+    let root = ctx.out_root.join("fig2/finetune");
+    let mut reports = Vec::new();
+    let mut runs = Vec::new();
+    for &variant in variants {
+        let mut cfg = ctx.base_cfg(variant, &root.join(variant));
+        cfg.steps = steps;
+        cfg.base_lr = base_lr;
+        cfg.init_checkpoint = Some(ckpt.clone());
+        let report = run_one(cfg, &wb)?;
+        runs.push((variant.to_string(), report.metrics_path.clone()));
+        reports.push(report);
+    }
+    merge_curves(&runs, &root.join("../finetune.csv"))?;
+    print_report_table("Fig 2 (finetuning)", &reports);
+    Ok(reports)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 — extended finetuning (Performer slowly closes the gap)
+// ---------------------------------------------------------------------
+
+pub fn fig3_long_finetune(
+    ctx: &ExpContext,
+    pretrain_steps: u64,
+    steps: u64,
+    base_lr: f64,
+) -> Result<Vec<TrainReport>> {
+    let ckpt = ensure_pretrained(ctx, pretrain_steps, 3e-3)?;
+    let wb = ctx.workbench()?;
+    let root = ctx.out_root.join("fig3");
+    let mut reports = Vec::new();
+    let mut runs = Vec::new();
+    for variant in ["exact", "darkformer", "performer"] {
+        let mut cfg = ctx.base_cfg(variant, &root.join(variant));
+        cfg.steps = steps;
+        cfg.base_lr = base_lr;
+        cfg.init_checkpoint = Some(ckpt.clone());
+        let report = run_one(cfg, &wb)?;
+        runs.push((variant.to_string(), report.metrics_path.clone()));
+        reports.push(report);
+    }
+    merge_curves(&runs, &root.join("curves.csv"))?;
+    print_report_table("Fig 3 (long finetune)", &reports);
+    Ok(reports)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 4 — qkv-only partial finetuning
+// ---------------------------------------------------------------------
+
+pub fn fig4_qkv_finetune(
+    ctx: &ExpContext,
+    pretrain_steps: u64,
+    steps: u64,
+    base_lr: f64,
+) -> Result<Vec<TrainReport>> {
+    let ckpt = ensure_pretrained(ctx, pretrain_steps, 3e-3)?;
+    let wb = ctx.workbench()?;
+    let root = ctx.out_root.join("fig4");
+    let mut reports = Vec::new();
+    let mut runs = Vec::new();
+    for variant in ["exact", "darkformer", "performer"] {
+        let mut cfg = ctx.base_cfg(variant, &root.join(variant));
+        cfg.steps = steps;
+        cfg.base_lr = base_lr;
+        cfg.mode = TrainMode::QkvOnly;
+        cfg.init_checkpoint = Some(ckpt.clone());
+        let report = run_one(cfg, &wb)?;
+        runs.push((variant.to_string(), report.metrics_path.clone()));
+        reports.push(report);
+    }
+    merge_curves(&runs, &root.join("curves.csv"))?;
+    print_report_table("Fig 4 (qkv-only finetune)", &reports);
+    Ok(reports)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 5 — learning-rate sweep stability
+// ---------------------------------------------------------------------
+
+pub fn fig5_lr_sweep(
+    ctx: &ExpContext,
+    pretrain_steps: u64,
+    steps: u64,
+    lrs: &[f64],
+) -> Result<()> {
+    let ckpt = ensure_pretrained(ctx, pretrain_steps, 3e-3)?;
+    let wb = ctx.workbench()?;
+    let root = ctx.out_root.join("fig5");
+    let mut summary = String::from(
+        "variant,lr,spike_events,spike_fraction,final_loss,final_acc\n",
+    );
+    let mut runs = Vec::new();
+    for variant in ["darkformer", "performer"] {
+        for (i, &lr) in lrs.iter().enumerate() {
+            let mut cfg = ctx
+                .base_cfg(variant, &root.join(format!("{variant}_lr{i}")));
+            cfg.steps = steps;
+            cfg.base_lr = lr;
+            cfg.clip = 0.0; // Stability probes want raw updates.
+            cfg.init_checkpoint = Some(ckpt.clone());
+            let report = run_one(cfg, &wb)?;
+            writeln!(
+                summary,
+                "{variant},{lr},{},{},{},{}",
+                report.spike_events,
+                report.spike_fraction,
+                report.final_loss,
+                report.final_acc
+            )?;
+            runs.push((
+                format!("{variant}@{lr}"),
+                report.metrics_path.clone(),
+            ));
+        }
+    }
+    std::fs::create_dir_all(&root)?;
+    std::fs::write(root.join("stability.csv"), &summary)?;
+    merge_curves(&runs, &root.join("curves.csv"))?;
+    eprintln!("\n=== Fig 5 (LR sweep stability) ===\n{summary}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 1 — attention complexity scaling (exact O(L^2 d) vs PRF O(L m d))
+// ---------------------------------------------------------------------
+
+/// Time the attention-only probe artifacts across sequence lengths.
+/// Writes `fig1/scaling.csv` with per-L mean wall time for both paths.
+pub fn fig1_scaling(
+    ctx: &ExpContext,
+    seq_lens: &[usize],
+    reps: usize,
+) -> Result<()> {
+    use crate::runtime::Runtime;
+    use std::time::Instant;
+
+    let dir = ctx.artifacts_dir.join("scaling");
+    anyhow::ensure!(
+        dir.exists(),
+        "no scaling probes at {} — run `make artifacts`",
+        dir.display()
+    );
+    let meta = crate::ser::parse(&std::fs::read_to_string(
+        dir.join("meta.json"),
+    )?)
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let h = meta.field("n_heads").and_then(|v| v.as_usize()).unwrap_or(4);
+    let dh = meta.field("head_dim").and_then(|v| v.as_usize()).unwrap_or(32);
+
+    let runtime = Runtime::cpu()?;
+    let mut rng = Pcg64::seed(ctx.seed);
+    let mut csv = String::from("seq_len,variant,mean_ms,min_ms\n");
+    eprintln!("\n=== Fig 1: attention wall-clock vs sequence length ===");
+    eprintln!("{:>8} {:>12} {:>12} {:>12}", "L", "exact ms", "prf ms", "speedup");
+    for &l in seq_lens {
+        let mut times = Vec::new();
+        for variant in ["exact", "performer"] {
+            let path = dir.join(format!("attn_{variant}_L{l}.hlo.txt"));
+            if !path.exists() {
+                eprintln!("  (skipping L={l}: {} missing)", path.display());
+                continue;
+            }
+            let program = runtime.load_program(&path)?;
+            let n = h * l * dh;
+            let mk = |rng: &mut Pcg64| {
+                let data: Vec<f32> =
+                    (0..n).map(|_| rng.next_f32() - 0.5).collect();
+                xla::Literal::vec1(&data)
+                    .reshape(&[1, h as i64, l as i64, dh as i64])
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))
+            };
+            let q = mk(&mut rng)?;
+            let k = mk(&mut rng)?;
+            let v = mk(&mut rng)?;
+            let seed = xla::Literal::scalar(7u32);
+            // Warmup.
+            program.run(&[&q, &k, &v, &seed].map(|x| x.clone()))?;
+            let mut mean = 0.0;
+            let mut min = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                program.run(&[&q, &k, &v, &seed].map(|x| x.clone()))?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                mean += ms;
+                min = min.min(ms);
+            }
+            mean /= reps as f64;
+            writeln!(csv, "{l},{variant},{mean},{min}")?;
+            times.push(mean);
+        }
+        if times.len() == 2 {
+            eprintln!(
+                "{:>8} {:>12.3} {:>12.3} {:>12.2}x",
+                l,
+                times[0],
+                times[1],
+                times[0] / times[1]
+            );
+        }
+    }
+    let out = ctx.out_root.join("fig1");
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(out.join("scaling.csv"), &csv)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Theory tables — Theorem 3.2 variance + approximation error (pure Rust)
+// ---------------------------------------------------------------------
+
+/// Expected MC variance: isotropic vs optimal proposal, sweeping
+/// anisotropy. Validates Theorem 3.2's strict ordering and its growth
+/// with anisotropy.
+pub fn variance_table(
+    out_root: &Path,
+    d: usize,
+    m: usize,
+    eps_grid: &[f64],
+    seed: u64,
+) -> Result<String> {
+    let mut rng = Pcg64::seed(seed);
+    let mut csv = String::from(
+        "eps,anisotropy_index,var_isotropic,var_optimal,reduction_factor\n",
+    );
+    eprintln!("\n=== Theorem 3.2: expected MC variance (d={d}, m={m}) ===");
+    eprintln!(
+        "{:>6} {:>12} {:>14} {:>14} {:>10}",
+        "eps", "aniso(Σ*)", "V(p_I)", "V(ψ*)", "V_I/V_ψ*"
+    );
+    for &eps in eps_grid {
+        let lambda = anisotropic_covariance(d, 0.2, eps, &mut rng);
+        let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+        let sigma_star =
+            rfa::optimal_proposal(&lambda).context("lambda too large")?;
+        let aniso = rfa::proposal::anisotropy_index(&sigma_star);
+        let psi = MultivariateGaussian::new(sigma_star).unwrap();
+
+        let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let opt = PrfEstimator::new(d, m, Sampling::Proposal(psi));
+        // Paired draws: the same (q, k) set for both estimators, so the
+        // heavy-tailed across-pair variation cancels in the ratio.
+        let (v_iso, v_opt) = variance::paired_expected_mc_variance(
+            &iso, &opt, &dist, 200, 3000, &mut rng,
+        );
+        let factor = v_iso / v_opt;
+        writeln!(csv, "{eps},{aniso},{v_iso},{v_opt},{factor}")?;
+        eprintln!(
+            "{:>6.2} {:>12.3} {:>14.6e} {:>14.6e} {:>10.3}",
+            eps, aniso, v_iso, v_opt, factor
+        );
+    }
+    std::fs::create_dir_all(out_root)?;
+    std::fs::write(out_root.join("variance.csv"), &csv)?;
+    Ok(csv)
+}
+
+/// Relative kernel-approximation error vs feature budget for the SAME
+/// softmax-kernel target: isotropic sampling (Performer) vs the
+/// data-aligned optimal proposal of Theorem 3.2 (the importance-sampled
+/// estimator DARKFormer realizes implicitly, Prop. 4.1) — the §3-§4
+/// "improves approximation under limited budgets" claim.
+pub fn approx_table(
+    out_root: &Path,
+    d: usize,
+    m_grid: &[usize],
+    eps: f64,
+    seed: u64,
+) -> Result<String> {
+    let mut rng = Pcg64::seed(seed);
+    let lambda = anisotropic_covariance(d, 0.2, eps, &mut rng);
+    let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+    // The data-aligned sampling geometry for this input distribution.
+    let sigma_star = rfa::optimal_proposal(&lambda).context("invalid")?;
+
+    let mut csv = String::from("m,rel_mse_isotropic,rel_mse_aligned,ratio\n");
+    eprintln!("\n=== Kernel approximation error (d={d}, eps={eps}) ===");
+    eprintln!(
+        "{:>6} {:>18} {:>18} {:>8}",
+        "m", "relMSE isotropic", "relMSE aligned", "ratio"
+    );
+    for &m in m_grid {
+        let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let aligned = PrfEstimator::new(
+            d,
+            m,
+            Sampling::Proposal(
+                MultivariateGaussian::new(sigma_star.clone()).unwrap(),
+            ),
+        );
+        let e_iso = variance::relative_mse(&iso, &dist, 80, 50, &mut rng);
+        let e_ali = variance::relative_mse(&aligned, &dist, 80, 50, &mut rng);
+        writeln!(csv, "{m},{e_iso},{e_ali},{}", e_iso / e_ali)?;
+        eprintln!(
+            "{:>6} {:>18.6e} {:>18.6e} {:>8.2}",
+            m,
+            e_iso,
+            e_ali,
+            e_iso / e_ali
+        );
+    }
+    std::fs::create_dir_all(out_root)?;
+    std::fs::write(out_root.join("approx.csv"), &csv)?;
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------
+// Extension: learned-geometry probe (Sigma = M^T M from a checkpoint)
+// ---------------------------------------------------------------------
+
+/// Analyze the learned PRF covariance in a DARKFormer checkpoint: per
+/// (layer, head), the eigen-spread of `Sigma = M^T M`, its anisotropy
+/// index, and Frobenius distance from identity — direct evidence that
+/// finetuning moved the sampling geometry away from the isotropic
+/// Performer point (M = I at init).
+pub fn sigma_report(ckpt_path: &Path, out_csv: Option<&Path>) -> Result<String> {
+    use crate::checkpoint::Checkpoint;
+
+    let ck = Checkpoint::load(ckpt_path)?;
+    let mut csv = String::from(
+        "param,head,sigma_min_eig,sigma_max_eig,anisotropy,dist_from_identity\n",
+    );
+    eprintln!("\n=== learned Sigma = M^T M geometry: {} ===", ckpt_path.display());
+    eprintln!(
+        "{:<24} {:>4} {:>12} {:>12} {:>10} {:>10}",
+        "param", "head", "min eig", "max eig", "aniso", "|Σ−I|_F"
+    );
+    let mut found = false;
+    let names: Vec<String> = ck.names().cloned().collect();
+    for name in names {
+        // Model parameters only — not the AdamW moment mirrors
+        // (opt_m/..., opt_v/...) that checkpoints also carry.
+        if !name.ends_with("attn.m_proj") || name.starts_with("opt_") {
+            continue;
+        }
+        found = true;
+        let t = ck.get(&name).unwrap();
+        anyhow::ensure!(t.shape.len() == 3, "m_proj must be (h, r, dh)");
+        let (h, r, dh) = (t.shape[0], t.shape[1], t.shape[2]);
+        let vals = t.as_f32()?;
+        for head in 0..h {
+            // M is (r, dh); Sigma = M^T M is (dh, dh).
+            let mut m = Matrix::zeros(r, dh);
+            for i in 0..r {
+                for j in 0..dh {
+                    m[(i, j)] = vals[head * r * dh + i * dh + j] as f64;
+                }
+            }
+            let sigma = m.transpose().matmul(&m);
+            let (eigs, _) = sigma.jacobi_eigen();
+            let max = eigs[0];
+            let min = *eigs.last().unwrap();
+            let dist = sigma.sub(&Matrix::identity(dh)).frobenius_norm();
+            let aniso = if min > 1e-12 { max / min } else { f64::INFINITY };
+            writeln!(csv, "{name},{head},{min},{max},{aniso},{dist}")?;
+            eprintln!(
+                "{:<24} {:>4} {:>12.5} {:>12.5} {:>10.3} {:>10.4}",
+                name, head, min, max, aniso, dist
+            );
+        }
+    }
+    anyhow::ensure!(
+        found,
+        "{} has no attn.m_proj tensors (not a DARKFormer checkpoint?)",
+        ckpt_path.display()
+    );
+    if let Some(path) = out_csv {
+        std::fs::create_dir_all(path.parent().context("csv parent")?)?;
+        std::fs::write(path, &csv)?;
+    }
+    Ok(csv)
+}
+
+/// Empirical check that `Sigma*` reduces to a scalar multiple of I under
+/// isotropic inputs (Theorem 3.2 item 1) — printed with the variance
+/// table for completeness.
+pub fn sigma_star_isotropy_check(d: usize) -> (f64, f64) {
+    let lambda = Matrix::identity(d).scale(0.2);
+    let sigma = rfa::optimal_proposal(&lambda).unwrap();
+    let expected = rfa::proposal::optimal_eigenvalue(0.2);
+    let diag_err = (0..d)
+        .map(|i| (sigma[(i, i)] - expected).abs())
+        .fold(0.0, f64::max);
+    let off_err = (0..d)
+        .flat_map(|i| (0..d).map(move |j| (i, j)))
+        .filter(|&(i, j)| i != j)
+        .map(|(i, j)| sigma[(i, j)].abs())
+        .fold(0.0, f64::max);
+    (diag_err, off_err)
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: training orchestration over the PJRT runtime.
+//!
+//! * [`train_state`] — host-side mirror of the flattened parameter /
+//!   optimizer-state vectors, checkpoint save/restore, init-from-artifact.
+//! * [`trainer`] — the training loop: data prefetch, LR schedule, step
+//!   execution, eval cadence, metric logging, spike detection.
+//! * [`workbench`] — shared setup (corpus synthesis, BPE training,
+//!   dataset assembly) with on-disk caching so experiment sweeps don't
+//!   redo corpus work per run.
+//! * [`experiments`] — the paper's figure harnesses (Figs. 1-5 plus the
+//!   theory tables); each regenerates one table/figure as CSV.
+
+pub mod experiments;
+pub mod train_state;
+pub mod trainer;
+pub mod workbench;
+
+pub use train_state::TrainState;
+pub use trainer::{HotState, TrainReport, Trainer};
+pub use workbench::Workbench;

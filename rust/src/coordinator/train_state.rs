@@ -1,0 +1,276 @@
+//! Host-side training state: parameters + AdamW moments in the canonical
+//! manifest order, with checkpoint persistence.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{Checkpoint, Tensor};
+use crate::runtime::{literal_to_tensor, tensor_to_literal, Manifest, Program};
+
+/// Flattened model + optimizer state. Tensors are host copies in the
+/// manifest's canonical (sorted-name) order; every train step round-trips
+/// them through the PJRT executable.
+pub struct TrainState {
+    pub manifest: Manifest,
+    pub params: Vec<Tensor>,
+    pub opt_m: Vec<Tensor>,
+    pub opt_v: Vec<Tensor>,
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Initialize from the `init` artifact (fresh pretraining state).
+    pub fn init(manifest: Manifest, init_program: &Program, seed: u32) -> Result<Self> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let outs = init_program.run(&[seed_lit])?;
+        if outs.len() != manifest.n_params() {
+            bail!(
+                "init returned {} tensors, manifest expects {}",
+                outs.len(),
+                manifest.n_params()
+            );
+        }
+        let params = outs
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Self::with_params(manifest, params)
+    }
+
+    /// Wrap existing parameters with zeroed optimizer moments.
+    pub fn with_params(manifest: Manifest, params: Vec<Tensor>) -> Result<Self> {
+        for (t, spec) in params.iter().zip(&manifest.params) {
+            if t.shape != spec.shape {
+                bail!(
+                    "param {} shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+        let zeros: Vec<Tensor> = params
+            .iter()
+            .map(|t| {
+                Tensor::from_f32(t.shape.clone(), &vec![0.0; t.element_count()])
+            })
+            .collect();
+        Ok(Self {
+            manifest,
+            params,
+            opt_m: zeros.clone(),
+            opt_v: zeros,
+            step: 0,
+        })
+    }
+
+    /// Number of parameter leaves.
+    pub fn n_params(&self) -> usize {
+        self.manifest.n_params()
+    }
+
+    /// Arguments prefix for train_step: params, opt_m, opt_v as literals.
+    pub fn state_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(3 * self.n_params());
+        for t in self.params.iter().chain(&self.opt_m).chain(&self.opt_v) {
+            out.push(tensor_to_literal(t)?);
+        }
+        Ok(out)
+    }
+
+    /// Parameter-only literals (eval_step prefix).
+    pub fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params.iter().map(tensor_to_literal).collect()
+    }
+
+    /// Absorb the train-step outputs: `params, opt_m, opt_v` (then the
+    /// caller reads the scalar tail). Advances the step counter.
+    pub fn absorb(&mut self, outs: &[xla::Literal]) -> Result<()> {
+        let n = self.n_params();
+        if outs.len() < 3 * n {
+            bail!("train step returned {} outputs, need >= {}", outs.len(), 3 * n);
+        }
+        for i in 0..n {
+            self.params[i] = literal_to_tensor(&outs[i])?;
+            self.opt_m[i] = literal_to_tensor(&outs[n + i])?;
+            self.opt_v[i] = literal_to_tensor(&outs[2 * n + i])?;
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    /// Save params + moments + step to a checkpoint file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut ck = Checkpoint::new();
+        for (spec, t) in self.manifest.params.iter().zip(&self.params) {
+            ck.insert(spec.name.clone(), t.clone());
+        }
+        for (spec, t) in self.manifest.params.iter().zip(&self.opt_m) {
+            ck.insert(format!("opt_m/{}", spec.name), t.clone());
+        }
+        for (spec, t) in self.manifest.params.iter().zip(&self.opt_v) {
+            ck.insert(format!("opt_v/{}", spec.name), t.clone());
+        }
+        ck.insert("__step__", Tensor::from_i32(vec![], &[self.step as i32]));
+        ck.save(path)
+    }
+
+    /// Restore from a checkpoint.
+    ///
+    /// `strict_optimizer = false` tolerates a params-only checkpoint
+    /// (finetuning resets moments) and *always* tolerates missing
+    /// variant-specific parameters: finetuning a DARKFormer from an
+    /// exact-softmax pretrain must synthesize `attn.m_proj` (identity) —
+    /// handled by `fill_missing`.
+    pub fn load(
+        manifest: Manifest,
+        path: &Path,
+        init_fallback: &[Tensor],
+        reset_optimizer: bool,
+    ) -> Result<Self> {
+        let ck = Checkpoint::load(path)?;
+        let mut params = Vec::with_capacity(manifest.n_params());
+        for (i, spec) in manifest.params.iter().enumerate() {
+            match ck.get(&spec.name) {
+                Some(t) => {
+                    if t.shape != spec.shape {
+                        bail!(
+                            "checkpoint {}: shape {:?} != manifest {:?}",
+                            spec.name,
+                            t.shape,
+                            spec.shape
+                        );
+                    }
+                    params.push(t.clone());
+                }
+                None => {
+                    // Variant-specific parameter absent from the source
+                    // checkpoint (e.g. m_proj when finetuning from exact).
+                    let fb = init_fallback
+                        .get(i)
+                        .with_context(|| format!("no fallback for {}", spec.name))?;
+                    params.push(fb.clone());
+                }
+            }
+        }
+        let mut state = Self::with_params(manifest, params)?;
+        if !reset_optimizer {
+            for (i, spec) in state.manifest.params.iter().enumerate() {
+                if let Some(t) = ck.get(&format!("opt_m/{}", spec.name)) {
+                    state.opt_m[i] = t.clone();
+                }
+                if let Some(t) = ck.get(&format!("opt_v/{}", spec.name)) {
+                    state.opt_v[i] = t.clone();
+                }
+            }
+            if let Some(t) = ck.get("__step__") {
+                state.step = t.as_i32()?[0] as u64;
+            }
+        }
+        Ok(state)
+    }
+
+    /// Parameter tensor by name (for probes/tests).
+    pub fn param(&self, name: &str) -> Option<&Tensor> {
+        let i = self.manifest.param_index(name)?;
+        self.params.get(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+    use crate::ser::parse;
+
+    fn manifest2() -> Manifest {
+        let v = parse(
+            r#"{"variant":"x","config":"t","params":[
+                {"name":"a","shape":[2,2],"dtype":"f32"},
+                {"name":"b","shape":[3],"dtype":"f32"}],
+                "programs":[]}"#,
+        )
+        .unwrap();
+        Manifest::from_json(&v).unwrap()
+    }
+
+    fn tensors2() -> Vec<Tensor> {
+        vec![
+            Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            Tensor::from_f32(vec![3], &[5.0, 6.0, 7.0]),
+        ]
+    }
+
+    #[test]
+    fn with_params_validates_shapes() {
+        let m = manifest2();
+        let bad = vec![
+            Tensor::from_f32(vec![2, 2], &[0.0; 4]),
+            Tensor::from_f32(vec![4], &[0.0; 4]),
+        ];
+        assert!(TrainState::with_params(m, bad).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("dkf_state_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.dkft");
+        let mut st = TrainState::with_params(manifest2(), tensors2()).unwrap();
+        st.step = 17;
+        st.opt_m[0] = Tensor::from_f32(vec![2, 2], &[0.1; 4]);
+        st.save(&path).unwrap();
+
+        let loaded =
+            TrainState::load(manifest2(), &path, &tensors2(), false).unwrap();
+        assert_eq!(loaded.step, 17);
+        assert_eq!(loaded.params[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(loaded.opt_m[0].as_f32().unwrap(), vec![0.1; 4]);
+    }
+
+    #[test]
+    fn load_with_reset_optimizer_zeroes_moments() {
+        let dir = std::env::temp_dir().join("dkf_state_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state2.dkft");
+        let mut st = TrainState::with_params(manifest2(), tensors2()).unwrap();
+        st.opt_m[0] = Tensor::from_f32(vec![2, 2], &[9.0; 4]);
+        st.step = 5;
+        st.save(&path).unwrap();
+
+        let loaded =
+            TrainState::load(manifest2(), &path, &tensors2(), true).unwrap();
+        assert_eq!(loaded.step, 0);
+        assert_eq!(loaded.opt_m[0].as_f32().unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn load_fills_missing_params_from_fallback() {
+        // Save a checkpoint that only has "a"; manifest also wants "b".
+        let dir = std::env::temp_dir().join("dkf_state_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("partial.dkft");
+        let mut ck = Checkpoint::new();
+        ck.insert("a", Tensor::from_f32(vec![2, 2], &[8.0; 4]));
+        ck.save(&path).unwrap();
+
+        let fallback = tensors2();
+        let loaded =
+            TrainState::load(manifest2(), &path, &fallback, true).unwrap();
+        assert_eq!(loaded.params[0].as_f32().unwrap(), vec![8.0; 4]);
+        // "b" came from the fallback (the variant's init).
+        assert_eq!(loaded.params[1].as_f32().unwrap(), vec![5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn param_lookup_by_name() {
+        let st = TrainState::with_params(manifest2(), tensors2()).unwrap();
+        assert_eq!(st.param("b").unwrap().as_f32().unwrap(), vec![5.0, 6.0, 7.0]);
+        assert!(st.param("zz").is_none());
+    }
+
+    // Silence unused import warning (ParamSpec used implicitly via manifest).
+    #[allow(dead_code)]
+    fn _touch(_p: ParamSpec) {}
+}

@@ -1,0 +1,336 @@
+//! The training loop: artifacts + data -> metrics + checkpoints.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::BatchStream;
+use crate::metrics::{MetricLogger, SpikeDetector, StepRecord, Summary};
+use crate::runtime::{Manifest, Program, Runtime};
+
+use super::train_state::TrainState;
+use super::workbench::Workbench;
+
+/// Outcome summary of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub variant: String,
+    pub steps: u64,
+    pub final_loss: f64,
+    pub final_acc: f64,
+    /// Mean training accuracy over the last 10% of steps (curve tail).
+    pub tail_acc: f64,
+    pub eval_loss: Option<f64>,
+    pub eval_acc: Option<f64>,
+    pub spike_events: usize,
+    pub spike_fraction: f64,
+    pub mean_step_ms: f64,
+    pub metrics_path: PathBuf,
+    pub checkpoint_path: PathBuf,
+}
+
+/// Orchestrates one run: loads programs, owns the step loop.
+pub struct Trainer<'wb> {
+    cfg: ExperimentConfig,
+    wb: &'wb Workbench,
+    runtime: Runtime,
+    train_program: Program,
+    eval_program: Program,
+    init_program: Program,
+}
+
+impl<'wb> Trainer<'wb> {
+    pub fn new(cfg: ExperimentConfig, wb: &'wb Workbench) -> Result<Self> {
+        let dir = cfg.variant_dir();
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            bail!(
+                "no artifacts at {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let runtime = Runtime::cpu()?;
+        let program_file = format!("{}.hlo.txt", cfg.mode.program_name());
+        let train_program = runtime
+            .load_program(&dir.join(&program_file))
+            .with_context(|| format!("loading {program_file}"))?;
+        let eval_program = runtime.load_program(&dir.join("eval_step.hlo.txt"))?;
+        let init_program = runtime.load_program(&dir.join("init.hlo.txt"))?;
+        Ok(Self { cfg, wb, runtime, train_program, eval_program, init_program })
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.cfg.variant_dir().join("manifest.json"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Build the initial state: fresh init, or checkpoint restore
+    /// (finetuning: optimizer moments reset, missing variant-specific
+    /// params filled from this variant's init).
+    pub fn initial_state(&self) -> Result<TrainState> {
+        let manifest = self.manifest()?;
+        let init_seed = self.cfg.seed as u32;
+        match &self.cfg.init_checkpoint {
+            None => TrainState::init(manifest, &self.init_program, init_seed),
+            Some(path) => {
+                let fresh = TrainState::init(
+                    manifest.clone(),
+                    &self.init_program,
+                    init_seed,
+                )?;
+                TrainState::load(manifest, path, &fresh.params, true)
+            }
+        }
+    }
+
+    /// Run the configured number of steps. Returns the report; metrics go
+    /// to `<out_dir>/metrics.jsonl`, the final state to
+    /// `<out_dir>/final.dkft`.
+    pub fn run(&self) -> Result<TrainReport> {
+        let mut state = self.initial_state()?;
+        self.run_from(&mut state)
+    }
+
+    pub fn run_from(&self, state: &mut TrainState) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let metrics_path = cfg.out_dir.join("metrics.jsonl");
+        let mut logger = MetricLogger::create(&metrics_path)?;
+        let mut spikes = SpikeDetector::new(0.1, 0.5);
+        let mut step_time = Summary::new();
+        let mut tail = Summary::new();
+        let tail_start = cfg.steps - (cfg.steps / 10).max(1);
+
+        let mut batches = BatchStream::spawn(
+            self.wb.dataset.clone(),
+            self.wb.meta.batch_size,
+            cfg.prefetch_depth,
+            cfg.steps as usize,
+            self.wb.batch_rng(cfg.seed),
+        );
+
+        let mut last = (f64::NAN, f64::NAN);
+        let mut rng = crate::rng::Pcg64::seed_stream(cfg.seed, 0x5eed);
+        // Hot-loop fast path (§Perf): keep the model/optimizer state as
+        // PJRT literals between steps, converting to host tensors only at
+        // checkpoint/eval boundaries. Saves two full state copies per step
+        // versus round-tripping through `TrainState::absorb`.
+        let mut hot = HotState::from_state(state)?;
+        for step in 0..cfg.steps {
+            let batch = batches
+                .next()
+                .context("batch stream ended early")?;
+            let lr = cfg.lr_at(step) as f32;
+            let noise_seed = rng.next_u32();
+            let t0 = Instant::now();
+            let (loss, acc, gnorm) =
+                self.train_step_literals(&mut hot, &batch, noise_seed, lr)?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            step_time.update(wall_ms);
+            spikes.observe(loss);
+            if step >= tail_start {
+                tail.update(acc);
+            }
+            last = (loss, acc);
+            logger.log(&StepRecord {
+                step,
+                loss,
+                acc,
+                lr: lr as f64,
+                grad_norm: gnorm,
+                wall_ms,
+            })?;
+
+            if cfg.checkpoint_every > 0
+                && (step + 1) % cfg.checkpoint_every == 0
+            {
+                hot.sync_to_state(state)?;
+                state.save(&cfg.out_dir.join(format!("step{:06}.dkft", step + 1)))?;
+            }
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                hot.sync_to_state(state)?;
+                let (el, ea) = self.evaluate(state, 4)?;
+                eprintln!(
+                    "[{}] step {:>5} loss {:.4} acc {:.4} | eval loss {:.4} acc {:.4}",
+                    cfg.variant, step + 1, loss, acc, el, ea
+                );
+            }
+        }
+        logger.flush()?;
+        hot.sync_to_state(state)?;
+
+        let checkpoint_path = cfg.out_dir.join("final.dkft");
+        state.save(&checkpoint_path)?;
+
+        let (eval_loss, eval_acc) = if cfg.eval_every > 0 {
+            let (l, a) = self.evaluate(state, 8)?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+
+        Ok(TrainReport {
+            variant: cfg.variant.clone(),
+            steps: cfg.steps,
+            final_loss: last.0,
+            final_acc: last.1,
+            tail_acc: tail.mean(),
+            eval_loss,
+            eval_acc,
+            spike_events: spikes.events(),
+            spike_fraction: spikes.spike_fraction(),
+            mean_step_ms: step_time.mean(),
+            metrics_path,
+            checkpoint_path,
+        })
+    }
+
+    /// Literal-resident variant of [`Trainer::train_step`] — the hot-loop
+    /// fast path. State stays as `xla::Literal`s between steps; the step
+    /// counter lives in `hot.step`.
+    pub fn train_step_literals(
+        &self,
+        hot: &mut HotState,
+        batch: &[i32],
+        noise_seed: u32,
+        lr: f32,
+    ) -> Result<(f64, f64, f64)> {
+        let n = hot.n_params;
+        let mut args = Vec::with_capacity(3 * n + 5);
+        args.append(&mut hot.state); // moved into args; rebuilt from outs
+        args.push(self.tokens_literal(batch)?);
+        args.push(xla::Literal::scalar(noise_seed));
+        args.push(xla::Literal::scalar(lr));
+        args.push(xla::Literal::scalar(self.cfg.clip as f32));
+        args.push(xla::Literal::scalar(hot.step as i32));
+        let mut outs = self.train_program.run(&args)?;
+        if outs.len() != 3 * n + 3 {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                outs.len(),
+                3 * n + 3
+            );
+        }
+        let gnorm = scalar_f64(&outs[3 * n + 2])?;
+        let acc = scalar_f64(&outs[3 * n + 1])?;
+        let loss = scalar_f64(&outs[3 * n])?;
+        outs.truncate(3 * n);
+        hot.state = outs;
+        hot.step += 1;
+        Ok((loss, acc, gnorm))
+    }
+
+    /// One optimizer step. `batch` is row-major `(batch, seq_len+1)` i32.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &[i32],
+        noise_seed: u32,
+        lr: f32,
+    ) -> Result<(f64, f64, f64)> {
+        let mut args = state.state_literals()?;
+        args.push(self.tokens_literal(batch)?);
+        args.push(xla::Literal::scalar(noise_seed));
+        args.push(xla::Literal::scalar(lr));
+        args.push(xla::Literal::scalar(self.cfg.clip as f32));
+        args.push(xla::Literal::scalar(state.step as i32));
+        let outs = self.train_program.run(&args)?;
+        let n = state.n_params();
+        if outs.len() != 3 * n + 3 {
+            bail!("train step returned {} outputs, expected {}", outs.len(), 3 * n + 3);
+        }
+        let loss = scalar_f64(&outs[3 * n])?;
+        let acc = scalar_f64(&outs[3 * n + 1])?;
+        let gnorm = scalar_f64(&outs[3 * n + 2])?;
+        state.absorb(&outs)?;
+        Ok((loss, acc, gnorm))
+    }
+
+    /// Mean (loss, acc) over up to `max_batches` validation batches.
+    pub fn evaluate(
+        &self,
+        state: &TrainState,
+        max_batches: usize,
+    ) -> Result<(f64, f64)> {
+        let batches = self.wb.dataset.valid_batches(self.wb.meta.batch_size);
+        let take = batches.len().min(max_batches.max(1));
+        anyhow::ensure!(take > 0, "validation split produced no batches");
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for (i, b) in batches.iter().take(take).enumerate() {
+            let mut args = state.param_literals()?;
+            args.push(self.tokens_literal(b)?);
+            // Fixed eval seed: deterministic feature draw per batch.
+            args.push(xla::Literal::scalar(0xe7a1u32 + i as u32));
+            let outs = self.eval_program.run(&args)?;
+            loss += scalar_f64(&outs[0])?;
+            acc += scalar_f64(&outs[1])?;
+        }
+        Ok((loss / take as f64, acc / take as f64))
+    }
+
+    fn tokens_literal(&self, batch: &[i32]) -> Result<xla::Literal> {
+        let rows = self.wb.meta.batch_size as i64;
+        let cols = (self.wb.meta.seq_len + 1) as i64;
+        anyhow::ensure!(
+            batch.len() as i64 == rows * cols,
+            "batch has {} tokens, expected {}",
+            batch.len(),
+            rows * cols
+        );
+        xla::Literal::vec1(batch)
+            .reshape(&[rows, cols])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+}
+
+fn scalar_f64(lit: &xla::Literal) -> Result<f64> {
+    lit.get_first_element::<f32>()
+        .map(|v| v as f64)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Literal-resident training state for the hot loop (§Perf): the flat
+/// `params ++ opt_m ++ opt_v` literal vector in manifest order, avoiding
+/// the Tensor<->Literal conversions of [`TrainState`] on every step.
+pub struct HotState {
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    step: u64,
+}
+
+impl HotState {
+    pub fn from_state(state: &TrainState) -> Result<Self> {
+        Ok(Self {
+            state: state.state_literals()?,
+            n_params: state.n_params(),
+            step: state.step,
+        })
+    }
+
+    /// Write the literal state back into the host-tensor mirror (for
+    /// checkpointing / eval).
+    pub fn sync_to_state(&self, state: &mut TrainState) -> Result<()> {
+        use crate::runtime::literal_to_tensor;
+        anyhow::ensure!(self.state.len() == 3 * self.n_params);
+        for i in 0..self.n_params {
+            state.params[i] = literal_to_tensor(&self.state[i])?;
+            state.opt_m[i] =
+                literal_to_tensor(&self.state[self.n_params + i])?;
+            state.opt_v[i] =
+                literal_to_tensor(&self.state[2 * self.n_params + i])?;
+        }
+        state.step = self.step;
+        Ok(())
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}

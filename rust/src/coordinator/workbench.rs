@@ -1,0 +1,95 @@
+//! Shared experiment setup: corpus synthesis, BPE training, dataset
+//! assembly — cached on disk so multi-run sweeps (Figs. 2-5) pay the cost
+//! once per (seed, size) rather than once per run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::{CorpusGenerator, CorpusSpec, TokenDataset};
+use crate::rng::Pcg64;
+use crate::runtime::ModelMeta;
+use crate::tokenizer::{Bpe, BpeTrainer};
+
+/// Prepared data context for a model config.
+pub struct Workbench {
+    pub meta: ModelMeta,
+    pub bpe: Bpe,
+    pub dataset: Arc<TokenDataset>,
+    pub cache_dir: PathBuf,
+}
+
+impl Workbench {
+    /// Build (or load from cache) the corpus, tokenizer and dataset for a
+    /// model config. `data_seed` controls corpus synthesis only — model
+    /// init/order seeds are separate, so data is shared across variants.
+    pub fn prepare(
+        artifacts_dir: &Path,
+        model_config: &str,
+        corpus_docs: usize,
+        data_seed: u64,
+        cache_dir: &Path,
+    ) -> Result<Self> {
+        let meta =
+            ModelMeta::load(&artifacts_dir.join(model_config).join("meta.json"))
+                .with_context(|| {
+                    format!(
+                        "loading meta for {model_config} — run `make artifacts`?"
+                    )
+                })?;
+        std::fs::create_dir_all(cache_dir)?;
+
+        // Corpus: cached as plain text.
+        let corpus_path =
+            cache_dir.join(format!("corpus_s{data_seed}_d{corpus_docs}.txt"));
+        let corpus = if corpus_path.exists() {
+            std::fs::read_to_string(&corpus_path)?
+        } else {
+            let mut gen =
+                CorpusGenerator::new(CorpusSpec::default(), data_seed);
+            let text = gen.documents(corpus_docs);
+            std::fs::write(&corpus_path, &text)?;
+            text
+        };
+
+        // BPE: cached in the line format of `Bpe::save`.
+        let bpe_path = cache_dir.join(format!(
+            "bpe_v{}_s{data_seed}_d{corpus_docs}.bpe",
+            meta.vocab_size
+        ));
+        let bpe = if bpe_path.exists() {
+            Bpe::load(&bpe_path)?
+        } else {
+            let trained =
+                BpeTrainer::new(meta.vocab_size).train(corpus.as_bytes())?;
+            trained.save(&bpe_path)?;
+            trained
+        };
+        anyhow::ensure!(
+            bpe.vocab_size() <= meta.vocab_size,
+            "tokenizer vocab {} exceeds model vocab {}",
+            bpe.vocab_size(),
+            meta.vocab_size
+        );
+
+        let dataset = Arc::new(TokenDataset::from_text(
+            &corpus,
+            &bpe,
+            meta.seq_len,
+            0.05,
+        )?);
+        Ok(Self {
+            meta,
+            bpe,
+            dataset,
+            cache_dir: cache_dir.to_path_buf(),
+        })
+    }
+
+    /// Seeded RNG for batch sampling, derived from a run seed so different
+    /// variants see identical batch sequences under the same seed.
+    pub fn batch_rng(&self, run_seed: u64) -> Pcg64 {
+        Pcg64::seed_stream(run_seed, 0xba7c4)
+    }
+}

@@ -1,0 +1,339 @@
+//! Synthetic C4-like corpus generator.
+//!
+//! Documents are built from a procedurally generated lexicon:
+//!
+//! * content words drawn from a Zipf distribution (frequent short stems,
+//!   long tail), partitioned into topics;
+//! * each document samples a topic and mixes topic words with a shared
+//!   core vocabulary, so there is *learnable long-range structure*
+//!   (topic consistency) as well as local structure (syntax templates);
+//! * sentences follow simple grammatical templates with function words,
+//!   inflection suffixes and punctuation.
+//!
+//! This yields text whose unigram/bigram statistics and document shape
+//! resemble web text closely enough for BPE training and next-token
+//! curves, while being fully reproducible from a seed.
+
+use crate::rng::Pcg64;
+
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ou"];
+const ONSETS: &[&str] = &[
+    "b", "c", "d", "f", "g", "h", "j", "k", "l", "m", "n", "p", "r", "s",
+    "t", "v", "w", "br", "ch", "cl", "dr", "fl", "gr", "pl", "pr", "sh",
+    "sl", "st", "str", "th", "tr",
+];
+const CODAS: &[&str] =
+    &["", "", "", "n", "r", "s", "t", "l", "m", "nd", "st", "rk", "nt"];
+
+const DETERMINERS: &[&str] = &["the", "a", "this", "that", "each", "some"];
+const PREPOSITIONS: &[&str] =
+    &["of", "in", "on", "with", "from", "over", "under", "through"];
+const CONJUNCTIONS: &[&str] = &["and", "but", "while", "because", "so"];
+const PRONOUNS: &[&str] = &["it", "they", "we", "she", "he"];
+const AUXILIARIES: &[&str] = &["is", "was", "can", "will", "must", "may"];
+
+/// Corpus shape parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    /// Number of distinct content stems in the lexicon.
+    pub lexicon_size: usize,
+    /// Number of topics partitioning the content lexicon.
+    pub n_topics: usize,
+    /// Zipf exponent for stem frequencies (web text ~ 1.0-1.2).
+    pub zipf_s: f64,
+    /// Sentences per document: uniform in [min, max].
+    pub sentences_per_doc: (usize, usize),
+    /// Probability a content slot uses the document topic's sub-lexicon.
+    pub topic_adherence: f64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        Self {
+            lexicon_size: 2000,
+            n_topics: 8,
+            zipf_s: 1.1,
+            sentences_per_doc: (3, 9),
+            topic_adherence: 0.7,
+        }
+    }
+}
+
+/// Deterministic document generator.
+pub struct CorpusGenerator {
+    spec: CorpusSpec,
+    nouns: Vec<String>,
+    verbs: Vec<String>,
+    adjectives: Vec<String>,
+    /// Cumulative Zipf distribution over lexicon ranks.
+    zipf_cdf: Vec<f64>,
+    rng: Pcg64,
+}
+
+impl CorpusGenerator {
+    pub fn new(spec: CorpusSpec, seed: u64) -> Self {
+        let mut rng = Pcg64::seed_stream(seed, 0xc0e9);
+        let mut lex_rng = rng.split();
+        let n = spec.lexicon_size;
+        let nouns = (0..n).map(|_| make_stem(&mut lex_rng)).collect();
+        let verbs = (0..n / 2).map(|_| make_stem(&mut lex_rng)).collect();
+        let adjectives = (0..n / 3).map(|_| make_stem(&mut lex_rng)).collect();
+        let mut zipf_cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(spec.zipf_s);
+            zipf_cdf.push(acc);
+        }
+        for v in &mut zipf_cdf {
+            *v /= acc;
+        }
+        Self { spec, nouns, verbs, adjectives, zipf_cdf, rng }
+    }
+
+    /// One document: topic-consistent sentences separated by spaces,
+    /// terminated by a newline (the document boundary the BPE trainer and
+    /// loader both respect).
+    pub fn document(&mut self) -> String {
+        let topic = self.rng.next_range(self.spec.n_topics as u64) as usize;
+        let (lo, hi) = self.spec.sentences_per_doc;
+        let n_sentences = lo + self.rng.next_range((hi - lo + 1) as u64) as usize;
+        let mut doc = String::new();
+        for i in 0..n_sentences {
+            if i > 0 {
+                doc.push(' ');
+            }
+            let s = self.sentence(topic);
+            doc.push_str(&s);
+        }
+        doc.push('\n');
+        doc
+    }
+
+    /// Generate `n` documents concatenated.
+    pub fn documents(&mut self, n: usize) -> String {
+        let mut out = String::new();
+        for _ in 0..n {
+            out.push_str(&self.document());
+        }
+        out
+    }
+
+    fn sentence(&mut self, topic: usize) -> String {
+        let template = self.rng.next_range(4);
+        let mut s = match template {
+            0 => format!(
+                "{} {} {} {} {} {}",
+                pick(&mut self.rng, DETERMINERS),
+                self.adjective(topic),
+                self.noun(topic),
+                self.verb(topic),
+                pick(&mut self.rng, DETERMINERS),
+                self.noun(topic),
+            ),
+            1 => format!(
+                "{} {} {} {} {} {}",
+                pick(&mut self.rng, PRONOUNS),
+                pick(&mut self.rng, AUXILIARIES),
+                self.verb(topic),
+                pick(&mut self.rng, PREPOSITIONS),
+                pick(&mut self.rng, DETERMINERS),
+                self.noun(topic),
+            ),
+            2 => format!(
+                "{} {} {} {} {} {} {} {}",
+                pick(&mut self.rng, DETERMINERS),
+                self.noun(topic),
+                pick(&mut self.rng, PREPOSITIONS),
+                pick(&mut self.rng, DETERMINERS),
+                self.noun(topic),
+                pick(&mut self.rng, AUXILIARIES),
+                self.adjective(topic),
+                pick(&mut self.rng, CONJUNCTIONS),
+            ),
+            _ => format!(
+                "{} {} {} {}",
+                pick(&mut self.rng, DETERMINERS),
+                self.noun(topic),
+                pick(&mut self.rng, AUXILIARIES),
+                self.adjective(topic),
+            ),
+        };
+        s.push('.');
+        // Capitalize.
+        if let Some(c) = s.get(0..1) {
+            let up = c.to_uppercase();
+            s.replace_range(0..1, &up);
+        }
+        s
+    }
+
+    /// Draw a lexicon rank ~ Zipf, optionally restricted to the topic's
+    /// slice of the lexicon.
+    fn zipf_rank(&mut self, len: usize, topic: Option<usize>) -> usize {
+        let u = self.rng.next_f64();
+        let rank = match self.zipf_cdf.binary_search_by(|p| {
+            p.partial_cmp(&u).unwrap()
+        }) {
+            Ok(i) | Err(i) => i.min(self.zipf_cdf.len() - 1),
+        };
+        match topic {
+            None => rank % len,
+            Some(t) => {
+                // Map the rank into the topic's stripe of the word list.
+                let stripe = len / self.spec.n_topics;
+                t * stripe + (rank % stripe.max(1))
+            }
+        }
+    }
+
+    fn topic_or_core(&mut self, topic: usize) -> Option<usize> {
+        (self.rng.next_f64() < self.spec.topic_adherence).then_some(topic)
+    }
+
+    fn noun(&mut self, topic: usize) -> String {
+        let t = self.topic_or_core(topic);
+        let idx = self.zipf_rank(self.nouns.len(), t);
+        let word = &self.nouns[idx];
+        if self.rng.next_f64() < 0.25 {
+            format!("{word}s")
+        } else {
+            word.clone()
+        }
+    }
+
+    fn verb(&mut self, topic: usize) -> String {
+        let t = self.topic_or_core(topic);
+        let idx = self.zipf_rank(self.verbs.len(), t);
+        let word = &self.verbs[idx];
+        match self.rng.next_range(3) {
+            0 => format!("{word}ed"),
+            1 => format!("{word}ing"),
+            _ => word.clone(),
+        }
+    }
+
+    fn adjective(&mut self, topic: usize) -> String {
+        let t = self.topic_or_core(topic);
+        let idx = self.zipf_rank(self.adjectives.len(), t);
+        self.adjectives[idx].clone()
+    }
+}
+
+fn pick<'a>(rng: &mut Pcg64, options: &[&'a str]) -> &'a str {
+    options[rng.next_range(options.len() as u64) as usize]
+}
+
+fn make_stem(rng: &mut Pcg64) -> String {
+    let syllables = 1 + rng.next_range(3) as usize;
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(pick(rng, ONSETS));
+        w.push_str(pick(rng, VOWELS));
+    }
+    w.push_str(pick(rng, CODAS));
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = CorpusGenerator::new(CorpusSpec::default(), 7);
+        let mut b = CorpusGenerator::new(CorpusSpec::default(), 7);
+        assert_eq!(a.documents(5), b.documents(5));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = CorpusGenerator::new(CorpusSpec::default(), 1);
+        let mut b = CorpusGenerator::new(CorpusSpec::default(), 2);
+        assert_ne!(a.documents(3), b.documents(3));
+    }
+
+    #[test]
+    fn documents_end_with_newline_and_are_nonempty() {
+        let mut g = CorpusGenerator::new(CorpusSpec::default(), 3);
+        for _ in 0..20 {
+            let d = g.document();
+            assert!(d.ends_with('\n'));
+            assert!(d.len() > 20, "doc too short: {d:?}");
+            assert!(!d.trim_end().contains('\n'), "one doc per line");
+        }
+    }
+
+    #[test]
+    fn word_frequencies_are_heavy_tailed() {
+        let mut g = CorpusGenerator::new(CorpusSpec::default(), 11);
+        let text = g.documents(400);
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w).or_insert(0) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // Top word should dominate the median word by a large factor.
+        let median = freqs[freqs.len() / 2];
+        assert!(
+            freqs[0] > median * 10,
+            "top={} median={median}",
+            freqs[0]
+        );
+    }
+
+    #[test]
+    fn topic_stripes_partition_the_lexicon() {
+        // With full topic adherence, the content words drawn for topic t
+        // must come from topic t's stripe of the word lists — the
+        // mechanism that gives documents learnable long-range structure.
+        let spec = CorpusSpec { topic_adherence: 1.0, ..Default::default() };
+        let mut g = CorpusGenerator::new(spec.clone(), 17);
+        let stripe = g.nouns.len() / spec.n_topics;
+        for topic in 0..spec.n_topics {
+            for _ in 0..50 {
+                let idx = g.zipf_rank(g.nouns.len(), Some(topic));
+                assert!(
+                    (topic * stripe..(topic + 1) * stripe).contains(&idx),
+                    "topic {topic} drew rank {idx} outside its stripe"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topic_words_differ_across_topics() {
+        // Sentences forced to different topics share only function words.
+        let spec = CorpusSpec { topic_adherence: 1.0, ..Default::default() };
+        let mut g = CorpusGenerator::new(spec, 19);
+        let function_words: std::collections::HashSet<&str> = DETERMINERS
+            .iter()
+            .chain(PREPOSITIONS)
+            .chain(CONJUNCTIONS)
+            .chain(PRONOUNS)
+            .chain(AUXILIARIES)
+            .copied()
+            .collect();
+        let content = |s: &str| {
+            s.to_lowercase()
+                .split_whitespace()
+                .map(|w| w.trim_matches('.').to_string())
+                .filter(|w| !function_words.contains(w.as_str()))
+                .collect::<std::collections::HashSet<_>>()
+        };
+        let a: std::collections::HashSet<_> = (0..30)
+            .flat_map(|_| content(&g.sentence(0)))
+            .collect();
+        let b: std::collections::HashSet<_> = (0..30)
+            .flat_map(|_| content(&g.sentence(4)))
+            .collect();
+        let inter = a.intersection(&b).count() as f64;
+        let union = a.union(&b).count() as f64;
+        assert!(
+            inter / union < 0.2,
+            "topics should use mostly disjoint content words (jaccard {})",
+            inter / union
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Data substrate: synthetic corpus, tokenized dataset, streaming batcher.
+//!
+//! The paper trains on C4. That corpus (and the pretrained Gemma weights
+//! that digested it) is not available here, so [`corpus`] synthesizes a
+//! C4-like corpus: Zipf-distributed vocabulary, topic-conditioned content
+//! words, grammatical sentence templates and document structure — enough
+//! statistical signal for next-token prediction curves to be meaningful,
+//! which is all the experiments need (DESIGN.md section 2).
+//!
+//! [`loader`] turns text + BPE into a token stream and serves shuffled
+//! `(batch, seq_len + 1)` windows; [`loader::BatchStream`] adds a
+//! prefetch thread with bounded-channel backpressure so tokenization never
+//! blocks the train loop.
+
+pub mod corpus;
+pub mod loader;
+
+pub use corpus::{CorpusGenerator, CorpusSpec};
+pub use loader::{BatchStream, TokenDataset};

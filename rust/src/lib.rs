@@ -1,0 +1,29 @@
+//! DARKFormer — Data-Aware Random-feature Kernel transformer, full-stack
+//! reproduction.
+//!
+//! Three layers (see DESIGN.md):
+//! 1. **Pallas kernels** (`python/compile/kernels/`) — PRF feature maps and
+//!    chunked causal linear attention, AOT-lowered to HLO text.
+//! 2. **JAX model** (`python/compile/`) — Gemma-style decoder with six
+//!    attention variants; `make artifacts` lowers init/train/eval steps.
+//! 3. **This crate** — the runtime coordinator: loads the HLO artifacts via
+//!    PJRT, owns data, training loops, experiments and benches. Python is
+//!    never on the training path.
+//! The crate also contains a pure-Rust reproduction of the paper's theory
+//! ([`rfa`]): PRF estimators, the optimal importance-sampling proposal of
+//! Theorem 3.2, and Monte-Carlo variance measurement.
+
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod rfa;
+pub mod rng;
+pub mod runtime;
+pub mod ser;
+pub mod tokenizer;

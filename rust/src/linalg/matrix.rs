@@ -1,0 +1,462 @@
+//! Row-major dense matrix with the decompositions the RFA analysis needs.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense `rows x cols` matrix of `f64`, row-major.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            write!(f, "  [")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        let data = rows.iter().flatten().copied().collect();
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn diag(values: &[f64]) -> Self {
+        let n = values.len();
+        let mut m = Self::zeros(n, n);
+        for (i, &v) in values.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // ikj loop order: streams over `other`'s rows, cache-friendly for
+        // row-major layout.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|a| a * a).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute entrywise difference.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Cholesky factorization `A = L L^T` for symmetric positive definite
+    /// `A`. Returns lower-triangular `L`, or `None` if not SPD.
+    pub fn cholesky(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "cholesky needs a square matrix");
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve `A x = b` for SPD `A` via Cholesky.
+    pub fn solve_spd(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let l = self.cholesky()?;
+        let n = self.rows;
+        // Forward substitution: L y = b.
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= l[(i, k)] * y[k];
+            }
+            y[i] = sum / l[(i, i)];
+        }
+        // Back substitution: L^T x = y.
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= l[(k, i)] * x[k];
+            }
+            x[i] = sum / l[(i, i)];
+        }
+        Some(x)
+    }
+
+    /// Inverse of an SPD matrix via Cholesky column solves.
+    pub fn inverse_spd(&self) -> Option<Matrix> {
+        let n = self.rows;
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for c in 0..n {
+            e[c] = 1.0;
+            let x = self.solve_spd(&e)?;
+            e[c] = 0.0;
+            for r in 0..n {
+                inv[(r, c)] = x[r];
+            }
+        }
+        Some(inv)
+    }
+
+    /// General inverse via Gauss–Jordan with partial pivoting. Returns
+    /// `None` for (numerically) singular matrices.
+    pub fn inverse(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            // Pivot.
+            let pivot = (col..n)
+                .max_by(|&i, &j| {
+                    a[(i, col)].abs().partial_cmp(&a[(j, col)].abs()).unwrap()
+                })
+                .unwrap();
+            if a[(pivot, col)].abs() < 1e-14 {
+                return None;
+            }
+            if pivot != col {
+                for k in 0..n {
+                    a.data.swap(pivot * n + k, col * n + k);
+                    inv.data.swap(pivot * n + k, col * n + k);
+                }
+            }
+            let d = a[(col, col)];
+            for k in 0..n {
+                a[(col, k)] /= d;
+                inv[(col, k)] /= d;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[(r, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for k in 0..n {
+                    a[(r, k)] -= f * a[(col, k)];
+                    inv[(r, k)] -= f * inv[(col, k)];
+                }
+            }
+        }
+        Some(inv)
+    }
+
+    /// Symmetric eigendecomposition by the cyclic Jacobi method.
+    ///
+    /// Returns `(eigenvalues, eigenvectors)` with eigenvectors as columns,
+    /// sorted by descending eigenvalue. Suitable for the small (d <= 256)
+    /// covariance matrices the RFA analysis works with.
+    pub fn jacobi_eigen(&self) -> (Vec<f64>, Matrix) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut v = Matrix::identity(n);
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for r in 0..n {
+                for c in r + 1..n {
+                    off += a[(r, c)] * a[(r, c)];
+                }
+            }
+            if off.sqrt() < super::TOL * (1.0 + a.frobenius_norm()) {
+                break;
+            }
+            for p in 0..n {
+                for q in p + 1..n {
+                    let apq = a[(p, q)];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * apq);
+                    let t = theta.signum()
+                        / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    // Rotate rows/cols p and q of A.
+                    for k in 0..n {
+                        let akp = a[(k, p)];
+                        let akq = a[(k, q)];
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[(p, k)];
+                        let aqk = a[(q, k)];
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let vkp = v[(k, p)];
+                        let vkq = v[(k, q)];
+                        v[(k, p)] = c * vkp - s * vkq;
+                        v[(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        let mut pairs: Vec<(f64, usize)> =
+            (0..n).map(|i| (a[(i, i)], i)).collect();
+        pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+        let eigvals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let mut eigvecs = Matrix::zeros(n, n);
+        for (new_c, &(_, old_c)) in pairs.iter().enumerate() {
+            for r in 0..n {
+                eigvecs[(r, new_c)] = v[(r, old_c)];
+            }
+        }
+        (eigvals, eigvecs)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} !~ {b}");
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Matrix::from_rows(&[vec![1.0, -2.0], vec![0.5, 3.0]]);
+        let i = Matrix::identity(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose()[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = Matrix::from_rows(&[
+            vec![4.0, 2.0, 0.6],
+            vec![2.0, 5.0, 1.0],
+            vec![0.6, 1.0, 3.0],
+        ]);
+        let l = a.cholesky().unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(a.cholesky().is_none());
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        let a = Matrix::from_rows(&[vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let x = a.solve_spd(&[1.0, 2.0]).unwrap();
+        // 4x + y = 1 ; x + 3y = 2  =>  x = 1/11, y = 7/11
+        assert_close(x[0], 1.0 / 11.0, 1e-12);
+        assert_close(x[1], 7.0 / 11.0, 1e-12);
+    }
+
+    #[test]
+    fn inverse_spd_and_general_agree() {
+        let a = Matrix::from_rows(&[
+            vec![2.0, 0.5, 0.1],
+            vec![0.5, 1.5, 0.2],
+            vec![0.1, 0.2, 1.0],
+        ]);
+        let i1 = a.inverse_spd().unwrap();
+        let i2 = a.inverse().unwrap();
+        assert!(i1.max_abs_diff(&i2) < 1e-10);
+        assert!(a.matmul(&i1).max_abs_diff(&Matrix::identity(3)) < 1e-10);
+    }
+
+    #[test]
+    fn inverse_rejects_singular() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(a.inverse().is_none());
+    }
+
+    #[test]
+    fn jacobi_diagonal_matrix() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let (vals, _) = a.jacobi_eigen();
+        assert_close(vals[0], 3.0, 1e-12);
+        assert_close(vals[1], 2.0, 1e-12);
+        assert_close(vals[2], 1.0, 1e-12);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_symmetric() {
+        let a = Matrix::from_rows(&[
+            vec![2.0, 1.0, 0.3],
+            vec![1.0, 3.0, -0.5],
+            vec![0.3, -0.5, 1.5],
+        ]);
+        let (vals, vecs) = a.jacobi_eigen();
+        let rec = vecs.matmul(&Matrix::diag(&vals)).matmul(&vecs.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-9, "diff={}", a.max_abs_diff(&rec));
+        // Eigenvectors orthonormal.
+        let g = vecs.transpose().matmul(&vecs);
+        assert!(g.max_abs_diff(&Matrix::identity(3)) < 1e-9);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, _) = a.jacobi_eigen();
+        assert_close(vals[0], 3.0, 1e-12);
+        assert_close(vals[1], 1.0, 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let y = a.matvec(&[5.0, 6.0]);
+        assert_eq!(y, vec![17.0, 39.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate (f64, row-major).
+//!
+//! Powers the pure-Rust random-feature analysis in [`crate::rfa`]: building
+//! anisotropic covariances, Cholesky-sampling Gaussians, and evaluating the
+//! closed-form optimal proposal of Theorem 3.2, which needs
+//! `(I + 2L)(I - 2L)^{-1}` and eigen-decompositions. Deliberately small —
+//! just what the reproduction needs, tested against hand-computable cases.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// Machine tolerance used by the iterative routines.
+pub const TOL: f64 = 1e-12;

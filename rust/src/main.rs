@@ -1,0 +1,363 @@
+//! `darkformer` — launcher CLI for the DARKFormer reproduction.
+//!
+//! Commands (see README for a walkthrough):
+//!
+//! ```text
+//! darkformer train      [--config cfg.toml] [--variant V] [--steps N] ...
+//! darkformer eval       --ckpt path [--variant V] ...
+//! darkformer exp fig1|fig2|fig3|fig4|fig5|variance|approx|sigma [...]
+//! darkformer data corpus|tokenizer [...]
+//! darkformer info       [--artifacts DIR]
+//! ```
+//!
+//! Python never runs here: all compute comes from `artifacts/*.hlo.txt`
+//! (built once by `make artifacts`) executed through PJRT.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use darkformer::cli::Args;
+use darkformer::config::{ExperimentConfig, TrainMode};
+use darkformer::coordinator::experiments::{self, ExpContext};
+use darkformer::coordinator::{Trainer, Workbench};
+use darkformer::data::{CorpusGenerator, CorpusSpec};
+use darkformer::runtime::{Manifest, ModelMeta};
+use darkformer::tokenizer::BpeTrainer;
+
+const USAGE: &str = "\
+darkformer — Data-Aware Random Feature Kernel transformer (paper reproduction)
+
+USAGE:
+  darkformer train   [--config FILE] [--model CFG] [--variant V] [--steps N]
+                     [--lr F] [--clip F] [--mode full|qkv] [--seed N]
+                     [--ckpt FILE] [--out DIR] [--eval-every N] [--docs N]
+  darkformer eval    --ckpt FILE [--model CFG] [--variant V] [--out DIR]
+  darkformer exp     fig1|fig2|fig3|fig4|fig5|variance|approx|sigma  [options]
+  darkformer data    corpus --out FILE [--docs N] [--seed N]
+  darkformer data    tokenizer --corpus FILE --out FILE [--vocab N]
+  darkformer info    [--artifacts DIR] [--model CFG]
+
+Common exp options: --model CFG --artifacts DIR --out DIR --seed N
+  fig2:   --phase pretrain|finetune|both --steps N --pretrain-steps N --lr F
+  fig3/4: --steps N --pretrain-steps N --lr F
+  fig5:   --steps N --pretrain-steps N --lrs a,b,c,...
+  fig1:   --seq-lens a,b,c --reps N
+  variance: --dim N --m N --eps-grid a,b,c
+  approx:   --dim N --m-grid a,b,c --eps F
+  sigma:    --ckpt FILE   (learned Sigma geometry of a DARKFormer ckpt)
+";
+
+fn main() -> ExitCode {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        eprintln!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    match dispatch(raw) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let command = raw[0].clone();
+    let rest = raw[1..].to_vec();
+    match command.as_str() {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "exp" => cmd_exp(rest),
+        "data" => cmd_data(rest),
+        "info" => cmd_info(rest),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+const TRAIN_FLAGS: &[&str] = &[
+    "config", "model", "variant", "steps", "lr", "clip", "mode", "seed",
+    "ckpt", "out", "eval-every", "ckpt-every", "docs", "artifacts",
+];
+
+fn train_config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(&PathBuf::from(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get("model") {
+        cfg.model_config = v.into();
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.into();
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.into();
+    }
+    cfg.steps = args.u64_or("steps", cfg.steps)?;
+    cfg.base_lr = args.f64_or("lr", cfg.base_lr)?;
+    cfg.clip = args.f64_or("clip", cfg.clip)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.eval_every = args.u64_or("eval-every", cfg.eval_every)?;
+    cfg.checkpoint_every = args.u64_or("ckpt-every", cfg.checkpoint_every)?;
+    cfg.corpus_docs = args.usize_or("docs", cfg.corpus_docs)?;
+    if let Some(v) = args.get("mode") {
+        cfg.mode = match v {
+            "full" => TrainMode::Full,
+            "qkv" => TrainMode::QkvOnly,
+            _ => bail!("--mode must be full or qkv"),
+        };
+    }
+    if let Some(v) = args.get("ckpt") {
+        cfg.init_checkpoint = Some(v.into());
+    }
+    if let Some(v) = args.get("out") {
+        cfg.out_dir = v.into();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(rest: Vec<String>) -> Result<()> {
+    let args = Args::parse(rest, TRAIN_FLAGS)?;
+    let cfg = train_config_from_args(&args)?;
+    let wb = Workbench::prepare(
+        &cfg.artifacts_dir,
+        &cfg.model_config,
+        cfg.corpus_docs,
+        cfg.seed,
+        &cfg.out_dir.join("_cache"),
+    )?;
+    let trainer = Trainer::new(cfg.clone(), &wb)?;
+    eprintln!(
+        "platform={} model={} variant={} steps={}",
+        trainer.platform(),
+        cfg.model_config,
+        cfg.variant,
+        cfg.steps
+    );
+    let report = trainer.run()?;
+    println!(
+        "final: loss={:.4} acc={:.4} tail_acc={:.4} spikes={} ms/step={:.1}",
+        report.final_loss,
+        report.final_acc,
+        report.tail_acc,
+        report.spike_events,
+        report.mean_step_ms
+    );
+    println!("metrics: {}", report.metrics_path.display());
+    println!("checkpoint: {}", report.checkpoint_path.display());
+    Ok(())
+}
+
+fn cmd_eval(rest: Vec<String>) -> Result<()> {
+    let args = Args::parse(rest, TRAIN_FLAGS)?;
+    let mut cfg = train_config_from_args(&args)?;
+    let ckpt = cfg
+        .init_checkpoint
+        .clone()
+        .context("eval requires --ckpt")?;
+    cfg.out_dir = args.str_or("out", "runs/eval").into();
+    let wb = Workbench::prepare(
+        &cfg.artifacts_dir,
+        &cfg.model_config,
+        cfg.corpus_docs,
+        cfg.seed,
+        &cfg.out_dir.join("_cache"),
+    )?;
+    let trainer = Trainer::new(cfg.clone(), &wb)?;
+    let state = trainer.initial_state()?;
+    let (loss, acc) = trainer.evaluate(&state, 16)?;
+    println!(
+        "eval {} ({}): loss={loss:.4} acc={acc:.4}",
+        ckpt.display(),
+        cfg.variant
+    );
+    Ok(())
+}
+
+const EXP_FLAGS: &[&str] = &[
+    "model", "artifacts", "out", "seed", "docs", "steps", "pretrain-steps",
+    "lr", "lrs", "phase", "variants", "dim", "m", "m-grid", "eps",
+    "eps-grid", "seq-lens", "reps", "ckpt",
+];
+
+fn cmd_exp(rest: Vec<String>) -> Result<()> {
+    if rest.is_empty() {
+        bail!("exp requires a figure id\n\n{USAGE}");
+    }
+    let which = rest[0].clone();
+    let args = Args::parse(rest[1..].to_vec(), EXP_FLAGS)?;
+    let ctx = ExpContext {
+        artifacts_dir: args.str_or("artifacts", "artifacts").into(),
+        model_config: args.str_or("model", "small"),
+        out_root: args.str_or("out", "runs/exp").into(),
+        seed: args.u64_or("seed", 42)?,
+        corpus_docs: args.usize_or("docs", 2000)?,
+    };
+    match which.as_str() {
+        "fig1" => {
+            let seq_lens: Vec<usize> = args
+                .f64_list_or("seq-lens", &[64.0, 128.0, 256.0, 512.0])?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let reps = args.usize_or("reps", 5)?;
+            experiments::fig1_scaling(&ctx, &seq_lens, reps)?;
+        }
+        "fig2" => {
+            let phase = args.str_or("phase", "both");
+            let steps = args.u64_or("steps", 200)?;
+            let pre = args.u64_or("pretrain-steps", 300)?;
+            let lr = args.f64_or("lr", 1e-3)?;
+            let variant_names =
+                args.str_list_or("variants", experiments::FIG2_VARIANTS);
+            let variants: Vec<&str> =
+                variant_names.iter().map(String::as_str).collect();
+            if phase == "pretrain" || phase == "both" {
+                experiments::fig2_pretrain(&ctx, &variants, steps, 3e-3)?;
+            }
+            if phase == "finetune" || phase == "both" {
+                experiments::fig2_finetune(&ctx, &variants, pre, steps, lr)?;
+            }
+        }
+        "fig3" => {
+            let steps = args.u64_or("steps", 600)?;
+            let pre = args.u64_or("pretrain-steps", 300)?;
+            let lr = args.f64_or("lr", 1e-3)?;
+            experiments::fig3_long_finetune(&ctx, pre, steps, lr)?;
+        }
+        "fig4" => {
+            let steps = args.u64_or("steps", 400)?;
+            let pre = args.u64_or("pretrain-steps", 300)?;
+            let lr = args.f64_or("lr", 1e-3)?;
+            experiments::fig4_qkv_finetune(&ctx, pre, steps, lr)?;
+        }
+        "fig5" => {
+            let steps = args.u64_or("steps", 120)?;
+            let pre = args.u64_or("pretrain-steps", 300)?;
+            let lrs = args.f64_list_or(
+                "lrs",
+                &[1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1],
+            )?;
+            experiments::fig5_lr_sweep(&ctx, pre, steps, &lrs)?;
+        }
+        "variance" => {
+            let d = args.usize_or("dim", 8)?;
+            let m = args.usize_or("m", 16)?;
+            let eps =
+                args.f64_list_or("eps-grid", &[0.0, 0.2, 0.4, 0.6, 0.8])?;
+            let (diag_err, off_err) =
+                experiments::sigma_star_isotropy_check(d);
+            eprintln!(
+                "Sigma* isotropy check (Thm 3.2.1): diag err {diag_err:.2e}, off-diag err {off_err:.2e}"
+            );
+            experiments::variance_table(&ctx.out_root, d, m, &eps, ctx.seed)?;
+        }
+        "approx" => {
+            let d = args.usize_or("dim", 8)?;
+            let m_grid: Vec<usize> = args
+                .f64_list_or("m-grid", &[4.0, 8.0, 16.0, 32.0, 64.0, 128.0])?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let eps = args.f64_or("eps", 0.8)?;
+            experiments::approx_table(&ctx.out_root, d, &m_grid, eps, ctx.seed)?;
+        }
+        "sigma" => {
+            let ckpt = args
+                .get("ckpt")
+                .context("exp sigma requires --ckpt <darkformer checkpoint>")?;
+            experiments::sigma_report(
+                std::path::Path::new(ckpt),
+                Some(&ctx.out_root.join("sigma.csv")),
+            )?;
+        }
+        other => bail!("unknown experiment {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn cmd_data(rest: Vec<String>) -> Result<()> {
+    if rest.is_empty() {
+        bail!("data requires corpus|tokenizer\n\n{USAGE}");
+    }
+    let which = rest[0].clone();
+    let args = Args::parse(
+        rest[1..].to_vec(),
+        &["out", "docs", "seed", "corpus", "vocab"],
+    )?;
+    match which.as_str() {
+        "corpus" => {
+            let out = PathBuf::from(
+                args.get("out").context("corpus requires --out")?,
+            );
+            let docs = args.usize_or("docs", 2000)?;
+            let seed = args.u64_or("seed", 42)?;
+            let mut gen = CorpusGenerator::new(CorpusSpec::default(), seed);
+            let text = gen.documents(docs);
+            if let Some(p) = out.parent() {
+                std::fs::create_dir_all(p)?;
+            }
+            std::fs::write(&out, &text)?;
+            println!(
+                "wrote {docs} documents ({} bytes) to {}",
+                text.len(),
+                out.display()
+            );
+        }
+        "tokenizer" => {
+            let corpus = PathBuf::from(
+                args.get("corpus").context("tokenizer requires --corpus")?,
+            );
+            let out = PathBuf::from(
+                args.get("out").context("tokenizer requires --out")?,
+            );
+            let vocab = args.usize_or("vocab", 1024)?;
+            let text = std::fs::read_to_string(&corpus)?;
+            let bpe = BpeTrainer::new(vocab).train(text.as_bytes())?;
+            bpe.save(&out)?;
+            println!(
+                "trained BPE vocab {} (requested {vocab}) -> {}",
+                bpe.vocab_size(),
+                out.display()
+            );
+        }
+        other => bail!("unknown data subcommand {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(rest: Vec<String>) -> Result<()> {
+    let args = Args::parse(rest, &["artifacts", "model"])?;
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let model = args.str_or("model", "tiny");
+    let meta = ModelMeta::load(&artifacts.join(&model).join("meta.json"))?;
+    println!(
+        "model {}: vocab={} d_model={} layers={} heads={} head_dim={} seq={} batch={} m={} r={}",
+        meta.name,
+        meta.vocab_size,
+        meta.d_model,
+        meta.n_layers,
+        meta.n_heads,
+        meta.head_dim,
+        meta.seq_len,
+        meta.batch_size,
+        meta.m_features,
+        meta.r_proj
+    );
+    for variant in &meta.variants {
+        let dir = artifacts.join(&model).join(variant);
+        match Manifest::load(&dir.join("manifest.json")) {
+            Ok(m) => println!(
+                "  {variant:<12} params={} ({} elements) programs={:?}",
+                m.n_params(),
+                m.total_elements(),
+                m.programs
+            ),
+            Err(_) => println!("  {variant:<12} (not built)"),
+        }
+    }
+    Ok(())
+}

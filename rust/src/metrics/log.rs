@@ -1,0 +1,198 @@
+//! JSONL metric logging: one object per training step, append-only, so
+//! experiment harnesses can re-plot curves without re-running.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::ser::{parse, Json};
+
+/// One training-step record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub acc: f64,
+    pub lr: f64,
+    pub grad_norm: f64,
+    pub wall_ms: f64,
+}
+
+impl StepRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"step\":{},\"loss\":{},\"acc\":{},\"lr\":{},\"grad_norm\":{},\"wall_ms\":{}}}",
+            self.step,
+            fmt_f64(self.loss),
+            fmt_f64(self.acc),
+            fmt_f64(self.lr),
+            fmt_f64(self.grad_norm),
+            fmt_f64(self.wall_ms)
+        )
+    }
+
+    fn from_json(v: &Json) -> Option<Self> {
+        Some(Self {
+            step: v.field("step")?.as_f64()? as u64,
+            loss: v.field("loss")?.as_f64()?,
+            acc: v.field("acc")?.as_f64()?,
+            lr: v.field("lr")?.as_f64()?,
+            grad_norm: v.field("grad_norm")?.as_f64()?,
+            wall_ms: v.field("wall_ms")?.as_f64()?,
+        })
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "\"nan\"".to_string()
+    } else if v > 0.0 {
+        "\"inf\"".to_string()
+    } else {
+        "\"-inf\"".to_string()
+    }
+}
+
+fn parse_f64(v: &Json) -> Option<f64> {
+    match v {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Append-only JSONL writer for step records.
+pub struct MetricLogger {
+    writer: BufWriter<std::fs::File>,
+}
+
+impl MetricLogger {
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(Self { writer: BufWriter::new(file) })
+    }
+
+    pub fn log(&mut self, record: &StepRecord) -> Result<()> {
+        writeln!(self.writer, "{}", record.to_json())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read all records back from a JSONL file. Non-finite values encoded
+    /// as strings ("nan"/"inf") are restored.
+    pub fn read_all(path: &Path) -> Result<Vec<StepRecord>> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut out = Vec::new();
+        for line in BufReader::new(file).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = parse(&line)
+                .with_context(|| format!("bad metric line: {line}"))?;
+            let rec = StepRecord {
+                step: v.field("step").and_then(|x| x.as_f64()).unwrap_or(0.0)
+                    as u64,
+                loss: v.field("loss").and_then(parse_f64).unwrap_or(f64::NAN),
+                acc: v.field("acc").and_then(parse_f64).unwrap_or(f64::NAN),
+                lr: v.field("lr").and_then(parse_f64).unwrap_or(0.0),
+                grad_norm: v
+                    .field("grad_norm")
+                    .and_then(parse_f64)
+                    .unwrap_or(f64::NAN),
+                wall_ms: v.field("wall_ms").and_then(parse_f64).unwrap_or(0.0),
+            };
+            out.push(rec);
+        }
+        Ok(out)
+    }
+}
+
+// Suppress unused warning for the structured parse helper used in tests.
+#[allow(dead_code)]
+fn _from_json_used(v: &Json) -> Option<StepRecord> {
+    StepRecord::from_json(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dkf_metrics_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn log_and_read_round_trip() {
+        let path = tmp("rt.jsonl");
+        let mut logger = MetricLogger::create(&path).unwrap();
+        let recs: Vec<StepRecord> = (0..5)
+            .map(|i| StepRecord {
+                step: i,
+                loss: 5.0 - i as f64 * 0.3,
+                acc: 0.1 * i as f64,
+                lr: 1e-3,
+                grad_norm: 1.5,
+                wall_ms: 12.5,
+            })
+            .collect();
+        for r in &recs {
+            logger.log(r).unwrap();
+        }
+        logger.flush().unwrap();
+        let loaded = MetricLogger::read_all(&path).unwrap();
+        assert_eq!(loaded, recs);
+    }
+
+    #[test]
+    fn non_finite_losses_survive() {
+        let path = tmp("nan.jsonl");
+        let mut logger = MetricLogger::create(&path).unwrap();
+        logger
+            .log(&StepRecord {
+                step: 1,
+                loss: f64::NAN,
+                acc: 0.0,
+                lr: 1.0,
+                grad_norm: f64::INFINITY,
+                wall_ms: 1.0,
+            })
+            .unwrap();
+        logger.flush().unwrap();
+        let loaded = MetricLogger::read_all(&path).unwrap();
+        assert!(loaded[0].loss.is_nan());
+        assert!(loaded[0].grad_norm.is_infinite());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let path = tmp("blank.jsonl");
+        std::fs::write(
+            &path,
+            "\n{\"step\":1,\"loss\":2.0,\"acc\":0.5,\"lr\":0.1,\"grad_norm\":1.0,\"wall_ms\":3.0}\n\n",
+        )
+        .unwrap();
+        let loaded = MetricLogger::read_all(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].step, 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics substrate: JSONL step logs, moving statistics, and the
+//! loss-spike detector behind the Fig. 5 stability analysis.
+
+mod log;
+mod stats;
+
+pub use log::{MetricLogger, StepRecord};
+pub use stats::{Ema, SpikeDetector, Summary};

@@ -1,0 +1,246 @@
+//! Streaming statistics: EMA, summary moments, and the loss-spike
+//! detector that quantifies Fig. 5's training-stability comparison.
+
+/// Exponential moving average.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    /// `alpha` is the update weight of the *new* observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Welford online mean/variance + extremes.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Loss-spike detector.
+///
+/// A *spike* is a step whose loss exceeds the trailing EMA by more than
+/// `threshold` (relative), or is non-finite — the paper's Fig. 5
+/// "instability phases". Consecutive spiking steps count as one event.
+#[derive(Debug, Clone)]
+pub struct SpikeDetector {
+    ema: Ema,
+    threshold: f64,
+    in_spike: bool,
+    events: usize,
+    spiking_steps: usize,
+    total_steps: usize,
+}
+
+impl SpikeDetector {
+    pub fn new(ema_alpha: f64, threshold: f64) -> Self {
+        Self {
+            ema: Ema::new(ema_alpha),
+            threshold,
+            in_spike: false,
+            events: 0,
+            spiking_steps: 0,
+            total_steps: 0,
+        }
+    }
+
+    /// Feed one loss value; returns whether this step is spiking.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        self.total_steps += 1;
+        let baseline = self.ema.value();
+        let spiking = match baseline {
+            _ if !loss.is_finite() => true,
+            None => false,
+            Some(b) => loss > b * (1.0 + self.threshold),
+        };
+        if spiking {
+            self.spiking_steps += 1;
+            if !self.in_spike {
+                self.events += 1;
+            }
+        } else {
+            // Only track baseline on non-spiking steps so a long spike
+            // does not get absorbed into the baseline.
+            if loss.is_finite() {
+                self.ema.update(loss);
+            }
+        }
+        self.in_spike = spiking;
+        spiking
+    }
+
+    /// Number of distinct spike events.
+    pub fn events(&self) -> usize {
+        self.events
+    }
+
+    /// Total steps flagged as spiking.
+    pub fn spiking_steps(&self) -> usize {
+        self.spiking_steps
+    }
+
+    /// Fraction of steps spent in spikes.
+    pub fn spike_fraction(&self) -> f64 {
+        if self.total_steps == 0 {
+            0.0
+        } else {
+            self.spiking_steps as f64 / self.total_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut ema = Ema::new(0.2);
+        for _ in 0..200 {
+            ema.update(3.0);
+        }
+        assert!((ema.value().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough() {
+        let mut ema = Ema::new(0.1);
+        assert_eq!(ema.update(5.0), 5.0);
+    }
+
+    #[test]
+    fn summary_matches_direct_computation() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.update(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((s.mean() - mean).abs() < 1e-12);
+        assert!((s.variance() - var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 16.0);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn detects_single_spike_event() {
+        let mut det = SpikeDetector::new(0.3, 0.5);
+        for _ in 0..20 {
+            det.observe(2.0);
+        }
+        det.observe(10.0);
+        det.observe(9.0);
+        for _ in 0..10 {
+            det.observe(2.0);
+        }
+        assert_eq!(det.events(), 1);
+        assert_eq!(det.spiking_steps(), 2);
+    }
+
+    #[test]
+    fn counts_separate_events() {
+        let mut det = SpikeDetector::new(0.3, 0.5);
+        for _ in 0..10 {
+            det.observe(1.0);
+        }
+        det.observe(5.0);
+        for _ in 0..5 {
+            det.observe(1.0);
+        }
+        det.observe(6.0);
+        for _ in 0..5 {
+            det.observe(1.0);
+        }
+        assert_eq!(det.events(), 2);
+    }
+
+    #[test]
+    fn nan_counts_as_spike() {
+        let mut det = SpikeDetector::new(0.3, 0.5);
+        for _ in 0..5 {
+            det.observe(1.0);
+        }
+        assert!(det.observe(f64::NAN));
+        assert_eq!(det.events(), 1);
+    }
+
+    #[test]
+    fn smooth_decreasing_loss_never_spikes() {
+        let mut det = SpikeDetector::new(0.2, 0.5);
+        let mut loss = 6.0;
+        for _ in 0..500 {
+            assert!(!det.observe(loss));
+            loss *= 0.995;
+        }
+        assert_eq!(det.events(), 0);
+        assert_eq!(det.spike_fraction(), 0.0);
+    }
+}

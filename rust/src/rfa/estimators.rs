@@ -1,0 +1,230 @@
+//! PRF softmax-kernel estimators (paper Section 2–4).
+//!
+//! One estimate of `exp(q . k)` from `m` projection draws:
+//!
+//! * [`Sampling::Isotropic`] — Performer: `omega ~ N(0, I)`, unweighted
+//!   (Lemma 2.1 makes this unbiased).
+//! * [`Sampling::Proposal`] — importance-sampled (Lemma 3.1 / Eq. 2):
+//!   `omega ~ psi`, each term weighted by `p_I(omega) / psi(omega)`.
+//! * [`Sampling::DataAware`] — DARKFormer (Prop. 4.1): `omega ~ N(0, Sigma)`,
+//!   unweighted. This estimates `exp(q^T Sigma k)` — the *data-aligned
+//!   kernel* — and equals, in expectation, the isotropic estimator of that
+//!   kernel re-weighted by `p_Sigma / p_I` (the importance-sampling
+//!   equivalence the paper proves).
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+use super::gaussian::MultivariateGaussian;
+
+/// Exact softmax kernel `exp(q . k)`.
+pub fn exact_softmax_kernel(q: &[f64], k: &[f64]) -> f64 {
+    let dot: f64 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+    dot.exp()
+}
+
+/// Exact data-aligned kernel `exp(q^T Sigma k)` (paper Eq. 3 estimand).
+pub fn exact_sigma_kernel(q: &[f64], k: &[f64], sigma: &Matrix) -> f64 {
+    let sk = sigma.matvec(k);
+    let dot: f64 = q.iter().zip(&sk).map(|(a, b)| a * b).sum();
+    dot.exp()
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn sq_norm(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// How the projection vectors are drawn.
+pub enum Sampling {
+    /// `omega ~ N(0, I_d)`, unweighted (Performer).
+    Isotropic,
+    /// `omega ~ proposal`, importance-weighted by `p_I / proposal`
+    /// (Lemma 3.1's estimator; with the Theorem 3.2 proposal this is the
+    /// minimum-variance scheme).
+    Proposal(MultivariateGaussian),
+    /// `omega ~ N(0, Sigma)`, unweighted — estimates `exp(q^T Sigma k)`
+    /// (DARKFormer's data-aligned kernel).
+    DataAware(MultivariateGaussian),
+}
+
+/// A PRF estimator with a fixed feature budget `m`.
+pub struct PrfEstimator {
+    pub m: usize,
+    pub sampling: Sampling,
+    dim: usize,
+    iso: MultivariateGaussian,
+}
+
+impl PrfEstimator {
+    pub fn new(dim: usize, m: usize, sampling: Sampling) -> Self {
+        let iso = MultivariateGaussian::new(Matrix::identity(dim))
+            .expect("identity is SPD");
+        Self { m, sampling, dim, iso }
+    }
+
+    /// Single-draw integrand `Z(q, k, omega)` of Lemma 2.1 (including the
+    /// importance weight when applicable).
+    ///
+    /// For `DataAware`, the `h` factors use the Mahalanobis norms
+    /// `q^T Sigma q`, `k^T Sigma k` (Eq. 3) so the estimator is unbiased
+    /// for the data-aligned kernel.
+    pub fn single_term(&self, q: &[f64], k: &[f64], omega: &[f64]) -> f64 {
+        match &self.sampling {
+            Sampling::Isotropic => {
+                (dot(omega, q) - 0.5 * sq_norm(q)).exp()
+                    * (dot(omega, k) - 0.5 * sq_norm(k)).exp()
+            }
+            Sampling::Proposal(psi) => {
+                let w =
+                    (self.iso.log_density(omega) - psi.log_density(omega)).exp();
+                w * (dot(omega, q) - 0.5 * sq_norm(q)).exp()
+                    * (dot(omega, k) - 0.5 * sq_norm(k)).exp()
+            }
+            Sampling::DataAware(ps) => {
+                let sigma = ps.cov();
+                let qs = dot(q, &sigma.matvec(q));
+                let ks = dot(k, &sigma.matvec(k));
+                (dot(omega, q) - 0.5 * qs).exp()
+                    * (dot(omega, k) - 0.5 * ks).exp()
+            }
+        }
+    }
+
+    fn draw(&self, rng: &mut Pcg64) -> Vec<f64> {
+        match &self.sampling {
+            Sampling::Isotropic => self.iso.sample(rng),
+            Sampling::Proposal(psi) => psi.sample(rng),
+            Sampling::DataAware(ps) => ps.sample(rng),
+        }
+    }
+
+    /// The estimand this estimator is unbiased for.
+    pub fn target(&self, q: &[f64], k: &[f64]) -> f64 {
+        match &self.sampling {
+            Sampling::Isotropic | Sampling::Proposal(_) => {
+                exact_softmax_kernel(q, k)
+            }
+            Sampling::DataAware(ps) => exact_sigma_kernel(q, k, ps.cov()),
+        }
+    }
+
+    /// One m-sample estimate `kappa_hat(q, k)` (Eq. 2 / Eq. 4).
+    pub fn estimate(&self, q: &[f64], k: &[f64], rng: &mut Pcg64) -> f64 {
+        let mut acc = 0.0;
+        for _ in 0..self.m {
+            let omega = self.draw(rng);
+            acc += self.single_term(q, k, &omega);
+        }
+        acc / self.m as f64
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfa::gaussian::anisotropic_covariance;
+
+    /// Mean of many independent estimates; tolerance scales with the
+    /// empirical std error.
+    fn mc_mean(
+        est: &PrfEstimator,
+        q: &[f64],
+        k: &[f64],
+        reps: usize,
+        rng: &mut Pcg64,
+    ) -> (f64, f64) {
+        let vals: Vec<f64> =
+            (0..reps).map(|_| est.estimate(q, k, rng)).collect();
+        let mean = vals.iter().sum::<f64>() / reps as f64;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+            / (reps - 1) as f64;
+        (mean, (var / reps as f64).sqrt())
+    }
+
+    #[test]
+    fn isotropic_prf_is_unbiased() {
+        let mut rng = Pcg64::seed(101);
+        let q = vec![0.3, -0.2, 0.1, 0.4];
+        let k = vec![-0.1, 0.2, 0.3, -0.2];
+        let est = PrfEstimator::new(4, 64, Sampling::Isotropic);
+        let (mean, se) = mc_mean(&est, &q, &k, 4000, &mut rng);
+        let exact = exact_softmax_kernel(&q, &k);
+        assert!(
+            (mean - exact).abs() < 5.0 * se + 1e-9,
+            "mean={mean} exact={exact} se={se}"
+        );
+    }
+
+    #[test]
+    fn importance_weighted_estimator_is_unbiased_for_softmax() {
+        let mut rng = Pcg64::seed(102);
+        let q = vec![0.2, 0.1, -0.3];
+        let k = vec![0.1, -0.2, 0.2];
+        let cov = anisotropic_covariance(3, 1.3, 0.5, &mut rng);
+        let psi = MultivariateGaussian::new(cov).unwrap();
+        let est = PrfEstimator::new(3, 64, Sampling::Proposal(psi));
+        let (mean, se) = mc_mean(&est, &q, &k, 4000, &mut rng);
+        let exact = exact_softmax_kernel(&q, &k);
+        assert!(
+            (mean - exact).abs() < 5.0 * se + 1e-9,
+            "mean={mean} exact={exact} se={se}"
+        );
+    }
+
+    #[test]
+    fn data_aware_estimator_is_unbiased_for_sigma_kernel() {
+        let mut rng = Pcg64::seed(103);
+        let q = vec![0.25, -0.15, 0.2];
+        let k = vec![-0.05, 0.3, 0.1];
+        let sigma = anisotropic_covariance(3, 0.8, 0.6, &mut rng);
+        let ps = MultivariateGaussian::new(sigma.clone()).unwrap();
+        let est = PrfEstimator::new(3, 64, Sampling::DataAware(ps));
+        let (mean, se) = mc_mean(&est, &q, &k, 4000, &mut rng);
+        let exact = exact_sigma_kernel(&q, &k, &sigma);
+        assert!(
+            (mean - exact).abs() < 5.0 * se + 1e-9,
+            "mean={mean} exact={exact} se={se}"
+        );
+    }
+
+    #[test]
+    fn sigma_identity_reduces_to_softmax_kernel() {
+        let q = vec![0.4, -0.2];
+        let k = vec![0.1, 0.3];
+        let exact = exact_softmax_kernel(&q, &k);
+        let viaid = exact_sigma_kernel(&q, &k, &Matrix::identity(2));
+        assert!((exact - viaid).abs() < 1e-14);
+    }
+
+    #[test]
+    fn isotropic_single_term_closed_form_second_moment() {
+        // E[Z^2] = exp(2|q+k|^2 - |q|^2 - |k|^2): validate the estimator
+        // plumbing against the analytic moment used in Appendix A.
+        let mut rng = Pcg64::seed(104);
+        let q = vec![0.2, 0.1];
+        let k = vec![-0.1, 0.15];
+        let est = PrfEstimator::new(2, 1, Sampling::Isotropic);
+        let n = 400_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let omega = est.iso.sample(&mut rng);
+            acc += est.single_term(&q, &k, &omega).powi(2);
+        }
+        let emp = acc / n as f64;
+        let qk: Vec<f64> = q.iter().zip(&k).map(|(a, b)| a + b).collect();
+        let analytic =
+            (2.0 * sq_norm(&qk) - sq_norm(&q) - sq_norm(&k)).exp();
+        assert!(
+            (emp - analytic).abs() / analytic < 0.02,
+            "emp={emp} analytic={analytic}"
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Multivariate Gaussian sampling and anisotropic covariance constructors.
+
+use crate::linalg::Matrix;
+use crate::rng::{GaussianExt, Pcg64};
+
+/// `N(0, Cov)` sampler backed by a Cholesky factor: `x = L z`, `z ~ N(0, I)`.
+#[derive(Debug, Clone)]
+pub struct MultivariateGaussian {
+    chol: Matrix,
+    cov: Matrix,
+}
+
+impl MultivariateGaussian {
+    /// Build from a symmetric positive-definite covariance.
+    pub fn new(cov: Matrix) -> Option<Self> {
+        let chol = cov.cholesky()?;
+        Some(Self { chol, cov })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.cov.rows()
+    }
+
+    pub fn cov(&self) -> &Matrix {
+        &self.cov
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let z = rng.gaussian_vec(self.dim());
+        self.chol.matvec(&z)
+    }
+
+    /// Log-density up to the `-d/2 log(2 pi)` constant-free full form.
+    pub fn log_density(&self, x: &[f64]) -> f64 {
+        let d = self.dim() as f64;
+        let y = self.cov.solve_spd(x).expect("covariance is SPD");
+        let quad: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let logdet = 2.0
+            * (0..self.dim())
+                .map(|i| self.chol[(i, i)].ln())
+                .sum::<f64>();
+        -0.5 * (quad + logdet + d * (2.0 * std::f64::consts::PI).ln())
+    }
+}
+
+/// Anisotropic covariance with eigenvalues interpolating between
+/// `base * (1 - eps)` and `base * (1 + eps)` (linear ramp), rotated by a
+/// random orthogonal basis so anisotropy is not axis-aligned.
+///
+/// `eps = 0` gives `base * I` (the isotropic control); larger `eps` gives a
+/// wider spread — the knob the paper's variance experiments turn.
+pub fn anisotropic_covariance(
+    d: usize,
+    base: f64,
+    eps: f64,
+    rng: &mut Pcg64,
+) -> Matrix {
+    assert!((0.0..1.0).contains(&eps), "eps must be in [0, 1)");
+    let eigvals: Vec<f64> = (0..d)
+        .map(|i| {
+            let t = if d > 1 { i as f64 / (d - 1) as f64 } else { 0.5 };
+            base * (1.0 - eps + 2.0 * eps * t)
+        })
+        .collect();
+    let q = random_orthogonal(d, rng);
+    q.matmul(&Matrix::diag(&eigvals)).matmul(&q.transpose())
+}
+
+/// Random orthogonal matrix via Gram–Schmidt on a Gaussian matrix
+/// (Haar-ish; exact Haar is not required for these experiments).
+pub fn random_orthogonal(d: usize, rng: &mut Pcg64) -> Matrix {
+    let mut q = Matrix::zeros(d, d);
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(d);
+    for _ in 0..d {
+        let mut v = rng.gaussian_vec(d);
+        for u in &cols {
+            let dot: f64 = v.iter().zip(u).map(|(a, b)| a * b).sum();
+            for (vi, ui) in v.iter_mut().zip(u) {
+                *vi -= dot * ui;
+            }
+        }
+        let norm: f64 = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+        assert!(norm > 1e-12, "degenerate Gram-Schmidt draw");
+        for vi in &mut v {
+            *vi /= norm;
+        }
+        cols.push(v);
+    }
+    for (c, col) in cols.iter().enumerate() {
+        for (r, &val) in col.iter().enumerate() {
+            q[(r, c)] = val;
+        }
+    }
+    q
+}
+
+/// Empirical covariance of a sample set (rows are observations).
+pub fn empirical_covariance(samples: &[Vec<f64>]) -> Matrix {
+    let n = samples.len();
+    assert!(n > 1);
+    let d = samples[0].len();
+    let mut mean = vec![0.0; d];
+    for s in samples {
+        for (m, &x) in mean.iter_mut().zip(s) {
+            *m += x;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut cov = Matrix::zeros(d, d);
+    for s in samples {
+        for i in 0..d {
+            for j in 0..d {
+                cov[(i, j)] += (s[i] - mean[i]) * (s[j] - mean[j]);
+            }
+        }
+    }
+    cov.scale(1.0 / (n as f64 - 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_match_requested_covariance() {
+        let mut rng = Pcg64::seed(17);
+        let cov = anisotropic_covariance(4, 0.2, 0.8, &mut rng);
+        let g = MultivariateGaussian::new(cov.clone()).unwrap();
+        let samples: Vec<Vec<f64>> =
+            (0..60_000).map(|_| g.sample(&mut rng)).collect();
+        let emp = empirical_covariance(&samples);
+        assert!(
+            emp.max_abs_diff(&cov) < 0.02,
+            "diff={}",
+            emp.max_abs_diff(&cov)
+        );
+    }
+
+    #[test]
+    fn isotropic_at_eps_zero() {
+        let mut rng = Pcg64::seed(5);
+        let cov = anisotropic_covariance(6, 0.3, 0.0, &mut rng);
+        assert!(cov.max_abs_diff(&Matrix::identity(6).scale(0.3)) < 1e-10);
+    }
+
+    #[test]
+    fn orthogonal_matrix_is_orthogonal() {
+        let mut rng = Pcg64::seed(23);
+        let q = random_orthogonal(8, &mut rng);
+        let g = q.transpose().matmul(&q);
+        assert!(g.max_abs_diff(&Matrix::identity(8)) < 1e-10);
+    }
+
+    #[test]
+    fn eigenvalue_spread_follows_eps() {
+        let mut rng = Pcg64::seed(31);
+        let cov = anisotropic_covariance(5, 0.2, 0.6, &mut rng);
+        let (vals, _) = cov.jacobi_eigen();
+        let max = vals[0];
+        let min = *vals.last().unwrap();
+        assert!((max - 0.2 * 1.6).abs() < 1e-9);
+        assert!((min - 0.2 * 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_density_standard_normal_at_origin() {
+        let g = MultivariateGaussian::new(Matrix::identity(2)).unwrap();
+        let expected = -(2.0 * std::f64::consts::PI).ln();
+        assert!((g.log_density(&[0.0, 0.0]) - expected).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Mahalanobis geometry and whitening (paper Appendix C).
+//!
+//! `exp(q^T Sigma k)` is, up to scaling, a Gaussian kernel in the
+//! Mahalanobis distance `||q - k||_Sigma`; with `Sigma = Lambda^{-1}` the
+//! re-embedding `x -> Lambda^{-1/2} x` whitens inputs whose covariance is
+//! `Lambda` (Proposition C.1). These are the identities DARKFormer's
+//! learned `M` exploits; here they are implemented and testable directly.
+
+use crate::linalg::Matrix;
+
+/// `||x||_Sigma^2 = x^T Sigma x`.
+pub fn mahalanobis_sq_norm(x: &[f64], sigma: &Matrix) -> f64 {
+    let sx = sigma.matvec(x);
+    x.iter().zip(&sx).map(|(a, b)| a * b).sum()
+}
+
+/// `||x - y||_Sigma^2`.
+pub fn mahalanobis_sq_dist(x: &[f64], y: &[f64], sigma: &Matrix) -> f64 {
+    let diff: Vec<f64> = x.iter().zip(y).map(|(a, b)| a - b).collect();
+    mahalanobis_sq_norm(&diff, sigma)
+}
+
+/// `q^T Sigma k` via the polarization identity
+/// `1/2 (|q|_S^2 + |k|_S^2 - |q - k|_S^2)` — the decomposition behind the
+/// paper's "Gaussian kernel in Mahalanobis distance" reading.
+pub fn sigma_inner_via_polarization(
+    q: &[f64],
+    k: &[f64],
+    sigma: &Matrix,
+) -> f64 {
+    0.5 * (mahalanobis_sq_norm(q, sigma) + mahalanobis_sq_norm(k, sigma)
+        - mahalanobis_sq_dist(q, k, sigma))
+}
+
+/// Symmetric positive-definite square root via eigendecomposition.
+pub fn spd_sqrt(a: &Matrix) -> Matrix {
+    let (vals, vecs) = a.jacobi_eigen();
+    let sqrt_vals: Vec<f64> = vals
+        .iter()
+        .map(|&v| {
+            assert!(v > 0.0, "spd_sqrt needs positive eigenvalues, got {v}");
+            v.sqrt()
+        })
+        .collect();
+    vecs.matmul(&Matrix::diag(&sqrt_vals)).matmul(&vecs.transpose())
+}
+
+/// Whitening transform `M = Lambda^{-1/2}` for input covariance `Lambda`.
+pub fn whitening_transform(lambda: &Matrix) -> Option<Matrix> {
+    let inv = lambda.inverse_spd()?;
+    Some(spd_sqrt(&inv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfa::gaussian::{
+        anisotropic_covariance, empirical_covariance, MultivariateGaussian,
+    };
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn polarization_identity_matches_direct_inner() {
+        let mut rng = Pcg64::seed(61);
+        let sigma = anisotropic_covariance(4, 1.0, 0.5, &mut rng);
+        let q = vec![0.3, -0.2, 0.5, 0.1];
+        let k = vec![-0.1, 0.4, 0.2, -0.3];
+        let direct: f64 = {
+            let sk = sigma.matvec(&k);
+            q.iter().zip(&sk).map(|(a, b)| a * b).sum()
+        };
+        let polar = sigma_inner_via_polarization(&q, &k, &sigma);
+        assert!((direct - polar).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = Pcg64::seed(62);
+        let a = anisotropic_covariance(5, 0.7, 0.6, &mut rng);
+        let s = spd_sqrt(&a);
+        assert!(s.matmul(&s).max_abs_diff(&a) < 1e-9);
+    }
+
+    /// Proposition C.1: Cov(M q) = I for M = Lambda^{-1/2}.
+    #[test]
+    fn whitening_produces_isotropic_covariance() {
+        let mut rng = Pcg64::seed(63);
+        let lambda = anisotropic_covariance(3, 0.5, 0.7, &mut rng);
+        let m = whitening_transform(&lambda).unwrap();
+        let dist = MultivariateGaussian::new(lambda).unwrap();
+        let samples: Vec<Vec<f64>> = (0..50_000)
+            .map(|_| m.matvec(&dist.sample(&mut rng)))
+            .collect();
+        let emp = empirical_covariance(&samples);
+        assert!(
+            emp.max_abs_diff(&Matrix::identity(3)) < 0.03,
+            "emp={emp:?}"
+        );
+    }
+
+    /// Proposition C.1's spectral form: |q - k|^2_{Lambda^{-1}} equals
+    /// sum_i delta_i^2 / lambda_i in Lambda's eigenbasis.
+    #[test]
+    fn mahalanobis_distance_in_eigenbasis() {
+        let mut rng = Pcg64::seed(64);
+        let lambda = anisotropic_covariance(4, 0.6, 0.5, &mut rng);
+        let inv = lambda.inverse_spd().unwrap();
+        let q = vec![0.2, 0.5, -0.1, 0.3];
+        let k = vec![-0.2, 0.1, 0.4, 0.0];
+        let direct = mahalanobis_sq_dist(&q, &k, &inv);
+
+        let (vals, vecs) = lambda.jacobi_eigen();
+        let diff: Vec<f64> = q.iter().zip(&k).map(|(a, b)| a - b).collect();
+        let delta = vecs.transpose().matvec(&diff);
+        let spectral: f64 =
+            delta.iter().zip(&vals).map(|(d, l)| d * d / l).sum();
+        assert!((direct - spectral).abs() < 1e-9);
+    }
+}

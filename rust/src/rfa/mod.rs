@@ -1,0 +1,32 @@
+//! Random-feature-attention mathematics in pure Rust.
+//!
+//! This module reproduces the paper's Section 3 / Appendix A analysis
+//! numerically, independent of the JAX stack:
+//!
+//! * [`gaussian`] — multivariate Gaussians with arbitrary covariance
+//!   (Cholesky sampling), anisotropic covariance constructors.
+//! * [`estimators`] — the PRF softmax-kernel estimators: isotropic
+//!   (Performer), data-aware `N(0, Sigma)` (DARKFormer), and explicitly
+//!   importance-weighted (Lemma 3.1 form).
+//! * [`proposal`] — the closed-form optimal proposal of Theorem 3.2,
+//!   `Sigma* = (I + 2L)(I - 2L)^{-1}`, plus its validity condition.
+//! * [`variance`] — Monte-Carlo and closed-form variance evaluation; the
+//!   engine behind the `variance` bench and `exp variance` table.
+//! * [`mahalanobis`] — Mahalanobis geometry and whitening (App. C).
+//! * [`orthogonal`] — block-orthogonal feature draws (Performer's ORF
+//!   coupling; extension ablation).
+//!
+//! Everything here is f64 and deliberately estimator-shaped rather than
+//! attention-shaped: it validates the paper's *theory* claims, while the
+//! AOT/JAX stack validates the *system* claims.
+
+pub mod estimators;
+pub mod gaussian;
+pub mod mahalanobis;
+pub mod orthogonal;
+pub mod proposal;
+pub mod variance;
+
+pub use estimators::{exact_softmax_kernel, PrfEstimator, Sampling};
+pub use gaussian::MultivariateGaussian;
+pub use proposal::{optimal_proposal, proposal_is_valid};

@@ -1,0 +1,116 @@
+//! Theorem 3.2: the closed-form variance-optimal proposal.
+//!
+//! For `q, k ~ N(0, Lambda)` the optimal PRF sampling density is the
+//! centered Gaussian `psi* = N(0, Sigma*)` with
+//!
+//! ```text
+//! Sigma* = (I + 2 Lambda)(I - 2 Lambda)^{-1}
+//! ```
+//!
+//! valid whenever every eigenvalue of `Lambda` is below 1/2 (otherwise
+//! `psi*` is not normalizable). `Sigma*` shares `Lambda`'s eigenbasis and
+//! is isotropic iff `Lambda` is — the motivation for DARKFormer's learned
+//! anisotropic sampling geometry.
+
+use crate::linalg::Matrix;
+
+/// Largest eigenvalue bound for validity: `lambda_max < 1/2`.
+pub fn proposal_is_valid(lambda: &Matrix) -> bool {
+    let (vals, _) = lambda.jacobi_eigen();
+    vals.first().is_some_and(|&v| v < 0.5)
+}
+
+/// `Sigma* = (I + 2 Lambda)(I - 2 Lambda)^{-1}`; `None` when the proposal
+/// is not normalizable (some eigenvalue of `Lambda` >= 1/2).
+pub fn optimal_proposal(lambda: &Matrix) -> Option<Matrix> {
+    if !proposal_is_valid(lambda) {
+        return None;
+    }
+    let n = lambda.rows();
+    let i = Matrix::identity(n);
+    let plus = i.add(&lambda.scale(2.0));
+    let minus = i.sub(&lambda.scale(2.0));
+    Some(plus.matmul(&minus.inverse()?))
+}
+
+/// Eigenvalue map of Theorem 3.2: `sigma_i = 1 / (1 - 2 beta_i)` with
+/// `beta_i = 2 lambda_i / (2 lambda_i + 1)` — equivalently
+/// `(1 + 2 lambda_i) / (1 - 2 lambda_i)`. Exposed for the spectrum-level
+/// tests and the variance bench's reporting.
+pub fn optimal_eigenvalue(lambda_i: f64) -> f64 {
+    (1.0 + 2.0 * lambda_i) / (1.0 - 2.0 * lambda_i)
+}
+
+/// Anisotropy index: ratio of extreme eigenvalues (1.0 = isotropic).
+pub fn anisotropy_index(cov: &Matrix) -> f64 {
+    let (vals, _) = cov.jacobi_eigen();
+    let max = vals[0];
+    let min = *vals.last().unwrap();
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfa::gaussian::anisotropic_covariance;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn isotropic_lambda_gives_isotropic_proposal() {
+        let lambda = Matrix::identity(4).scale(0.2);
+        let sigma = optimal_proposal(&lambda).unwrap();
+        let expected = Matrix::identity(4).scale(optimal_eigenvalue(0.2));
+        assert!(sigma.max_abs_diff(&expected) < 1e-12);
+    }
+
+    #[test]
+    fn anisotropic_lambda_gives_anisotropic_proposal() {
+        let mut rng = Pcg64::seed(7);
+        let lambda = anisotropic_covariance(4, 0.2, 0.8, &mut rng);
+        let sigma = optimal_proposal(&lambda).unwrap();
+        assert!(anisotropy_index(&sigma) > 1.5);
+    }
+
+    #[test]
+    fn proposal_shares_eigenbasis_with_lambda() {
+        let mut rng = Pcg64::seed(19);
+        let lambda = anisotropic_covariance(5, 0.15, 0.7, &mut rng);
+        let sigma = optimal_proposal(&lambda).unwrap();
+        // Same eigenbasis <=> they commute.
+        let ab = lambda.matmul(&sigma);
+        let ba = sigma.matmul(&lambda);
+        assert!(ab.max_abs_diff(&ba) < 1e-9);
+    }
+
+    #[test]
+    fn eigenvalues_follow_closed_form_map() {
+        let mut rng = Pcg64::seed(29);
+        let lambda = anisotropic_covariance(4, 0.1, 0.9, &mut rng);
+        let sigma = optimal_proposal(&lambda).unwrap();
+        let (lvals, _) = lambda.jacobi_eigen();
+        let (svals, _) = sigma.jacobi_eigen();
+        for (l, s) in lvals.iter().zip(&svals) {
+            assert!(
+                (optimal_eigenvalue(*l) - s).abs() < 1e-9,
+                "lambda={l} sigma={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_when_eigenvalue_exceeds_half() {
+        let lambda = Matrix::diag(&[0.6, 0.1]);
+        assert!(!proposal_is_valid(&lambda));
+        assert!(optimal_proposal(&lambda).is_none());
+        let edge = Matrix::diag(&[0.5, 0.1]);
+        assert!(optimal_proposal(&edge).is_none());
+    }
+
+    #[test]
+    fn proposal_is_spd() {
+        let mut rng = Pcg64::seed(41);
+        let lambda = anisotropic_covariance(6, 0.2, 0.5, &mut rng);
+        let sigma = optimal_proposal(&lambda).unwrap();
+        assert!(sigma.cholesky().is_some());
+    }
+}

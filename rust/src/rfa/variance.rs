@@ -1,0 +1,218 @@
+//! Monte-Carlo variance measurement for PRF estimators (Section 3 engine).
+//!
+//! The quantity of interest is the paper's expected Monte-Carlo variance
+//!
+//! ```text
+//! V(psi) = E_{q,k ~ D}[ Var_omega[ kappa_hat_psi(q, k) ] ]
+//! ```
+//!
+//! For an m-sample empirical-mean estimator, `Var[kappa_hat] = Var[Z] / m`
+//! where `Z` is the single-draw integrand, so we estimate `Var[Z]` per
+//! (q, k) pair with `n_omega` draws and average over pairs. For the
+//! isotropic Gaussian case the second moment has the closed form used in
+//! Appendix A, which the tests pin against.
+
+use crate::rng::Pcg64;
+
+use super::estimators::{PrfEstimator, Sampling};
+use super::gaussian::MultivariateGaussian;
+
+/// Expected Monte-Carlo variance `V(psi)` of the *m-sample* estimator.
+pub fn expected_mc_variance(
+    est: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    n_omega: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..n_pairs {
+        let q = input_dist.sample(rng);
+        let k = input_dist.sample(rng);
+        acc += single_draw_variance(est, &q, &k, n_omega, rng);
+    }
+    acc / (n_pairs as f64) / est.m as f64
+}
+
+/// `Var_omega[Z(q, k, omega)]` estimated from `n_omega` draws.
+pub fn single_draw_variance(
+    est: &PrfEstimator,
+    q: &[f64],
+    k: &[f64],
+    n_omega: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    // Welford for numerical stability: Z spans orders of magnitude.
+    let mut mean = 0.0;
+    let mut m2 = 0.0;
+    for i in 0..n_omega {
+        let omega = match &est.sampling {
+            Sampling::Isotropic => {
+                // Draw from N(0, I) through the estimator's own machinery:
+                // single_term expects the matching distribution.
+                est_draw_isotropic(est, rng)
+            }
+            _ => est_draw(est, rng),
+        };
+        let z = est.single_term(q, k, &omega);
+        let delta = z - mean;
+        mean += delta / (i + 1) as f64;
+        m2 += delta * (z - mean);
+    }
+    m2 / (n_omega - 1) as f64
+}
+
+fn est_draw(est: &PrfEstimator, rng: &mut Pcg64) -> Vec<f64> {
+    match &est.sampling {
+        Sampling::Isotropic => est_draw_isotropic(est, rng),
+        Sampling::Proposal(psi) => psi.sample(rng),
+        Sampling::DataAware(ps) => ps.sample(rng),
+    }
+}
+
+fn est_draw_isotropic(est: &PrfEstimator, rng: &mut Pcg64) -> Vec<f64> {
+    use crate::rng::GaussianExt;
+    rng.gaussian_vec(est.dim())
+}
+
+/// Paired comparison of two estimators' expected MC variance: the SAME
+/// (q, k) pairs are used for both, removing the dominant noise source
+/// (the heavy-tailed variation of Var[Z] across input pairs) from the
+/// *ratio*. Returns `(V_a, V_b)` for the m-sample estimators.
+pub fn paired_expected_mc_variance(
+    est_a: &PrfEstimator,
+    est_b: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    n_omega: usize,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    let mut acc_a = 0.0;
+    let mut acc_b = 0.0;
+    for _ in 0..n_pairs {
+        let q = input_dist.sample(rng);
+        let k = input_dist.sample(rng);
+        acc_a += single_draw_variance(est_a, &q, &k, n_omega, rng);
+        acc_b += single_draw_variance(est_b, &q, &k, n_omega, rng);
+    }
+    let n = n_pairs as f64;
+    (acc_a / n / est_a.m as f64, acc_b / n / est_b.m as f64)
+}
+
+/// Closed-form `Var_omega[Z]` for the isotropic estimator on a fixed pair:
+/// `E[Z^2] = exp(2|q+k|^2 - |q|^2 - |k|^2)`, `E[Z] = exp(q.k)` (App. A).
+pub fn isotropic_variance_closed_form(q: &[f64], k: &[f64]) -> f64 {
+    let sum_sq: f64 = q.iter().zip(k).map(|(a, b)| (a + b) * (a + b)).sum();
+    let q_sq: f64 = q.iter().map(|a| a * a).sum();
+    let k_sq: f64 = k.iter().map(|a| a * a).sum();
+    let dot: f64 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+    (2.0 * sum_sq - q_sq - k_sq).exp() - (2.0 * dot).exp()
+}
+
+/// Relative mean-squared error `E[((kappa_hat - kappa) / kappa)^2]` of the
+/// m-sample estimator against its own target kernel — the approximation-
+/// error metric for the `exp approx` table.
+pub fn relative_mse(
+    est: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    reps_per_pair: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..n_pairs {
+        let q = input_dist.sample(rng);
+        let k = input_dist.sample(rng);
+        let target = est.target(&q, &k);
+        for _ in 0..reps_per_pair {
+            let e = est.estimate(&q, &k, rng);
+            let rel = (e - target) / target;
+            acc += rel * rel;
+        }
+    }
+    acc / (n_pairs * reps_per_pair) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rfa::gaussian::anisotropic_covariance;
+    use crate::rfa::proposal::optimal_proposal;
+
+    #[test]
+    fn empirical_matches_closed_form_isotropic_variance() {
+        let mut rng = Pcg64::seed(55);
+        let q = vec![0.3, -0.1, 0.2];
+        let k = vec![0.1, 0.2, -0.15];
+        let est = PrfEstimator::new(3, 1, Sampling::Isotropic);
+        let emp = single_draw_variance(&est, &q, &k, 400_000, &mut rng);
+        let cf = isotropic_variance_closed_form(&q, &k);
+        assert!((emp - cf).abs() / cf < 0.05, "emp={emp} cf={cf}");
+    }
+
+    #[test]
+    fn variance_scales_inversely_with_m() {
+        let mut rng = Pcg64::seed(56);
+        let lambda = Matrix::identity(3).scale(0.15);
+        let dist = MultivariateGaussian::new(lambda).unwrap();
+        let est8 = PrfEstimator::new(3, 8, Sampling::Isotropic);
+        let est64 = PrfEstimator::new(3, 64, Sampling::Isotropic);
+        let v8 = expected_mc_variance(&est8, &dist, 40, 4000, &mut rng);
+        let v64 = expected_mc_variance(&est64, &dist, 40, 4000, &mut rng);
+        let ratio = v8 / v64;
+        assert!((ratio - 8.0).abs() < 2.0, "ratio={ratio}");
+    }
+
+    /// Theorem 3.2 item (2): the optimal proposal strictly reduces expected
+    /// MC variance versus isotropic sampling under anisotropic inputs.
+    #[test]
+    fn optimal_proposal_beats_isotropic() {
+        let mut rng = Pcg64::seed(57);
+        let d = 4;
+        let lambda = anisotropic_covariance(d, 0.2, 0.8, &mut rng);
+        let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+        let sigma_star = optimal_proposal(&lambda).unwrap();
+        let psi = MultivariateGaussian::new(sigma_star).unwrap();
+
+        let iso = PrfEstimator::new(d, 16, Sampling::Isotropic);
+        let opt = PrfEstimator::new(d, 16, Sampling::Proposal(psi));
+
+        let v_iso = expected_mc_variance(&iso, &dist, 60, 3000, &mut rng);
+        let v_opt = expected_mc_variance(&opt, &dist, 60, 3000, &mut rng);
+        assert!(
+            v_opt < v_iso,
+            "optimal proposal should reduce variance: iso={v_iso} opt={v_opt}"
+        );
+    }
+
+    #[test]
+    fn paired_comparison_matches_unpaired_in_expectation() {
+        let mut rng = Pcg64::seed(59);
+        let lambda = anisotropic_covariance(3, 0.15, 0.5, &mut rng);
+        let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+        let psi = MultivariateGaussian::new(
+            optimal_proposal(&lambda).unwrap(),
+        )
+        .unwrap();
+        let iso = PrfEstimator::new(3, 8, Sampling::Isotropic);
+        let opt = PrfEstimator::new(3, 8, Sampling::Proposal(psi));
+        let (v_iso, v_opt) =
+            paired_expected_mc_variance(&iso, &opt, &dist, 80, 2000, &mut rng);
+        assert!(v_iso > 0.0 && v_opt > 0.0);
+        // Theorem 3.2(2) must hold under the paired estimator as well.
+        assert!(v_opt < v_iso, "iso={v_iso} opt={v_opt}");
+    }
+
+    #[test]
+    fn relative_mse_decreases_with_budget() {
+        let mut rng = Pcg64::seed(58);
+        let lambda = Matrix::identity(3).scale(0.1);
+        let dist = MultivariateGaussian::new(lambda).unwrap();
+        let small = PrfEstimator::new(3, 4, Sampling::Isotropic);
+        let large = PrfEstimator::new(3, 64, Sampling::Isotropic);
+        let e_small = relative_mse(&small, &dist, 30, 50, &mut rng);
+        let e_large = relative_mse(&large, &dist, 30, 50, &mut rng);
+        assert!(e_large < e_small, "small={e_small} large={e_large}");
+    }
+}

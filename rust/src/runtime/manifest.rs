@@ -1,0 +1,212 @@
+//! Artifact manifests: canonical parameter order and model metadata.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::{parse, Json};
+
+/// One parameter leaf in canonical (sorted-name) order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-(config, variant) manifest emitted by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub config: String,
+    pub params: Vec<ParamSpec>,
+    pub programs: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let variant = v
+            .field("variant")
+            .and_then(Json::as_str)
+            .context("manifest missing variant")?
+            .to_string();
+        let config = v
+            .field("config")
+            .and_then(Json::as_str)
+            .context("manifest missing config")?
+            .to_string();
+        let mut params = Vec::new();
+        for p in v
+            .field("params")
+            .and_then(Json::as_arr)
+            .context("manifest missing params")?
+        {
+            let name = p
+                .field("name")
+                .and_then(Json::as_str)
+                .context("param missing name")?
+                .to_string();
+            let shape = p
+                .field("shape")
+                .and_then(Json::as_arr)
+                .context("param missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = p
+                .field("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string();
+            params.push(ParamSpec { name, shape, dtype });
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        // Canonical order is sorted-by-name; verify rather than trust.
+        for w in params.windows(2) {
+            if w[0].name >= w[1].name {
+                bail!(
+                    "manifest params not sorted: {} >= {}",
+                    w[0].name,
+                    w[1].name
+                );
+            }
+        }
+        let programs = v
+            .field("programs")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|p| p.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Self { variant, config, params, programs })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total trainable element count (for reporting).
+    pub fn total_elements(&self) -> usize {
+        self.params.iter().map(ParamSpec::element_count).sum()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+/// Model metadata (`meta.json` at the config level).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub m_features: usize,
+    pub r_proj: usize,
+    pub variants: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            v.field(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta missing {k}"))
+        };
+        Ok(Self {
+            name: v
+                .field("name")
+                .and_then(Json::as_str)
+                .context("meta missing name")?
+                .to_string(),
+            vocab_size: get("vocab_size")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            seq_len: get("seq_len")?,
+            batch_size: get("batch_size")?,
+            m_features: get("m_features")?,
+            r_proj: get("r_proj")?,
+            variants: v
+                .field("variants")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|p| p.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Token-batch element count for this model: `batch * (seq_len + 1)`.
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch_size * (self.seq_len + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+ "variant": "darkformer",
+ "config": "tiny",
+ "params": [
+  {"name": "emb", "shape": [256, 64], "dtype": "f32"},
+  {"name": "final_norm", "shape": [64], "dtype": "f32"}
+ ],
+ "programs": ["eval_step", "init", "train_step"]
+}"#;
+
+    #[test]
+    fn parses_manifest() {
+        let v = parse(MANIFEST).unwrap();
+        let m = Manifest::from_json(&v).unwrap();
+        assert_eq!(m.variant, "darkformer");
+        assert_eq!(m.n_params(), 2);
+        assert_eq!(m.params[0].element_count(), 256 * 64);
+        assert_eq!(m.total_elements(), 256 * 64 + 64);
+        assert_eq!(m.param_index("final_norm"), Some(1));
+        assert_eq!(m.programs.len(), 3);
+    }
+
+    #[test]
+    fn rejects_unsorted_params() {
+        let text = MANIFEST.replace("emb", "zzz");
+        let v = parse(&text).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_params() {
+        let v = parse(r#"{"variant":"x","config":"y","params":[]}"#).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+}

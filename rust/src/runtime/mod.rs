@@ -1,0 +1,16 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! This is the only boundary between the Rust coordinator and XLA. The
+//! compile path (`make artifacts`, Python) writes `*.hlo.txt` plus a
+//! `manifest.json` per (model config, variant); everything here is
+//! manifest-driven so the coordinator never hard-codes parameter layouts.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md section 1 and /opt/xla-example).
+
+mod manifest;
+mod program;
+
+pub use manifest::{Manifest, ModelMeta, ParamSpec};
+pub use program::{literal_to_tensor, tensor_to_literal, Program, Runtime};

@@ -1,0 +1,163 @@
+//! PJRT client wrapper: compile HLO text, execute, untuple results.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{DType, Tensor};
+
+/// Shared PJRT client. One per process; programs borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client (the testbed backend; see DESIGN.md §6 for
+    /// the TPU deployment mapping).
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and JIT-compile it for this client.
+    pub fn load_program(&self, path: &Path) -> Result<Program> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Program {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+/// A compiled executable. All artifacts are lowered with
+/// `return_tuple=True`, so execution always returns one tuple literal
+/// which [`Program::run`] decomposes.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_ms: f64,
+}
+
+impl Program {
+    /// Execute with host literals; returns the untupled output literals.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        if outs.is_empty() || outs[0].is_empty() {
+            bail!("{}: no outputs", self.name);
+        }
+        let mut tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        tuple.decompose_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+}
+
+/// Convert a PJRT literal to a host [`Tensor`] (checkpoint format).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    match ty {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> =
+                lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::from_f32(dims, &v))
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> =
+                lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::from_i32(dims, &v))
+        }
+        other => bail!("unsupported literal dtype {other:?}"),
+    }
+}
+
+/// Convert a host [`Tensor`] back to a PJRT literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match t.dtype {
+        DType::F32 => {
+            let v = t.as_f32()?;
+            xla::Literal::vec1(&v)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?
+        }
+        DType::I32 => {
+            let v = t.as_i32()?;
+            xla::Literal::vec1(&v)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?
+        }
+        DType::U32 => bail!("u32 tensors only appear as scalars; use Literal::scalar"),
+    };
+    Ok(lit)
+}
+
+/// Scalar literal helpers (shape `()`, matching the lowered signatures).
+pub mod scalars {
+    pub fn f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn i32(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn u32(v: u32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+}
+
+/// Read a scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_round_trip_f32() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_literal_round_trip_i32() {
+        let t = Tensor::from_i32(vec![4], &[1, -2, 3, -4]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let lit = scalars::f32(1.5);
+        assert_eq!(scalar_f32(&lit).unwrap(), 1.5);
+    }
+}

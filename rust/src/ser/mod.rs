@@ -1,0 +1,12 @@
+//! Minimal serialization substrate: JSON value model, parser and writer.
+//!
+//! The offline build environment ships no serde, so the (small) JSON needs
+//! of the system — AOT manifests, experiment metadata, metric records —
+//! are covered by this hand-rolled implementation. It supports the full
+//! JSON grammar (objects, arrays, strings with escapes, numbers, bools,
+//! null) and preserves object insertion order, which keeps manifests
+//! diff-stable.
+
+mod json;
+
+pub use json::{parse, Json, JsonError, JsonObj};

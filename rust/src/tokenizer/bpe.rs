@@ -1,0 +1,275 @@
+//! Byte-level byte-pair encoding: trainer + encoder/decoder + vocab I/O.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A trained BPE model. Token ids: `0..256` are raw bytes; `256..vocab`
+/// are merge products in creation order.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merges[i] = (left, right) produced token `256 + i`.
+    merges: Vec<(u32, u32)>,
+    /// pair -> merged id, for encoding.
+    merge_map: HashMap<(u32, u32), u32>,
+    /// Rank of each merge (lower = earlier = higher priority).
+    rank: HashMap<(u32, u32), u32>,
+    /// token id -> byte expansion.
+    decode_table: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    pub fn from_merges(merges: Vec<(u32, u32)>) -> Self {
+        let mut decode_table: Vec<Vec<u8>> =
+            (0..256u32).map(|b| vec![b as u8]).collect();
+        let mut merge_map = HashMap::new();
+        let mut rank = HashMap::new();
+        for (i, &(l, r)) in merges.iter().enumerate() {
+            let id = 256 + i as u32;
+            let mut bytes = decode_table[l as usize].clone();
+            bytes.extend_from_slice(&decode_table[r as usize]);
+            decode_table.push(bytes);
+            merge_map.insert((l, r), id);
+            rank.insert((l, r), i as u32);
+        }
+        Self { merges, merge_map, rank, decode_table }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Encode text by repeatedly applying the highest-priority merge —
+    /// the canonical BPE inference procedure.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        loop {
+            // Find the lowest-rank applicable pair.
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&r) = self.rank.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((r, _)) = best else { break };
+            let pair = self.merges[r as usize];
+            let merged = self.merge_map[&pair];
+            // Apply this merge everywhere in one pass.
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(merged);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    /// Decode ids back to bytes (exact inverse of encode) and lossily to
+    /// UTF-8 for display.
+    pub fn decode_bytes(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            out.extend_from_slice(&self.decode_table[id as usize]);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode_bytes(ids)).into_owned()
+    }
+
+    /// Serialize: line-oriented `DKBPE v1`, then `left right` per merge.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        writeln!(w, "DKBPE v1 {}", self.merges.len())?;
+        for &(l, r) in &self.merges {
+            writeln!(w, "{l} {r}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut lines = BufReader::new(file).lines();
+        let header = lines.next().context("empty bpe file")??;
+        let parts: Vec<&str> = header.split_whitespace().collect();
+        if parts.len() != 3 || parts[0] != "DKBPE" || parts[1] != "v1" {
+            bail!("bad bpe header: {header:?}");
+        }
+        let n: usize = parts[2].parse()?;
+        let mut merges = Vec::with_capacity(n);
+        for line in lines {
+            let line = line?;
+            let mut it = line.split_whitespace();
+            let l: u32 = it.next().context("missing left id")?.parse()?;
+            let r: u32 = it.next().context("missing right id")?.parse()?;
+            merges.push((l, r));
+        }
+        if merges.len() != n {
+            bail!("expected {n} merges, found {}", merges.len());
+        }
+        Ok(Self::from_merges(merges))
+    }
+}
+
+/// Trains merges by greedy highest-count pair selection over a corpus.
+pub struct BpeTrainer {
+    pub vocab_size: usize,
+}
+
+impl BpeTrainer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256, "vocab must cover all bytes");
+        Self { vocab_size }
+    }
+
+    /// Train on a corpus reader. Streams the input once, then iterates
+    /// merges in memory on the token sequence.
+    pub fn train(&self, reader: impl Read) -> Result<Bpe> {
+        let mut text = Vec::new();
+        BufReader::new(reader).read_to_end(&mut text)?;
+        let mut ids: Vec<u32> = text.iter().map(|&b| u32::from(b)).collect();
+        let n_merges = self.vocab_size - 256;
+        let mut merges = Vec::with_capacity(n_merges);
+
+        for step in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in ids.windows(2) {
+                // Don't merge across newlines: keeps document boundaries.
+                if w[0] == u32::from(b'\n') || w[1] == u32::from(b'\n') {
+                    continue;
+                }
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(&(l, r), &c)| (c, std::cmp::Reverse((l, r))))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // Nothing left worth merging.
+            }
+            let new_id = 256 + step as u32;
+            merges.push(pair);
+            // Replace in the working sequence.
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        Ok(Bpe::from_merges(merges))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn train_on(text: &str, vocab: usize) -> Bpe {
+        BpeTrainer::new(vocab).train(text.as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn round_trips_ascii() {
+        let bpe = train_on("the cat sat on the mat. the cat sat.", 300);
+        let text = "the mat sat on the cat.";
+        let ids = bpe.encode(text);
+        assert_eq!(bpe.decode(&ids), text);
+    }
+
+    #[test]
+    fn round_trips_unicode() {
+        let bpe = train_on("héllo wörld héllo wörld héllo", 280);
+        let text = "héllo wörld — naïve 😀";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text);
+    }
+
+    #[test]
+    fn compresses_repeated_text() {
+        let corpus = "the quick brown fox jumps over the lazy dog. ".repeat(50);
+        let bpe = train_on(&corpus, 512);
+        let ids = bpe.encode("the quick brown fox");
+        assert!(
+            ids.len() < "the quick brown fox".len() / 2,
+            "got {} tokens",
+            ids.len()
+        );
+    }
+
+    #[test]
+    fn byte_fallback_for_unseen_input() {
+        let bpe = train_on("aaaa bbbb aaaa bbbb", 270);
+        let text = "zzz \u{1F980} qqq";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text);
+    }
+
+    #[test]
+    fn vocab_size_bounded() {
+        let bpe = train_on("ab ab ab ab cd cd cd cd", 512);
+        // Tiny corpus: trainer stops early, never exceeds the cap.
+        assert!(bpe.vocab_size() <= 512);
+        assert!(bpe.vocab_size() > 256);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let bpe = train_on("the cat sat on the mat. the cat sat.", 300);
+        let dir = std::env::temp_dir().join("dkf_bpe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.bpe");
+        bpe.save(&path).unwrap();
+        let loaded = Bpe::load(&path).unwrap();
+        let text = "the cat sat on the mat";
+        assert_eq!(bpe.encode(text), loaded.encode(text));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn merges_do_not_cross_newlines() {
+        let bpe = train_on("ab\nab\nab\nab\nab\nab", 300);
+        let ids = bpe.encode("ab\nab");
+        // "b\n" and "\na" must never be a single token.
+        for &id in &ids {
+            let bytes = bpe.decode_bytes(&[id]);
+            if bytes.len() > 1 {
+                assert!(
+                    !bytes.contains(&b'\n'),
+                    "token {id} spans newline: {bytes:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_rejects_corrupt_header() {
+        let dir = std::env::temp_dir().join("dkf_bpe_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bpe");
+        std::fs::write(&path, "NOTBPE v9 0\n").unwrap();
+        assert!(Bpe::load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Byte-level BPE tokenizer substrate.
+//!
+//! The paper benchmarks next-token prediction on C4; our substitute corpus
+//! (see [`crate::data`]) still needs a real tokenizer so the model sees a
+//! realistic token distribution (Zipf-ish unigram stats, merges spanning
+//! morphemes). This is a from-scratch byte-level BPE: 256 byte tokens +
+//! learned merges, greedy longest-merge encoding, exact round-trip
+//! decoding.
+
+mod bpe;
+
+pub use bpe::{Bpe, BpeTrainer};

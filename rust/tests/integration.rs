@@ -1,0 +1,235 @@
+//! Integration tests over the real AOT artifacts (tiny config).
+//!
+//! These exercise the full L3 -> PJRT -> HLO path: init determinism,
+//! training-loss descent, checkpoint restore, finetuning across variants
+//! (missing-parameter fill), and qkv-only freezing — the invariants the
+//! experiment harnesses rely on.
+//!
+//! Skipped gracefully when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use darkformer::config::{ExperimentConfig, TrainMode};
+use darkformer::coordinator::{Trainer, Workbench};
+use darkformer::rng::Pcg64;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    p.join("tiny/darkformer/manifest.json").exists().then_some(p)
+}
+
+fn tmp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dkf_integration").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn workbench(artifacts: &Path, out: &Path) -> Workbench {
+    Workbench::prepare(artifacts, "tiny", 400, 42, &out.join("_cache"))
+        .expect("workbench")
+}
+
+fn cfg(artifacts: &Path, variant: &str, out: &Path) -> ExperimentConfig {
+    ExperimentConfig {
+        artifacts_dir: artifacts.to_path_buf(),
+        model_config: "tiny".into(),
+        variant: variant.into(),
+        out_dir: out.to_path_buf(),
+        corpus_docs: 400,
+        ..Default::default()
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("SKIP: no artifacts — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn init_is_deterministic_and_matches_manifest() {
+    let arts = require_artifacts!();
+    let out = tmp_out("init_det");
+    let wb = workbench(&arts, &out);
+    let trainer =
+        Trainer::new(cfg(&arts, "darkformer", &out), &wb).expect("trainer");
+    let s1 = trainer.initial_state().expect("init 1");
+    let s2 = trainer.initial_state().expect("init 2");
+    assert_eq!(s1.n_params(), s1.manifest.n_params());
+    for (a, b) in s1.params.iter().zip(&s2.params) {
+        assert_eq!(a, b, "same seed must give identical init");
+    }
+    // DARKFormer's M starts at identity (the Performer-equivalent point).
+    let m = s1.param("layer00.attn.m_proj").expect("m_proj exists");
+    let vals = m.as_f32().unwrap();
+    let (h, r, dh) = (m.shape[0], m.shape[1], m.shape[2]);
+    for head in 0..h {
+        for i in 0..r {
+            for j in 0..dh {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(vals[head * r * dh + i * dh + j], expect);
+            }
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss_on_fixed_batch() {
+    let arts = require_artifacts!();
+    let out = tmp_out("descent");
+    let wb = workbench(&arts, &out);
+    let trainer =
+        Trainer::new(cfg(&arts, "darkformer", &out), &wb).expect("trainer");
+    let mut state = trainer.initial_state().expect("init");
+    let mut rng = Pcg64::seed(1);
+    let batch = wb.dataset.train_batch(wb.meta.batch_size, &mut rng);
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for i in 0..15 {
+        let (loss, acc, gnorm) = trainer
+            .train_step(&mut state, &batch, 100 + i, 3e-3)
+            .expect("step");
+        assert!(loss.is_finite() && gnorm.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first - 0.5,
+        "overfitting one batch must cut loss: {first} -> {last}"
+    );
+    assert_eq!(state.step, 15);
+}
+
+#[test]
+fn full_run_writes_metrics_and_checkpoint() {
+    let arts = require_artifacts!();
+    let out = tmp_out("full_run");
+    let wb = workbench(&arts, &out);
+    let mut c = cfg(&arts, "performer", &out);
+    c.steps = 6;
+    c.eval_every = 3;
+    let trainer = Trainer::new(c, &wb).expect("trainer");
+    let report = trainer.run().expect("run");
+    assert_eq!(report.steps, 6);
+    assert!(report.final_loss.is_finite());
+    assert!(report.eval_loss.unwrap().is_finite());
+    assert!(report.metrics_path.exists());
+    assert!(report.checkpoint_path.exists());
+    let records =
+        darkformer::metrics::MetricLogger::read_all(&report.metrics_path)
+            .expect("metrics parse");
+    assert_eq!(records.len(), 6);
+    assert!(records.windows(2).all(|w| w[1].step == w[0].step + 1));
+}
+
+#[test]
+fn checkpoint_restore_resumes_training() {
+    let arts = require_artifacts!();
+    let out = tmp_out("restore");
+    let wb = workbench(&arts, &out);
+    let mut c = cfg(&arts, "exact", &out.join("a"));
+    c.steps = 4;
+    let trainer = Trainer::new(c, &wb).expect("trainer");
+    let report = trainer.run().expect("run");
+
+    // Restart from the checkpoint; loss should continue from the trained
+    // region, i.e. the first step's loss is close to the last one above.
+    let mut c2 = cfg(&arts, "exact", &out.join("b"));
+    c2.steps = 2;
+    c2.init_checkpoint = Some(report.checkpoint_path.clone());
+    let trainer2 = Trainer::new(c2, &wb).expect("trainer2");
+    let mut state = trainer2.initial_state().expect("restore");
+    let mut rng = Pcg64::seed(2);
+    let batch = wb.dataset.train_batch(wb.meta.batch_size, &mut rng);
+    let (loss, _, _) =
+        trainer2.train_step(&mut state, &batch, 7, 1e-3).expect("step");
+    assert!(
+        loss < report.final_loss + 1.0,
+        "restored loss {loss} should be near trained loss {}",
+        report.final_loss
+    );
+}
+
+#[test]
+fn finetune_exact_checkpoint_into_darkformer_fills_m_proj() {
+    let arts = require_artifacts!();
+    let out = tmp_out("crossvariant");
+    let wb = workbench(&arts, &out);
+    let mut c = cfg(&arts, "exact", &out.join("pre"));
+    c.steps = 3;
+    let report = Trainer::new(c, &wb).expect("t").run().expect("pretrain");
+
+    let mut c2 = cfg(&arts, "darkformer", &out.join("ft"));
+    c2.steps = 2;
+    c2.init_checkpoint = Some(report.checkpoint_path);
+    let trainer = Trainer::new(c2, &wb).expect("t2");
+    let state = trainer.initial_state().expect("cross-variant restore");
+    // m_proj came from the darkformer init fallback => identity.
+    let m = state.param("layer00.attn.m_proj").unwrap().as_f32().unwrap();
+    assert_eq!(m[0], 1.0);
+    assert_eq!(m[1], 0.0);
+    // Shared weights came from the exact checkpoint (trained, not init).
+    let mut c3 = cfg(&arts, "darkformer", &out.join("fresh"));
+    c3.steps = 1;
+    let fresh_trainer = Trainer::new(c3, &wb).expect("t3");
+    let fresh = fresh_trainer.initial_state().expect("fresh init");
+    assert_ne!(
+        state.param("emb").unwrap(),
+        fresh.param("emb").unwrap(),
+        "emb should come from the trained checkpoint, not fresh init"
+    );
+}
+
+#[test]
+fn qkv_only_mode_freezes_non_attention_params() {
+    let arts = require_artifacts!();
+    let out = tmp_out("qkv");
+    let wb = workbench(&arts, &out);
+    let mut c = cfg(&arts, "darkformer", &out);
+    c.mode = TrainMode::QkvOnly;
+    let trainer = Trainer::new(c, &wb).expect("trainer");
+    let mut state = trainer.initial_state().expect("init");
+    let emb_before = state.param("emb").unwrap().clone();
+    let wq_before = state.param("layer00.attn.wq").unwrap().clone();
+    let mut rng = Pcg64::seed(3);
+    let batch = wb.dataset.train_batch(wb.meta.batch_size, &mut rng);
+    for i in 0..3 {
+        trainer
+            .train_step(&mut state, &batch, 50 + i, 1e-2)
+            .expect("step");
+    }
+    assert_eq!(
+        state.param("emb").unwrap(),
+        &emb_before,
+        "embedding must be frozen in qkv mode"
+    );
+    assert_ne!(
+        state.param("layer00.attn.wq").unwrap(),
+        &wq_before,
+        "wq must train in qkv mode"
+    );
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let arts = require_artifacts!();
+    let out = tmp_out("eval_det");
+    let wb = workbench(&arts, &out);
+    let trainer =
+        Trainer::new(cfg(&arts, "performer", &out), &wb).expect("trainer");
+    let state = trainer.initial_state().expect("init");
+    let (l1, a1) = trainer.evaluate(&state, 2).expect("eval 1");
+    let (l2, a2) = trainer.evaluate(&state, 2).expect("eval 2");
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+}

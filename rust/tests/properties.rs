@@ -1,0 +1,264 @@
+//! Randomized property tests over coordinator invariants.
+//!
+//! The offline environment has no proptest crate, so these are seeded
+//! randomized sweeps (many cases per property, deterministic from a root
+//! seed — failures reproduce exactly). Each property mirrors what
+//! proptest would assert: round-trips, ordering invariants, and
+//! robustness of parsers to hostile input.
+
+use darkformer::checkpoint::{Checkpoint, Tensor};
+use darkformer::config::LrSchedule;
+use darkformer::data::{CorpusGenerator, CorpusSpec, TokenDataset};
+use darkformer::metrics::SpikeDetector;
+use darkformer::rng::{GaussianExt, Pcg64};
+use darkformer::ser::{parse, Json};
+use darkformer::tokenizer::BpeTrainer;
+
+// ---------------------------------------------------------------------
+// Checkpoint: random tensors round-trip bit-exactly
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_checkpoint_round_trips_random_tensors() {
+    let mut rng = Pcg64::seed(0xc0ffee);
+    let dir = std::env::temp_dir().join("dkf_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..20 {
+        let mut ck = Checkpoint::new();
+        let n_tensors = 1 + rng.next_range(6) as usize;
+        for t in 0..n_tensors {
+            let rank = rng.next_range(4) as usize;
+            let shape: Vec<usize> =
+                (0..rank).map(|_| 1 + rng.next_range(8) as usize).collect();
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n)
+                .map(|_| {
+                    // Include special values.
+                    match rng.next_range(10) {
+                        0 => 0.0,
+                        1 => -0.0,
+                        2 => f32::MIN_POSITIVE,
+                        3 => f32::MAX,
+                        _ => (rng.gaussian() * 100.0) as f32,
+                    }
+                })
+                .collect();
+            ck.insert(format!("t{t}"), Tensor::from_f32(shape, &data));
+        }
+        let path = dir.join(format!("case{case}.dkft"));
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.len(), ck.len());
+        for name in ck.names() {
+            assert_eq!(loaded.get(name), ck.get(name), "case {case} {name}");
+        }
+    }
+}
+
+#[test]
+fn prop_checkpoint_detects_random_single_byte_corruption() {
+    let mut rng = Pcg64::seed(0xbad);
+    let dir = std::env::temp_dir().join("dkf_prop_ckpt2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut ck = Checkpoint::new();
+    let data: Vec<f32> = (0..256).map(|i| i as f32).collect();
+    ck.insert("w", Tensor::from_f32(vec![16, 16], &data));
+    let path = dir.join("corrupt.dkft");
+    ck.save(&path).unwrap();
+    let orig = std::fs::read(&path).unwrap();
+    for _ in 0..30 {
+        let mut bytes = orig.clone();
+        // Flip one random byte after the magic.
+        let idx = 4 + rng.next_range((bytes.len() - 4) as u64) as usize;
+        let flip = 1 + rng.next_range(255) as u8;
+        bytes[idx] ^= flip;
+        std::fs::write(&path, &bytes).unwrap();
+        let res = Checkpoint::load(&path);
+        // Either the CRC catches it (error) or the flipped byte was in the
+        // stored CRC itself (also error). Never a silent wrong read.
+        assert!(res.is_err(), "byte {idx} flip {flip:#x} undetected");
+    }
+}
+
+// ---------------------------------------------------------------------
+// BPE: random unicode strings round-trip through encode/decode
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_bpe_round_trips_random_strings() {
+    let mut gen = CorpusGenerator::new(CorpusSpec::default(), 3);
+    let corpus = gen.documents(150);
+    let bpe = BpeTrainer::new(400).train(corpus.as_bytes()).unwrap();
+    let mut rng = Pcg64::seed(0xbbe);
+    let alphabet: Vec<char> =
+        "abcdefghijklmnop qrstuvwxyz.,!?éü😀\n\t0123456789".chars().collect();
+    for case in 0..100 {
+        let len = rng.next_range(200) as usize;
+        let s: String = (0..len)
+            .map(|_| alphabet[rng.next_range(alphabet.len() as u64) as usize])
+            .collect();
+        let ids = bpe.encode(&s);
+        assert_eq!(bpe.decode(&ids), s, "case {case}");
+        // All ids in range.
+        assert!(ids.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON: writer output re-parses to the same value
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    match if depth == 0 { rng.next_range(4) } else { rng.next_range(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.gaussian() * 1e3).round() / 8.0),
+        3 => {
+            let len = rng.next_range(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    char::from_u32(32 + rng.next_range(90) as u32).unwrap()
+                })
+                .collect();
+            Json::Str(s + "\"\\\n✓")
+        }
+        4 => Json::Arr(
+            (0..rng.next_range(4)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => {
+            let mut obj = darkformer::ser::JsonObj::new();
+            for i in 0..rng.next_range(4) {
+                obj.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(obj)
+        }
+    }
+}
+
+#[test]
+fn prop_json_write_parse_round_trip() {
+    let mut rng = Pcg64::seed(0x15a);
+    for case in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string_compact();
+        let back = parse(&text).unwrap_or_else(|e| {
+            panic!("case {case}: wrote unparseable JSON {text:?}: {e}")
+        });
+        assert_eq!(back, v, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    let mut rng = Pcg64::seed(0x6a7);
+    for _ in 0..500 {
+        let len = rng.next_range(64) as usize;
+        let bytes: Vec<u8> =
+            (0..len).map(|_| rng.next_range(128) as u8).collect();
+        if let Ok(s) = String::from_utf8(bytes) {
+            let _ = parse(&s); // Must return, never panic.
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LR schedules: bounded, warmup-monotone, decay-monotone
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_lr_schedules_bounded_and_shaped() {
+    let mut rng = Pcg64::seed(0x5c4ed);
+    for _ in 0..50 {
+        let total = 50 + rng.next_range(500);
+        let warmup = rng.next_range(total / 2);
+        let final_frac = rng.next_f64() * 0.5;
+        for sched in [
+            LrSchedule::Constant,
+            LrSchedule::WarmupCosine { warmup_steps: warmup, final_frac },
+            LrSchedule::WarmupLinear { warmup_steps: warmup, final_frac },
+        ] {
+            let mut prev_warm = 0.0;
+            let mut prev_decay = f64::INFINITY;
+            for step in 0..total {
+                let m = sched.multiplier(step, total);
+                assert!(
+                    (0.0..=1.0 + 1e-9).contains(&m),
+                    "multiplier out of range: {m} ({sched:?})"
+                );
+                if step < warmup {
+                    assert!(m >= prev_warm - 1e-12, "warmup must ramp up");
+                    prev_warm = m;
+                } else if !matches!(sched, LrSchedule::Constant) {
+                    assert!(m <= prev_decay + 1e-12, "decay must not rise");
+                    prev_decay = m;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dataset: windows always in range, valid/train disjoint
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_dataset_windows_in_bounds_across_seeds() {
+    let mut gen = CorpusGenerator::new(CorpusSpec::default(), 5);
+    let corpus = gen.documents(200);
+    let bpe = BpeTrainer::new(300).train(corpus.as_bytes()).unwrap();
+    for seq_len in [8, 16, 32] {
+        let ds = TokenDataset::from_text(&corpus, &bpe, seq_len, 0.1).unwrap();
+        for seed in 0..20 {
+            let mut rng = Pcg64::seed(seed);
+            let b = ds.train_batch(4, &mut rng);
+            assert_eq!(b.len(), 4 * (seq_len + 1));
+            assert!(b.iter().all(|&t| t >= 0));
+            assert!(b
+                .iter()
+                .all(|&t| (t as usize) < bpe.vocab_size()));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spike detector: event count <= spiking steps <= total; no spikes on
+// monotone non-increasing sequences
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_spike_detector_counts_consistent() {
+    let mut rng = Pcg64::seed(0xde7ec7);
+    for _ in 0..50 {
+        let mut det = SpikeDetector::new(0.2, 0.5);
+        let n = 100 + rng.next_range(200) as usize;
+        let mut loss = 5.0;
+        let mut total = 0;
+        for _ in 0..n {
+            // Random walk with occasional big jumps.
+            if rng.next_f64() < 0.05 {
+                loss *= 1.0 + rng.next_f64() * 4.0;
+            } else {
+                loss *= 0.98 + rng.next_f64() * 0.04;
+            }
+            det.observe(loss);
+            total += 1;
+        }
+        assert!(det.events() <= det.spiking_steps());
+        assert!(det.spiking_steps() <= total);
+        assert!((0.0..=1.0).contains(&det.spike_fraction()));
+    }
+}
+
+#[test]
+fn prop_no_spikes_on_monotone_decreasing_loss() {
+    let mut rng = Pcg64::seed(0x900d);
+    for _ in 0..20 {
+        let mut det = SpikeDetector::new(0.3, 0.3);
+        let mut loss = 10.0 * (1.0 + rng.next_f64());
+        for _ in 0..300 {
+            assert!(!det.observe(loss));
+            loss *= 0.99 - rng.next_f64() * 0.005;
+        }
+        assert_eq!(det.events(), 0);
+    }
+}
