@@ -1,0 +1,47 @@
+# DARKFormer build/verify entry points.
+#
+# `make verify` = tier-1 (build + tests, default features: the pure-Rust
+# theory stack, no artifacts needed) plus formatting and lint gates.
+#
+# PJRT-dependent targets (the `darkformer` binary, integration tests, the
+# coordinator/fig1 benches) need `--features pjrt`; they are excluded from
+# tier-1 and skip gracefully when AOT artifacts are absent.
+
+CARGO ?= cargo
+
+.PHONY: verify build test lint fmt clippy bench bench-json pjrt-check clean
+
+verify: build test lint
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+lint: fmt clippy
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Offline-runnable benches (no artifacts required). Each writes
+# BENCH_<name>.json next to the stdout table (override with BENCH_OUT_DIR).
+bench:
+	$(CARGO) bench --bench variance
+	$(CARGO) bench --bench linear_attention
+	$(CARGO) bench --bench substrates
+
+bench-json: bench
+	@ls -l BENCH_*.json 2>/dev/null || true
+
+# Compile check for the PJRT-gated stack (links the vendored xla stub;
+# executing artifacts additionally needs the real xla bindings).
+pjrt-check:
+	$(CARGO) build --release --features pjrt
+
+clean:
+	$(CARGO) clean
+	rm -f BENCH_*.json

@@ -1,0 +1,142 @@
+//! Linear-attention scaling bench: exact softmax O(L²d) vs pure-Rust PRF
+//! linear attention O(L·m·d), causal and non-causal, isotropic
+//! (Performer) and data-aware (DARKFormer) banks, L ∈ {64..2048}.
+//!
+//! Prints the per-L latency table, checks the PRF forward against the
+//! exact reference at a moderate L, fits the log-log scaling exponent of
+//! the causal PRF path, and emits `BENCH_linear_attention.json`.
+//!
+//! Run: `cargo bench --bench linear_attention`.
+
+use darkformer::bench::BenchSuite;
+use darkformer::linalg::Matrix;
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
+use darkformer::rfa::{attention, FeatureBank, PrfEstimator};
+use darkformer::rng::{GaussianExt, Pcg64};
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+fn main() {
+    let d = 16;
+    let dv = 16;
+    let m = 64;
+    let mut rng = Pcg64::seed(21);
+    let mut suite = BenchSuite::new("linear_attention");
+
+    let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
+    let sigma = anisotropic_covariance(d, 0.8, 0.5, &mut rng);
+    let dark = PrfEstimator::new(
+        d,
+        m,
+        Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+    );
+    let iso_bank = FeatureBank::draw(&iso, &mut rng);
+    let dark_bank = FeatureBank::draw(&dark, &mut rng);
+
+    // Agreement check first: the linear path must track exact softmax.
+    {
+        let l = 128;
+        let big = PrfEstimator::new(d, 1024, Sampling::Isotropic);
+        let big_bank = FeatureBank::draw(&big, &mut rng);
+        let q = rows(l, d, 0.15, &mut rng);
+        let k = rows(l, d, 0.15, &mut rng);
+        let v = Matrix::from_rows(&rows(l, dv, 0.5, &mut rng));
+        let qm = Matrix::from_rows(&q);
+        let km = Matrix::from_rows(&k);
+        let exact = attention::softmax_attention(&qm, &km, &v, true);
+        let approx = attention::prf_attention(&big_bank, &q, &k, &v, true);
+        let err = approx.max_abs_diff(&exact);
+        println!("causal agreement at L={l}, m=1024: max |Δ| = {err:.4}");
+        suite.metric("causal_max_abs_err_L128_m1024", err);
+        if err > 0.25 {
+            println!("UNEXPECTED: PRF attention drifted from exact reference");
+        }
+    }
+
+    println!(
+        "\n{:>6} {:>12} {:>14} {:>14} {:>16} {:>10}",
+        "L", "exact ms", "prf ms", "prf-causal ms", "dark-causal ms", "speedup"
+    );
+    let seq_lens = [64usize, 128, 256, 512, 1024, 2048];
+    let mut causal_times: Vec<(usize, f64)> = Vec::new();
+    let mut exact_times: Vec<(usize, f64)> = Vec::new();
+    for &l in &seq_lens {
+        let q = rows(l, d, 0.15, &mut rng);
+        let k = rows(l, d, 0.15, &mut rng);
+        let v = Matrix::from_rows(&rows(l, dv, 0.5, &mut rng));
+        let qm = Matrix::from_rows(&q);
+        let km = Matrix::from_rows(&k);
+        let iters = if l >= 1024 { 3 } else { 8 };
+
+        let exact_ms = suite.bench(&format!("exact/L{l}"), 1, iters, || {
+            std::hint::black_box(attention::softmax_attention(
+                &qm, &km, &v, true,
+            ));
+        });
+        let prf_ms = suite.bench(&format!("prf/L{l}"), 1, iters, || {
+            std::hint::black_box(attention::prf_attention(
+                &iso_bank, &q, &k, &v, false,
+            ));
+        });
+        let causal_ms =
+            suite.bench(&format!("prf_causal/L{l}"), 1, iters, || {
+                std::hint::black_box(attention::prf_attention(
+                    &iso_bank, &q, &k, &v, true,
+                ));
+            });
+        let dark_ms =
+            suite.bench(&format!("dark_causal/L{l}"), 1, iters, || {
+                std::hint::black_box(attention::prf_attention(
+                    &dark_bank, &q, &k, &v, true,
+                ));
+            });
+        println!(
+            "{:>6} {:>12.3} {:>14.3} {:>14.3} {:>16.3} {:>9.2}x",
+            l,
+            exact_ms,
+            prf_ms,
+            causal_ms,
+            dark_ms,
+            exact_ms / causal_ms
+        );
+        causal_times.push((l, causal_ms));
+        exact_times.push((l, exact_ms));
+    }
+
+    // Log-log scaling exponents over the grid: linear attention must stay
+    // sub-quadratic (≈1), exact softmax trends to 2.
+    let slope = |times: &[(usize, f64)]| {
+        let (l0, t0) = times.first().copied().unwrap();
+        let (l1, t1) = times.last().copied().unwrap();
+        (t1 / t0).ln() / (l1 as f64 / l0 as f64).ln()
+    };
+    let causal_slope = slope(&causal_times);
+    let exact_slope = slope(&exact_times);
+    println!(
+        "\nscaling exponent (log-log, L={}..{}): prf-causal {:.2}, exact {:.2} {}",
+        seq_lens[0],
+        seq_lens[seq_lens.len() - 1],
+        causal_slope,
+        exact_slope,
+        if causal_slope < 1.7 {
+            "(sub-quadratic: OK)"
+        } else {
+            "(UNEXPECTED: not sub-quadratic)"
+        }
+    );
+    suite.metric("causal_prf_scaling_exponent", causal_slope);
+    suite.metric("exact_scaling_exponent", exact_slope);
+    suite.metric(
+        "speedup_at_L2048",
+        exact_times.last().unwrap().1 / causal_times.last().unwrap().1,
+    );
+
+    if let Err(e) = suite.write() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

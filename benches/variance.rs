@@ -1,21 +1,26 @@
-//! Theory bench: Theorem 3.2 variance table + estimator latency.
+//! Theory bench: Theorem 3.2 variance table + the batched-engine speedup.
 //!
 //! Regenerates the expected-Monte-Carlo-variance comparison (isotropic vs
-//! optimal proposal) at bench scale and times the estimator hot paths.
+//! optimal proposal), measures the variance-engine hot path — the scalar
+//! per-draw reference against the shared-bank, threaded batch engine at
+//! the acceptance point (d=8, m=16, 50 pairs × 2000 draws) — and times
+//! the estimator building blocks. Emits `BENCH_variance.json`.
+//!
 //! Run: `cargo bench --bench variance`.
 
-use darkformer::bench::bench;
+use darkformer::bench::BenchSuite;
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
-use darkformer::rfa::{optimal_proposal, variance, PrfEstimator};
+use darkformer::rfa::{batch, optimal_proposal, variance, PrfEstimator};
 use darkformer::rng::Pcg64;
 
 fn main() {
     let d = 8;
     let m = 16;
     let mut rng = Pcg64::seed(3);
+    let mut suite = BenchSuite::new("variance");
 
-    println!("== Theorem 3.2 variance table (d={d}, m={m}) ==");
+    println!("== Theorem 3.2 variance table (d={d}, m={m}, batched engine) ==");
     println!(
         "{:>6} {:>14} {:>14} {:>9}",
         "eps", "V(p_I)", "V(psi*)", "ratio"
@@ -30,10 +35,9 @@ fn main() {
         .unwrap();
         let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
         let opt = PrfEstimator::new(d, m, Sampling::Proposal(psi));
-        let v_iso =
-            variance::expected_mc_variance(&iso, &dist, 50, 2000, &mut rng);
-        let v_opt =
-            variance::expected_mc_variance(&opt, &dist, 50, 2000, &mut rng);
+        let (v_iso, v_opt) = batch::paired_expected_mc_variance_batched(
+            &iso, &opt, &dist, 50, 2000, &mut rng,
+        );
         println!(
             "{:>6.2} {:>14.6e} {:>14.6e} {:>9.3}",
             eps,
@@ -41,6 +45,7 @@ fn main() {
             v_opt,
             v_iso / v_opt
         );
+        suite.metric(format!("v_ratio_eps{eps}"), v_iso / v_opt);
         ratios.push((eps, v_iso / v_opt));
     }
     let grows = ratios.windows(2).all(|w| w[1].1 >= w[0].1 * 0.9);
@@ -49,11 +54,110 @@ fn main() {
         if grows { "OK" } else { "UNEXPECTED" }
     );
 
+    // -----------------------------------------------------------------
+    // Hot path: scalar per-draw engine vs shared-bank threaded engine at
+    // the acceptance configuration (d=8, m=16, 50 pairs × 2000 draws),
+    // on the data-aware arm whose per-draw Mahalanobis norms made the
+    // scalar path quadratic in d.
+    // -----------------------------------------------------------------
+    println!("\n== variance engine hot path (d={d}, m={m}, 50 pairs x 2000 draws) ==");
+    let lambda = anisotropic_covariance(d, 0.2, 0.6, &mut rng);
+    let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+    let dark = PrfEstimator::new(
+        d,
+        m,
+        Sampling::DataAware(MultivariateGaussian::new(lambda.clone()).unwrap()),
+    );
+    // Seed-faithful baseline: per-draw `single_term` calls, which recompute
+    // the two O(d²) Mahalanobis normalizers on every draw — the hot-path
+    // shape this PR removed (the in-tree scalar engine now hoists them).
+    let omega_dist = MultivariateGaussian::new(lambda.clone()).unwrap();
+    let seed_ms = suite.bench(
+        "expected_mc_variance/scalar_per_draw_norms/data_aware",
+        1,
+        5,
+        || {
+            let mut r = Pcg64::seed(77);
+            let mut acc = 0.0;
+            for _ in 0..50 {
+                let q = dist.sample(&mut r);
+                let k = dist.sample(&mut r);
+                let mut mean = 0.0;
+                let mut m2 = 0.0;
+                for i in 0..2000 {
+                    let omega = omega_dist.sample(&mut r);
+                    let z = dark.single_term(&q, &k, &omega);
+                    let delta = z - mean;
+                    mean += delta / (i + 1) as f64;
+                    m2 += delta * (z - mean);
+                }
+                acc += m2 / 1999.0;
+            }
+            std::hint::black_box(acc / 50.0 / dark.m as f64);
+        },
+    );
+    let scalar_ms = suite.bench("expected_mc_variance/scalar/data_aware", 1, 5, || {
+        let mut r = Pcg64::seed(77);
+        std::hint::black_box(variance::expected_mc_variance(
+            &dark, &dist, 50, 2000, &mut r,
+        ));
+    });
+    let batched_ms = suite.bench("expected_mc_variance/batched/data_aware", 1, 5, || {
+        let mut r = Pcg64::seed(77);
+        std::hint::black_box(batch::expected_mc_variance_batched(
+            &dark, &dist, 50, 2000, &mut r,
+        ));
+    });
+    let single_ms = suite.bench(
+        "expected_mc_variance/batched_1thread/data_aware",
+        1,
+        5,
+        || {
+            let mut r = Pcg64::seed(77);
+            std::hint::black_box(batch::expected_mc_variance_threaded(
+                &dark, &dist, 50, 2000, 1, &mut r,
+            ));
+        },
+    );
+    let speedup = scalar_ms / batched_ms;
+    println!(
+        "per-draw-norms {seed_ms:.2} ms  scalar {scalar_ms:.2} ms  batched {batched_ms:.2} ms  (1 thread {single_ms:.2} ms)"
+    );
+    println!(
+        "speedup: batched vs hoisted-scalar {speedup:.2}x, vs seed-style per-draw-norms {:.2}x",
+        seed_ms / batched_ms
+    );
+    suite.metric("hot_path_scalar_per_draw_norms_ms", seed_ms);
+    suite.metric("hot_path_scalar_ms", scalar_ms);
+    suite.metric("hot_path_batched_ms", batched_ms);
+    suite.metric("hot_path_batched_1thread_ms", single_ms);
+    suite.metric("hot_path_speedup", speedup);
+    suite.metric("hot_path_speedup_1thread", scalar_ms / single_ms);
+    suite.metric("hot_path_speedup_vs_per_draw_norms", seed_ms / batched_ms);
+
+    // Same comparison on the isotropic arm. Both engines are O(d) per draw
+    // here (no Mahalanobis term to hoist), so this isolates the
+    // allocation/bank/threading win from the normalizer-hoist win above.
+    let iso16 = PrfEstimator::new(d, m, Sampling::Isotropic);
+    let iso_scalar = suite.bench("expected_mc_variance/scalar/isotropic", 1, 5, || {
+        let mut r = Pcg64::seed(78);
+        std::hint::black_box(variance::expected_mc_variance(
+            &iso16, &dist, 50, 2000, &mut r,
+        ));
+    });
+    let iso_batched = suite.bench("expected_mc_variance/batched/isotropic", 1, 5, || {
+        let mut r = Pcg64::seed(78);
+        std::hint::black_box(batch::expected_mc_variance_batched(
+            &iso16, &dist, 50, 2000, &mut r,
+        ));
+    });
+    suite.metric("hot_path_speedup_isotropic", iso_scalar / iso_batched);
+
     // Ablation: Performer's orthogonal-random-feature coupling on top of
     // iid isotropic sampling (DESIGN.md: variance-reduction extensions).
     println!("\n== ablation: iid vs block-orthogonal features (m=8) ==");
     {
-        use darkformer::rfa::orthogonal::orthogonal_prf_estimate;
+        use darkformer::rfa::FeatureBank;
         use darkformer::rng::GaussianExt;
         let d = 8;
         let m = 8;
@@ -67,48 +171,64 @@ fn main() {
         };
         let iid = PrfEstimator::new(d, m, Sampling::Isotropic);
         let v_iid = var_of(
-            &(0..reps).map(|_| iid.estimate(&q, &k, &mut rng)).collect::<Vec<_>>(),
+            &(0..reps)
+                .map(|_| FeatureBank::draw(&iid, &mut rng).estimate(&q, &k))
+                .collect::<Vec<_>>(),
         );
         let v_ort = var_of(
             &(0..reps)
-                .map(|_| orthogonal_prf_estimate(&q, &k, m, &mut rng))
+                .map(|_| {
+                    FeatureBank::draw_orthogonal(&iid, &mut rng)
+                        .estimate(&q, &k)
+                })
                 .collect::<Vec<_>>(),
         );
         println!(
             "estimator variance: iid {v_iid:.6e}  orthogonal {v_ort:.6e}  (ratio {:.3})",
             v_iid / v_ort
         );
+        suite.metric("orf_variance_ratio", v_iid / v_ort);
     }
 
     println!("\n== estimator hot-path latency ==");
-    let lambda = anisotropic_covariance(d, 0.2, 0.6, &mut rng);
-    let dist = MultivariateGaussian::new(lambda.clone()).unwrap();
     let q = dist.sample(&mut rng);
     let k = dist.sample(&mut rng);
     let iso = PrfEstimator::new(d, 64, Sampling::Isotropic);
-    bench("estimate/isotropic/m64", 3, 50, || {
+    suite.bench("estimate/isotropic/m64", 3, 50, || {
         std::hint::black_box(iso.estimate(&q, &k, &mut rng.clone()));
     });
     let psi = MultivariateGaussian::new(optimal_proposal(&lambda).unwrap())
         .unwrap();
     let opt = PrfEstimator::new(d, 64, Sampling::Proposal(psi));
-    bench("estimate/importance/m64", 3, 50, || {
+    suite.bench("estimate/importance/m64", 3, 50, || {
         std::hint::black_box(opt.estimate(&q, &k, &mut rng.clone()));
     });
-    let dark = PrfEstimator::new(
+    let dark64 = PrfEstimator::new(
         d,
         64,
         Sampling::DataAware(MultivariateGaussian::new(lambda.clone()).unwrap()),
     );
-    bench("estimate/data_aware/m64", 3, 50, || {
-        std::hint::black_box(dark.estimate(&q, &k, &mut rng.clone()));
+    suite.bench("estimate/data_aware/m64", 3, 50, || {
+        std::hint::black_box(dark64.estimate(&q, &k, &mut rng.clone()));
     });
-    bench("cholesky/d64", 3, 50, || {
+    {
+        use darkformer::rfa::FeatureBank;
+        suite.bench("bank_draw+estimate/data_aware/m64", 3, 50, || {
+            let mut r = rng.clone();
+            let bank = FeatureBank::draw(&dark64, &mut r);
+            std::hint::black_box(bank.estimate(&q, &k));
+        });
+    }
+    suite.bench("cholesky/d64", 3, 50, || {
         let big = anisotropic_covariance(64, 0.2, 0.5, &mut rng.clone());
         std::hint::black_box(big.cholesky());
     });
-    bench("jacobi_eigen/d32", 1, 10, || {
+    suite.bench("jacobi_eigen/d32", 1, 10, || {
         let big = anisotropic_covariance(32, 0.2, 0.5, &mut rng.clone());
         std::hint::black_box(big.jacobi_eigen());
     });
+
+    if let Err(e) = suite.write() {
+        eprintln!("could not write bench json: {e}");
+    }
 }

@@ -8,10 +8,11 @@
 
 use anyhow::Result;
 use darkformer::linalg::Matrix;
+use darkformer::rfa::batch;
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
 use darkformer::rfa::proposal::{anisotropy_index, optimal_eigenvalue};
-use darkformer::rfa::{optimal_proposal, variance, PrfEstimator};
+use darkformer::rfa::{optimal_proposal, PrfEstimator};
 use darkformer::rng::Pcg64;
 
 fn main() -> Result<()> {
@@ -43,8 +44,11 @@ fn main() -> Result<()> {
 
         let iso = PrfEstimator::new(d, m, Sampling::Isotropic);
         let opt = PrfEstimator::new(d, m, Sampling::Proposal(psi));
-        let v_iso = variance::expected_mc_variance(&iso, &dist, 60, 2000, &mut rng);
-        let v_opt = variance::expected_mc_variance(&opt, &dist, 60, 2000, &mut rng);
+        // Shared-pair batched engine: same (q, k) draws for both
+        // estimators, shared draw banks, all cores.
+        let (v_iso, v_opt) = batch::paired_expected_mc_variance_batched(
+            &iso, &opt, &dist, 60, 2000, &mut rng,
+        );
         println!(
             "{:>6.2} {:>12.3} {:>14.6e} {:>14.6e} {:>9.3}",
             eps,

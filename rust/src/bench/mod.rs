@@ -1,12 +1,22 @@
 //! Micro-benchmark harness (no criterion in the offline environment).
 //!
-//! `cargo bench` targets use [`Bencher`] directly: warmup, fixed-count
+//! `cargo bench` targets use [`bench`] directly: warmup, fixed-count
 //! timing, robust summary (mean / min / p50). Deliberately simple — the
 //! paper-level benchmarks (Figs. 1-5) are end-to-end harnesses under
 //! `coordinator::experiments`; these benches cover hot-path latency and
 //! substrate throughput.
+//!
+//! Bench targets that should leave a machine-readable trail collect their
+//! results in a [`BenchSuite`] and call [`BenchSuite::write`], which emits
+//! `BENCH_<suite>.json` (override the directory with `BENCH_OUT_DIR`).
+//! The JSON carries every `BenchResult` (name, iters, mean/min/p50 ms)
+//! plus free-form scalar metrics (speedups, variances, scaling
+//! exponents), so the perf trajectory is diffable across PRs.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::ser::{Json, JsonObj};
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -24,6 +34,89 @@ impl BenchResult {
             "{:<44} {:>6} iters  mean {:>10.4} ms  min {:>10.4} ms  p50 {:>10.4} ms",
             self.name, self.iters, self.mean_ms, self.min_ms, self.p50_ms
         );
+    }
+
+    /// JSON record: `{"name", "iters", "mean_ms", "min_ms", "p50_ms"}`.
+    pub fn to_json(&self) -> Json {
+        let mut obj = JsonObj::new();
+        obj.insert("name", Json::Str(self.name.clone()));
+        obj.insert("iters", Json::Num(self.iters as f64));
+        obj.insert("mean_ms", Json::Num(self.mean_ms));
+        obj.insert("min_ms", Json::Num(self.min_ms));
+        obj.insert("p50_ms", Json::Num(self.p50_ms));
+        Json::Obj(obj)
+    }
+}
+
+/// Collects [`BenchResult`]s and scalar metrics for one bench target and
+/// persists them as `BENCH_<suite>.json`.
+pub struct BenchSuite {
+    suite: String,
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: impl Into<String>) -> Self {
+        Self { suite: suite.into(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Run [`bench`] and record the result; returns the mean ms.
+    pub fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: F,
+    ) -> f64 {
+        let r = bench(name, warmup, iters, f);
+        let mean = r.mean_ms;
+        self.results.push(r);
+        mean
+    }
+
+    /// Record an externally produced result.
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Record a free-form scalar metric (speedup, variance, exponent...).
+    pub fn metric(&mut self, key: impl Into<String>, value: f64) {
+        self.metrics.push((key.into(), value));
+    }
+
+    /// Serialize the whole suite.
+    pub fn to_json(&self) -> Json {
+        let mut obj = JsonObj::new();
+        obj.insert("suite", Json::Str(self.suite.clone()));
+        obj.insert(
+            "results",
+            Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+        );
+        let mut metrics = JsonObj::new();
+        for (k, v) in &self.metrics {
+            metrics.insert(k.clone(), Json::Num(*v));
+        }
+        obj.insert("metrics", Json::Obj(metrics));
+        Json::Obj(obj)
+    }
+
+    /// Write `BENCH_<suite>.json` into `BENCH_OUT_DIR` (default: the
+    /// current directory). Returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_OUT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        self.write_to(&dir)
+    }
+
+    /// Write `BENCH_<suite>.json` into an explicit directory.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, self.to_json().to_string_compact())?;
+        println!("bench json: {}", path.display());
+        Ok(path)
     }
 }
 
@@ -89,5 +182,42 @@ mod tests {
     #[should_panic]
     fn zero_iters_panics() {
         bench("bad", 0, 0, || {});
+    }
+
+    #[test]
+    fn suite_json_round_trips() {
+        let mut suite = BenchSuite::new("unit");
+        suite.record(BenchResult {
+            name: "case".into(),
+            iters: 3,
+            mean_ms: 1.5,
+            min_ms: 1.0,
+            p50_ms: 1.25,
+        });
+        suite.metric("speedup", 6.5);
+        let text = suite.to_json().to_string_compact();
+        let back = crate::ser::parse(&text).expect("valid json");
+        assert_eq!(back.field("suite").unwrap().as_str(), Some("unit"));
+        let results = back.field("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].field("name").unwrap().as_str(), Some("case"));
+        assert_eq!(results[0].field("iters").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            back.field("metrics").unwrap().field("speedup").unwrap().as_f64(),
+            Some(6.5)
+        );
+    }
+
+    #[test]
+    fn suite_writes_json_file() {
+        // Per-process dir: concurrent test runs must not race on one file.
+        let dir = std::env::temp_dir()
+            .join(format!("dkf_bench_suite_{}", std::process::id()));
+        let mut suite = BenchSuite::new("writer_test");
+        suite.metric("x", 1.0);
+        let path = suite.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_writer_test.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::ser::parse(&text).is_ok());
     }
 }

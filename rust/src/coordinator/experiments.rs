@@ -10,8 +10,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::config::{ExperimentConfig, LrSchedule, TrainMode};
 use crate::linalg::Matrix;
+#[cfg(feature = "pjrt")]
 use crate::metrics::MetricLogger;
 use crate::rfa::{
     self, estimators::Sampling, gaussian::anisotropic_covariance,
@@ -19,7 +21,9 @@ use crate::rfa::{
 };
 use crate::rng::Pcg64;
 
+#[cfg(feature = "pjrt")]
 use super::trainer::{TrainReport, Trainer};
+#[cfg(feature = "pjrt")]
 use super::workbench::Workbench;
 
 /// Shared harness context.
@@ -31,6 +35,7 @@ pub struct ExpContext {
     pub corpus_docs: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl ExpContext {
     fn workbench(&self) -> Result<Workbench> {
         Workbench::prepare(
@@ -55,6 +60,7 @@ impl ExpContext {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_one(cfg: ExperimentConfig, wb: &Workbench) -> Result<TrainReport> {
     let trainer = Trainer::new(cfg.clone(), wb)?;
     eprintln!(
@@ -66,6 +72,7 @@ fn run_one(cfg: ExperimentConfig, wb: &Workbench) -> Result<TrainReport> {
 
 /// Merge per-variant metrics.jsonl files into one long-format CSV:
 /// `step,variant,loss,acc,lr,grad_norm,wall_ms`.
+#[cfg(feature = "pjrt")]
 fn merge_curves(runs: &[(String, PathBuf)], out_csv: &Path) -> Result<()> {
     let mut csv = String::from("step,variant,loss,acc,lr,grad_norm,wall_ms\n");
     for (variant, metrics_path) in runs {
@@ -82,6 +89,7 @@ fn merge_curves(runs: &[(String, PathBuf)], out_csv: &Path) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn print_report_table(title: &str, reports: &[TrainReport]) {
     eprintln!("\n=== {title} ===");
     eprintln!(
@@ -110,6 +118,7 @@ pub const FIG2_VARIANTS: &[&str] =
     &["exact", "darkformer", "performer", "lfk", "random", "constant"];
 
 /// Pretrain each variant from scratch; curves to `fig2/pretrain.csv`.
+#[cfg(feature = "pjrt")]
 pub fn fig2_pretrain(
     ctx: &ExpContext,
     variants: &[&str],
@@ -139,6 +148,7 @@ pub fn fig2_pretrain(
 
 /// Ensure a pretrained exact-softmax checkpoint exists (the stand-in for
 /// the paper's pretrained Gemma weights); returns its path.
+#[cfg(feature = "pjrt")]
 pub fn ensure_pretrained(
     ctx: &ExpContext,
     steps: u64,
@@ -162,6 +172,7 @@ pub fn ensure_pretrained(
 }
 
 /// Finetune every variant from the shared exact-pretrained checkpoint.
+#[cfg(feature = "pjrt")]
 pub fn fig2_finetune(
     ctx: &ExpContext,
     variants: &[&str],
@@ -192,6 +203,7 @@ pub fn fig2_finetune(
 // Fig. 3 — extended finetuning (Performer slowly closes the gap)
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub fn fig3_long_finetune(
     ctx: &ExpContext,
     pretrain_steps: u64,
@@ -221,6 +233,7 @@ pub fn fig3_long_finetune(
 // Fig. 4 — qkv-only partial finetuning
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub fn fig4_qkv_finetune(
     ctx: &ExpContext,
     pretrain_steps: u64,
@@ -251,6 +264,7 @@ pub fn fig4_qkv_finetune(
 // Fig. 5 — learning-rate sweep stability
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub fn fig5_lr_sweep(
     ctx: &ExpContext,
     pretrain_steps: u64,
@@ -300,6 +314,7 @@ pub fn fig5_lr_sweep(
 
 /// Time the attention-only probe artifacts across sequence lengths.
 /// Writes `fig1/scaling.csv` with per-L mean wall time for both paths.
+#[cfg(feature = "pjrt")]
 pub fn fig1_scaling(
     ctx: &ExpContext,
     seq_lens: &[usize],

@@ -11,10 +11,14 @@
 //!   theory tables); each regenerates one table/figure as CSV.
 
 pub mod experiments;
+#[cfg(feature = "pjrt")]
 pub mod train_state;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod workbench;
 
+#[cfg(feature = "pjrt")]
 pub use train_state::TrainState;
+#[cfg(feature = "pjrt")]
 pub use trainer::{HotState, TrainReport, Trainer};
 pub use workbench::Workbench;

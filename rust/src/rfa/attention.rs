@@ -1,0 +1,306 @@
+//! Pure-Rust linear-attention forward over PRF feature maps (FAVOR+
+//! structure), with an exact-softmax reference.
+//!
+//! Exact attention materializes the L×L score matrix: O(L²·d) time and
+//! O(L²) memory. With a positive feature map `Φ` the same normalized
+//! aggregation factorizes:
+//!
+//! ```text
+//! out_l = Σ_j κ(q_l, k_j)·v_j / Σ_j κ(q_l, k_j)
+//!       ≈ φ(q_l)ᵀ·(Σ_j φ(k_j)·v_jᵀ) / φ(q_l)ᵀ·(Σ_j φ(k_j))
+//! ```
+//!
+//! which is O(L·n·d) time and O(n·d) state. The causal variant keeps the
+//! running prefix sums `S_l = Σ_{j≤l} φ(k_j)·v_jᵀ` and `z_l = Σ_{j≤l}
+//! φ(k_j)` — one pass over the sequence, constant state per position.
+//!
+//! Everything here estimates the *unnormalized-temperature* kernel
+//! `κ(q,k) = exp(q·k)` (data-aware banks estimate `exp(qᵀΣk)`); callers
+//! fold any `1/√d` temperature into Q before the feature map, matching
+//! the convention of the [`super::estimators`] oracles.
+
+use crate::linalg::Matrix;
+
+use super::features::FeatureBank;
+
+/// Exact softmax attention reference: `out = softmax(Q·Kᵀ)·V`, optionally
+/// causally masked. O(L²·d) — the brute-force baseline the linear path is
+/// validated against.
+pub fn softmax_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    causal: bool,
+) -> Matrix {
+    assert_eq!(q.cols(), k.cols(), "q/k dim mismatch");
+    assert_eq!(k.rows(), v.rows(), "k/v length mismatch");
+    let (lq, lk, dv) = (q.rows(), k.rows(), v.cols());
+    let scores = q.matmul_transb(k);
+    let mut out = Matrix::zeros(lq, dv);
+    for i in 0..lq {
+        let limit = if causal { (i + 1).min(lk) } else { lk };
+        // Stable softmax over the (masked) row.
+        let mut max = f64::NEG_INFINITY;
+        for j in 0..limit {
+            max = max.max(scores[(i, j)]);
+        }
+        let mut denom = 0.0;
+        for j in 0..limit {
+            let w = (scores[(i, j)] - max).exp();
+            denom += w;
+            for c in 0..dv {
+                out[(i, c)] += w * v[(j, c)];
+            }
+        }
+        for c in 0..dv {
+            out[(i, c)] /= denom;
+        }
+    }
+    out
+}
+
+/// Non-causal linear attention from precomputed feature matrices:
+/// `out = diag(Φq·z)⁻¹ · Φq · (Φkᵀ·V)` with `z = Φkᵀ·1`.
+///
+/// O(L·n·dv): the key/value summary `S = Φkᵀ·V` is built in one pass, the
+/// readout is a single `Φq·S` matmul.
+pub fn linear_attention(
+    phi_q: &Matrix,
+    phi_k: &Matrix,
+    v: &Matrix,
+) -> Matrix {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
+    let (lk, n, dv) = (phi_k.rows(), phi_k.cols(), v.cols());
+    // S[i, c] = Σ_j Φk[j, i] · V[j, c]  (stream over rows: cache-friendly)
+    let mut s = Matrix::zeros(n, dv);
+    let mut z = vec![0.0; n];
+    for j in 0..lk {
+        let krow = phi_k.row(j);
+        let vrow = v.row(j);
+        for (i, &phi) in krow.iter().enumerate() {
+            z[i] += phi;
+            for (c, &vc) in vrow.iter().enumerate() {
+                s[(i, c)] += phi * vc;
+            }
+        }
+    }
+    let mut out = phi_q.matmul(&s);
+    let denom = phi_q.matvec(&z);
+    for l in 0..out.rows() {
+        let d = denom[l];
+        for c in 0..dv {
+            out[(l, c)] /= d;
+        }
+    }
+    out
+}
+
+/// Causal linear attention (FAVOR+ running state): one pass with prefix
+/// sums `S ∈ R^{n×dv}`, `z ∈ R^n` updated per position before readout.
+///
+/// O(L·n·dv) time, O(n·dv) state — the kernel the paper's Fig. 1 scaling
+/// claim is about.
+pub fn causal_linear_attention(
+    phi_q: &Matrix,
+    phi_k: &Matrix,
+    v: &Matrix,
+) -> Matrix {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_q.rows(), phi_k.rows(), "causal attention needs lq == lk");
+    assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
+    let (l, n, dv) = (phi_q.rows(), phi_q.cols(), v.cols());
+    let mut s = vec![0.0; n * dv]; // S[i, c] row-major
+    let mut z = vec![0.0; n];
+    let mut out = Matrix::zeros(l, dv);
+    for t in 0..l {
+        // State update with (k_t, v_t).
+        let krow = phi_k.row(t);
+        let vrow = v.row(t);
+        for (i, &phi) in krow.iter().enumerate() {
+            z[i] += phi;
+            let srow = &mut s[i * dv..(i + 1) * dv];
+            for (sc, &vc) in srow.iter_mut().zip(vrow) {
+                *sc += phi * vc;
+            }
+        }
+        // Readout with q_t.
+        let qrow = phi_q.row(t);
+        let mut denom = 0.0;
+        for (i, &phi) in qrow.iter().enumerate() {
+            denom += phi * z[i];
+            let srow = &s[i * dv..(i + 1) * dv];
+            for c in 0..dv {
+                out[(t, c)] += phi * srow[c];
+            }
+        }
+        for c in 0..dv {
+            out[(t, c)] /= denom;
+        }
+    }
+    out
+}
+
+/// End-to-end PRF attention: map Q/K through the bank's feature map, then
+/// run the linear forward. `q`/`k` are rows of length `bank.dim()`.
+pub fn prf_attention(
+    bank: &FeatureBank,
+    q: &[Vec<f64>],
+    k: &[Vec<f64>],
+    v: &Matrix,
+    causal: bool,
+) -> Matrix {
+    let phi_q = bank.feature_matrix(q);
+    let phi_k = bank.feature_matrix(k);
+    if causal {
+        causal_linear_attention(&phi_q, &phi_k, v)
+    } else {
+        linear_attention(&phi_q, &phi_k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfa::estimators::{PrfEstimator, Sampling};
+    use crate::rng::{GaussianExt, Pcg64};
+
+    fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        (0..l)
+            .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+            .collect()
+    }
+
+    fn to_matrix(rows: &[Vec<f64>]) -> Matrix {
+        Matrix::from_rows(rows)
+    }
+
+    /// Brute-force normalized aggregation over an explicit kernel gram.
+    fn reference_from_gram(gram: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let (lq, lk, dv) = (gram.rows(), gram.cols(), v.cols());
+        let mut out = Matrix::zeros(lq, dv);
+        for i in 0..lq {
+            let limit = if causal { (i + 1).min(lk) } else { lk };
+            let mut denom = 0.0;
+            for j in 0..limit {
+                denom += gram[(i, j)];
+                for c in 0..dv {
+                    out[(i, c)] += gram[(i, j)] * v[(j, c)];
+                }
+            }
+            for c in 0..dv {
+                out[(i, c)] /= denom;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn causal_prefix_sums_match_quadratic_identity() {
+        // Algebraic identity, no MC tolerance: the O(L·n·dv) prefix-sum
+        // forward must equal brute-force aggregation over the bank's own
+        // estimated kernel gram, up to fp reassociation.
+        let mut rng = Pcg64::seed(1201);
+        let (l, d, dv, m) = (20, 4, 3, 16);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = crate::rfa::features::FeatureBank::draw(&est, &mut rng);
+        let q = rows(l, d, 0.4, &mut rng);
+        let k = rows(l, d, 0.4, &mut rng);
+        let v = to_matrix(&rows(l, dv, 1.0, &mut rng));
+        let fast = prf_attention(&bank, &q, &k, &v, true);
+        let gram = bank.gram(&q, &k);
+        let reference = reference_from_gram(&gram, &v, true);
+        assert!(
+            fast.max_abs_diff(&reference) < 1e-10,
+            "diff={}",
+            fast.max_abs_diff(&reference)
+        );
+    }
+
+    #[test]
+    fn noncausal_matches_quadratic_identity() {
+        let mut rng = Pcg64::seed(1202);
+        let (lq, lk, d, dv, m) = (9, 13, 5, 4, 24);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = crate::rfa::features::FeatureBank::draw(&est, &mut rng);
+        let q = rows(lq, d, 0.3, &mut rng);
+        let k = rows(lk, d, 0.3, &mut rng);
+        let v = to_matrix(&rows(lk, dv, 1.0, &mut rng));
+        let fast = prf_attention(&bank, &q, &k, &v, false);
+        let gram = bank.gram(&q, &k);
+        let reference = reference_from_gram(&gram, &v, false);
+        assert!(
+            fast.max_abs_diff(&reference) < 1e-10,
+            "diff={}",
+            fast.max_abs_diff(&reference)
+        );
+    }
+
+    #[test]
+    fn softmax_reference_rows_are_convex_combinations() {
+        let mut rng = Pcg64::seed(1203);
+        let (l, d) = (12, 4);
+        let q = to_matrix(&rows(l, d, 0.5, &mut rng));
+        let k = to_matrix(&rows(l, d, 0.5, &mut rng));
+        // v = all-ones: any weighted average must be exactly 1.
+        let v = Matrix::from_vec(l, 2, vec![1.0; l * 2]);
+        for causal in [false, true] {
+            let out = softmax_attention(&q, &k, &v, causal);
+            for i in 0..l {
+                for c in 0..2 {
+                    assert!(
+                        (out[(i, c)] - 1.0).abs() < 1e-12,
+                        "row {i} not normalized: {}",
+                        out[(i, c)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_position_of_causal_attends_only_to_itself() {
+        let mut rng = Pcg64::seed(1204);
+        let (l, d, dv, m) = (6, 3, 2, 64);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = crate::rfa::features::FeatureBank::draw(&est, &mut rng);
+        let q = rows(l, d, 0.3, &mut rng);
+        let k = rows(l, d, 0.3, &mut rng);
+        let v = to_matrix(&rows(l, dv, 1.0, &mut rng));
+        let out = prf_attention(&bank, &q, &k, &v, true);
+        // Position 0 sees only v_0, and the kernel weight cancels in the
+        // normalization — exactly v_0 regardless of the feature draw.
+        for c in 0..dv {
+            assert!(
+                (out[(0, c)] - v[(0, c)]).abs() < 1e-12,
+                "out0={} v0={}",
+                out[(0, c)],
+                v[(0, c)]
+            );
+        }
+    }
+
+    #[test]
+    fn prf_attention_approximates_exact_softmax() {
+        // MC agreement: with a generous feature budget the PRF forward
+        // tracks the exact masked softmax closely on mild inputs.
+        let mut rng = Pcg64::seed(1205);
+        let (l, d, dv, m) = (24, 4, 3, 2048);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = crate::rfa::features::FeatureBank::draw(&est, &mut rng);
+        let q = rows(l, d, 0.25, &mut rng);
+        let k = rows(l, d, 0.25, &mut rng);
+        let v = to_matrix(&rows(l, dv, 0.5, &mut rng));
+        let qm = to_matrix(&q);
+        let km = to_matrix(&k);
+        for causal in [false, true] {
+            let approx = prf_attention(&bank, &q, &k, &v, causal);
+            let exact = softmax_attention(&qm, &km, &v, causal);
+            let diff = approx.max_abs_diff(&exact);
+            assert!(
+                diff < 0.15,
+                "causal={causal}: PRF attention drifted from exact: {diff}"
+            );
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Batched, threaded Monte-Carlo variance engine.
+//!
+//! [`super::variance::expected_mc_variance`] is the scalar reference: per
+//! (q, k) pair it draws `n_omega` omegas one Vec at a time and evaluates
+//! the integrand per draw (with, historically, two O(d²) Mahalanobis
+//! norms *inside* every term). This module reworks the same estimator
+//! around the shared-bank machinery:
+//!
+//! * each pair draws its `n_omega×d` bank in one shot
+//!   ([`super::features::FeatureBank::draw_n`]): one flat Gaussian fill +
+//!   one `Z·Lᵀ` contraction instead of `2·n_omega` small allocations;
+//! * pair normalizers are computed once per pair (O(d²)), every term is
+//!   O(d);
+//! * pairs fan out across `std::thread::scope` workers.
+//!
+//! **Determinism:** the root rng samples the (q, k) pairs and splits one
+//! child stream per pair *before* any thread is spawned; workers only
+//! consume their pair-local streams, and results are reduced in pair
+//! order. The returned value is therefore a pure function of the seed —
+//! independent of the worker count — which `rust/tests/rfa_batch.rs`
+//! pins.
+
+use crate::rng::Pcg64;
+
+use super::estimators::PrfEstimator;
+use super::features::FeatureBank;
+use super::gaussian::MultivariateGaussian;
+
+/// One unit of work: a sampled input pair plus its private rng stream.
+struct PairJob {
+    q: Vec<f64>,
+    k: Vec<f64>,
+    rng: Pcg64,
+}
+
+/// Sample `n_pairs` (q, k) pairs and split a child stream per pair. Pure
+/// function of `rng`'s state; all downstream work is thread-safe replay.
+fn pair_jobs(
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    rng: &mut Pcg64,
+) -> Vec<PairJob> {
+    (0..n_pairs)
+        .map(|_| {
+            let q = input_dist.sample(rng);
+            let k = input_dist.sample(rng);
+            let rng = rng.split();
+            PairJob { q, k, rng }
+        })
+        .collect()
+}
+
+/// Welford variance of a term stream (the integrand spans orders of
+/// magnitude, so the shifted one-pass form matters).
+fn welford_variance(terms: &[f64]) -> f64 {
+    let mut mean = 0.0;
+    let mut m2 = 0.0;
+    for (i, &z) in terms.iter().enumerate() {
+        let delta = z - mean;
+        mean += delta / (i + 1) as f64;
+        m2 += delta * (z - mean);
+    }
+    m2 / (terms.len() - 1) as f64
+}
+
+/// `Var_omega[Z(q, k, ω)]` for one pair from a freshly drawn shared bank.
+fn pair_variance(
+    est: &PrfEstimator,
+    job: &mut PairJob,
+    n_omega: usize,
+) -> f64 {
+    let bank = FeatureBank::draw_n(est, n_omega, &mut job.rng);
+    welford_variance(&bank.single_terms(&job.q, &job.k))
+}
+
+/// Run `f` over the jobs on `threads` workers, writing one value per job.
+/// Chunking only affects scheduling: each job's value comes from its own
+/// rng stream, and the caller reduces in job order.
+fn run_jobs<T, F>(jobs: &mut [PairJob], threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(&mut PairJob) -> T + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.max(1).min(n);
+    let chunk = n.div_ceil(workers);
+    let mut results = vec![T::default(); n];
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (job_chunk, out_chunk) in
+            jobs.chunks_mut(chunk).zip(results.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for (job, out) in job_chunk.iter_mut().zip(out_chunk) {
+                    *out = f(job);
+                }
+            });
+        }
+    });
+    results
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Batched expected MC variance `V(ψ) = E_{q,k}[Var_ω[κ̂(q,k)]]` of the
+/// m-sample estimator — the drop-in fast path for
+/// [`super::variance::expected_mc_variance`], using all available cores.
+///
+/// Same estimand and same `Var[Z]/m` convention as the scalar engine; the
+/// draw streams differ (per-pair split streams instead of one shared
+/// stream), so values agree statistically, not bitwise.
+pub fn expected_mc_variance_batched(
+    est: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    n_omega: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    expected_mc_variance_threaded(
+        est,
+        input_dist,
+        n_pairs,
+        n_omega,
+        default_threads(),
+        rng,
+    )
+}
+
+/// [`expected_mc_variance_batched`] with an explicit worker count. The
+/// result is identical for every `threads >= 1` under a fixed seed.
+pub fn expected_mc_variance_threaded(
+    est: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    n_omega: usize,
+    threads: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    assert!(n_omega >= 2, "variance estimation needs at least two draws");
+    let mut jobs = pair_jobs(input_dist, n_pairs, rng);
+    let vars =
+        run_jobs(&mut jobs, threads, |job| pair_variance(est, job, n_omega));
+    vars.iter().sum::<f64>() / n_pairs as f64 / est.m as f64
+}
+
+/// Paired comparison on the SAME (q, k) pairs (and per-pair streams):
+/// returns `(V_a, V_b)`. Mirrors
+/// [`super::variance::paired_expected_mc_variance`] so variance *ratios*
+/// are free of across-pair noise.
+pub fn paired_expected_mc_variance_batched(
+    est_a: &PrfEstimator,
+    est_b: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    n_omega: usize,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    paired_expected_mc_variance_threaded(
+        est_a,
+        est_b,
+        input_dist,
+        n_pairs,
+        n_omega,
+        default_threads(),
+        rng,
+    )
+}
+
+/// Paired comparison with an explicit worker count; see
+/// [`paired_expected_mc_variance_batched`].
+pub fn paired_expected_mc_variance_threaded(
+    est_a: &PrfEstimator,
+    est_b: &PrfEstimator,
+    input_dist: &MultivariateGaussian,
+    n_pairs: usize,
+    n_omega: usize,
+    threads: usize,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    assert!(n_omega >= 2, "variance estimation needs at least two draws");
+    let mut jobs = pair_jobs(input_dist, n_pairs, rng);
+    // Both estimators consume the pair's stream in a fixed order:
+    // deterministic and shared-pair.
+    let results = run_jobs(&mut jobs, threads, |job| {
+        let va = pair_variance(est_a, job, n_omega);
+        let vb = pair_variance(est_b, job, n_omega);
+        (va, vb)
+    });
+    let np = n_pairs as f64;
+    let va: f64 = results.iter().map(|r| r.0).sum::<f64>() / np / est_a.m as f64;
+    let vb: f64 = results.iter().map(|r| r.1).sum::<f64>() / np / est_b.m as f64;
+    (va, vb)
+}

@@ -66,30 +66,70 @@ impl PrfEstimator {
         Self { m, sampling, dim, iso }
     }
 
+    /// The `h`-factor normalizers `(a_q, a_k)` for a (q, k) pair:
+    /// `a_x = ½·xᵀΣx` under `DataAware` (Eq. 3's Mahalanobis norms, Σ the
+    /// sampling covariance), `a_x = ½·‖x‖²` otherwise. These are O(d²)
+    /// for the data-aware arm and depend only on the pair, so every
+    /// multi-draw loop hoists them out of the per-draw hot path.
+    pub fn pair_normalizers(&self, q: &[f64], k: &[f64]) -> (f64, f64) {
+        match &self.sampling {
+            Sampling::Isotropic | Sampling::Proposal(_) => {
+                (0.5 * sq_norm(q), 0.5 * sq_norm(k))
+            }
+            Sampling::DataAware(ps) => {
+                let sigma = ps.cov();
+                (
+                    0.5 * dot(q, &sigma.matvec(q)),
+                    0.5 * dot(k, &sigma.matvec(k)),
+                )
+            }
+        }
+    }
+
+    /// Log importance weight `ln(p_I(ω) / ψ(ω))` of Lemma 3.1 — `0` for
+    /// the unweighted (isotropic / data-aware) schemes.
+    pub fn log_weight(&self, omega: &[f64]) -> f64 {
+        match &self.sampling {
+            Sampling::Proposal(psi) => {
+                self.iso.log_density(omega) - psi.log_density(omega)
+            }
+            Sampling::Isotropic | Sampling::DataAware(_) => 0.0,
+        }
+    }
+
     /// Single-draw integrand `Z(q, k, omega)` of Lemma 2.1 (including the
     /// importance weight when applicable).
     ///
     /// For `DataAware`, the `h` factors use the Mahalanobis norms
     /// `q^T Sigma q`, `k^T Sigma k` (Eq. 3) so the estimator is unbiased
-    /// for the data-aligned kernel.
+    /// for the data-aligned kernel. This convenience form recomputes the
+    /// normalizers on every call; draw loops should compute them once via
+    /// [`PrfEstimator::pair_normalizers`] and use
+    /// [`PrfEstimator::single_term_normalized`].
     pub fn single_term(&self, q: &[f64], k: &[f64], omega: &[f64]) -> f64 {
+        let (aq, ak) = self.pair_normalizers(q, k);
+        self.single_term_normalized(q, k, omega, aq, ak)
+    }
+
+    /// [`PrfEstimator::single_term`] with the pair normalizers precomputed:
+    /// O(d) per draw for every sampling mode (the O(d²) Mahalanobis norms
+    /// are paid once per pair, not once per draw).
+    pub fn single_term_normalized(
+        &self,
+        q: &[f64],
+        k: &[f64],
+        omega: &[f64],
+        aq: f64,
+        ak: f64,
+    ) -> f64 {
         match &self.sampling {
-            Sampling::Isotropic => {
-                (dot(omega, q) - 0.5 * sq_norm(q)).exp()
-                    * (dot(omega, k) - 0.5 * sq_norm(k)).exp()
-            }
             Sampling::Proposal(psi) => {
                 let w =
                     (self.iso.log_density(omega) - psi.log_density(omega)).exp();
-                w * (dot(omega, q) - 0.5 * sq_norm(q)).exp()
-                    * (dot(omega, k) - 0.5 * sq_norm(k)).exp()
+                w * (dot(omega, q) - aq).exp() * (dot(omega, k) - ak).exp()
             }
-            Sampling::DataAware(ps) => {
-                let sigma = ps.cov();
-                let qs = dot(q, &sigma.matvec(q));
-                let ks = dot(k, &sigma.matvec(k));
-                (dot(omega, q) - 0.5 * qs).exp()
-                    * (dot(omega, k) - 0.5 * ks).exp()
+            Sampling::Isotropic | Sampling::DataAware(_) => {
+                (dot(omega, q) - aq).exp() * (dot(omega, k) - ak).exp()
             }
         }
     }
@@ -113,11 +153,16 @@ impl PrfEstimator {
     }
 
     /// One m-sample estimate `kappa_hat(q, k)` (Eq. 2 / Eq. 4).
+    ///
+    /// This is the scalar oracle the batched engine
+    /// ([`crate::rfa::features::FeatureBank`]) is property-tested against;
+    /// it draws `m` omegas sequentially from `rng`.
     pub fn estimate(&self, q: &[f64], k: &[f64], rng: &mut Pcg64) -> f64 {
+        let (aq, ak) = self.pair_normalizers(q, k);
         let mut acc = 0.0;
         for _ in 0..self.m {
             let omega = self.draw(rng);
-            acc += self.single_term(q, k, &omega);
+            acc += self.single_term_normalized(q, k, &omega, aq, ak);
         }
         acc / self.m as f64
     }

@@ -1,0 +1,310 @@
+//! Batched PRF feature-map engine: one shared draw bank, whole-matrix
+//! feature maps, kernel grams as a single contraction.
+//!
+//! The scalar oracle [`PrfEstimator::estimate`] redraws `m` omegas per
+//! (q, k) pair and pays two O(d²) Mahalanobis norms *per draw* in the
+//! data-aware arm. This module restructures the same mathematics around a
+//! [`FeatureBank`]:
+//!
+//! * the `n×d` projection bank `Ω` is drawn **once** and shared across
+//!   every query/key (the structure attention actually uses — Performer
+//!   redraws per forward pass, not per pair);
+//! * Gaussian draws are materialized as one flat standard-normal matrix
+//!   and pushed through the covariance's Cholesky factor as a single
+//!   `Z·Lᵀ` matmul instead of per-draw matvecs;
+//! * the per-row normalizers `a_x = ½·xᵀΣx` are computed once per vector
+//!   (O(d²)) rather than once per draw (O(n·d²));
+//! * positive feature matrices `Φ(X) ∈ R^{L×n}` come out of one `X·Ωᵀ`
+//!   contraction plus a row-wise exp, and kernel grams
+//!   `K̂ = Φ(Q)·Φ(K)ᵀ / n` are a single [`Matrix::matmul_transb`].
+//!
+//! With a bank drawn from the same seed, [`FeatureBank::estimate`]
+//! reproduces the scalar oracle to floating-point noise for all three
+//! [`Sampling`] modes — the equivalence property `rust/tests/rfa_batch.rs`
+//! pins down.
+
+use crate::linalg::Matrix;
+use crate::rng::{GaussianExt, Pcg64};
+
+use super::estimators::{PrfEstimator, Sampling};
+use super::orthogonal::orthogonal_gaussian_block;
+
+/// A shared bank of `n` projection draws for one estimator geometry.
+pub struct FeatureBank {
+    /// `n×d` draw matrix Ω; row `i` is one projection vector ω_i.
+    omegas: Matrix,
+    /// Importance weights `w_i = p_I(ω_i)/ψ(ω_i)` (all 1 when unweighted).
+    weights: Vec<f64>,
+    /// `√w_i`, split symmetrically across the Φ(Q)/Φ(K) factors so the
+    /// gram contraction recovers `w_i` per term.
+    sqrt_weights: Vec<f64>,
+    /// Σ for the data-aware normalizer; `None` means `a_x = ½‖x‖²`.
+    norm_sigma: Option<Matrix>,
+}
+
+impl FeatureBank {
+    /// Draw a bank of `est.m` features matching `est`'s sampling law.
+    ///
+    /// Consumes `rng` exactly like `est.m` sequential scalar draws, so a
+    /// bank seeded identically to an [`PrfEstimator::estimate`] call
+    /// reproduces its result.
+    pub fn draw(est: &PrfEstimator, rng: &mut Pcg64) -> Self {
+        Self::draw_n(est, est.m, rng)
+    }
+
+    /// Draw a bank of `n` features (the variance engine wants `n ≫ m`).
+    pub fn draw_n(est: &PrfEstimator, n: usize, rng: &mut Pcg64) -> Self {
+        let d = est.dim();
+        // One flat standard-normal matrix; row-major fill consumes the rng
+        // in the same order as n sequential gaussian_vec(d) calls.
+        Self::from_whitened(est, Matrix::from_vec(n, d, rng.gaussian_vec(n * d)))
+    }
+
+    /// Block-orthogonal bank (Performer's ORF coupling) in the estimator's
+    /// sampling geometry: orthogonal in the whitened space, mapped through
+    /// `L` so marginals match the sampling covariance. Variance-reduced,
+    /// but *not* draw-compatible with the sequential scalar oracle.
+    pub fn draw_orthogonal(est: &PrfEstimator, rng: &mut Pcg64) -> Self {
+        let d = est.dim();
+        let rows = orthogonal_gaussian_block(d, est.m, rng);
+        Self::from_whitened(est, Matrix::from_rows(&rows))
+    }
+
+    /// Build the bank from whitened draws `Z` (rows ~ the whitened law):
+    /// apply the sampling covariance's `Lᵀ`, then derive per-draw
+    /// importance weights and the normalizer geometry.
+    fn from_whitened(est: &PrfEstimator, z: Matrix) -> Self {
+        let (omegas, norm_sigma) = match &est.sampling {
+            // chol(I) = I: the transform is the identity, skip the matmul.
+            Sampling::Isotropic => (z, None),
+            Sampling::Proposal(psi) => {
+                (z.matmul(&psi.chol().transpose()), None)
+            }
+            Sampling::DataAware(ps) => (
+                z.matmul(&ps.chol().transpose()),
+                Some(ps.cov().clone()),
+            ),
+        };
+        let weights: Vec<f64> = (0..omegas.rows())
+            .map(|i| est.log_weight(omegas.row(i)).exp())
+            .collect();
+        let sqrt_weights = weights.iter().map(|w| w.sqrt()).collect();
+        Self { omegas, weights, sqrt_weights, norm_sigma }
+    }
+
+    /// Number of draws in the bank.
+    pub fn n_features(&self) -> usize {
+        self.omegas.rows()
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.omegas.cols()
+    }
+
+    /// The draw matrix Ω (rows are omegas).
+    pub fn omegas(&self) -> &Matrix {
+        &self.omegas
+    }
+
+    /// Row normalizer `a_x`: `½·xᵀΣx` for data-aware banks, `½‖x‖²`
+    /// otherwise. O(d²) worst case — called once per vector, never per
+    /// draw.
+    pub fn normalizer(&self, x: &[f64]) -> f64 {
+        match &self.norm_sigma {
+            Some(sigma) => {
+                let sx = sigma.matvec(x);
+                0.5 * x.iter().zip(&sx).map(|(a, b)| a * b).sum::<f64>()
+            }
+            None => 0.5 * x.iter().map(|a| a * a).sum::<f64>(),
+        }
+    }
+
+    /// Positive feature matrix `Φ(X) ∈ R^{L×n}` for rows `xs`:
+    /// `Φ[l,i] = √w_i · exp(ω_i·x_l − a_{x_l})`.
+    ///
+    /// One `X·Ωᵀ` contraction materializes every projection; the per-row
+    /// normalizers are computed once each.
+    pub fn feature_matrix(&self, xs: &[Vec<f64>]) -> Matrix {
+        let l = xs.len();
+        let d = self.dim();
+        let n = self.n_features();
+        let mut flat = Vec::with_capacity(l * d);
+        for x in xs {
+            assert_eq!(x.len(), d, "feature_matrix: row dim mismatch");
+            flat.extend_from_slice(x);
+        }
+        let x_mat = Matrix::from_vec(l, d, flat);
+        // proj[l, i] = ω_i · x_l
+        let mut proj = x_mat.matmul_transb(&self.omegas);
+        for (li, x) in xs.iter().enumerate() {
+            let a = self.normalizer(x);
+            for i in 0..n {
+                let v = (proj[(li, i)] - a).exp() * self.sqrt_weights[i];
+                proj[(li, i)] = v;
+            }
+        }
+        proj
+    }
+
+    /// Estimated kernel gram `K̂[i,j] ≈ κ(q_i, k_j)` for every (q, k)
+    /// pair at once: `Φ(Q)·Φ(K)ᵀ / n`, a single contraction.
+    pub fn gram(&self, qs: &[Vec<f64>], ks: &[Vec<f64>]) -> Matrix {
+        let phi_q = self.feature_matrix(qs);
+        let phi_k = self.feature_matrix(ks);
+        phi_q.matmul_transb(&phi_k).scale(1.0 / self.n_features() as f64)
+    }
+
+    /// Per-draw integrand values `Z_i(q, k)` — the variance engine's
+    /// input. Normalizers are computed once per call; each draw costs two
+    /// O(d) dots.
+    pub fn single_terms(&self, q: &[f64], k: &[f64]) -> Vec<f64> {
+        let aq = self.normalizer(q);
+        let ak = self.normalizer(k);
+        (0..self.n_features())
+            .map(|i| {
+                let omega = self.omegas.row(i);
+                let oq: f64 = omega.iter().zip(q).map(|(a, b)| a * b).sum();
+                let ok: f64 = omega.iter().zip(k).map(|(a, b)| a * b).sum();
+                self.weights[i] * (oq - aq).exp() * (ok - ak).exp()
+            })
+            .collect()
+    }
+
+    /// Bank-shared m-sample estimate of the kernel for one pair; equal to
+    /// the scalar oracle when the bank was drawn from the same seed.
+    pub fn estimate(&self, q: &[f64], k: &[f64]) -> f64 {
+        let terms = self.single_terms(q, k);
+        terms.iter().sum::<f64>() / terms.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfa::estimators::{exact_sigma_kernel, exact_softmax_kernel};
+    use crate::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
+
+    fn rel_err(a: f64, b: f64) -> f64 {
+        (a - b).abs() / b.abs().max(1e-300)
+    }
+
+    #[test]
+    fn bank_estimate_matches_scalar_oracle_isotropic() {
+        let est = PrfEstimator::new(4, 32, Sampling::Isotropic);
+        let q = vec![0.3, -0.2, 0.1, 0.4];
+        let k = vec![-0.1, 0.2, 0.3, -0.2];
+        let mut rng_bank = Pcg64::seed(901);
+        let bank = FeatureBank::draw(&est, &mut rng_bank);
+        let mut rng_scalar = Pcg64::seed(901);
+        let scalar = est.estimate(&q, &k, &mut rng_scalar);
+        assert!(
+            rel_err(bank.estimate(&q, &k), scalar) < 1e-12,
+            "batched={} scalar={scalar}",
+            bank.estimate(&q, &k)
+        );
+    }
+
+    #[test]
+    fn gram_rows_match_per_pair_estimates() {
+        let mut rng = Pcg64::seed(902);
+        let sigma = anisotropic_covariance(3, 0.7, 0.5, &mut rng);
+        let est = PrfEstimator::new(
+            3,
+            16,
+            Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+        );
+        let qs: Vec<Vec<f64>> =
+            (0..5).map(|_| rng.gaussian_vec(3)).collect();
+        let ks: Vec<Vec<f64>> =
+            (0..4).map(|_| rng.gaussian_vec(3)).collect();
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let gram = bank.gram(&qs, &ks);
+        for (i, q) in qs.iter().enumerate() {
+            for (j, k) in ks.iter().enumerate() {
+                let direct = bank.estimate(q, k);
+                assert!(
+                    rel_err(gram[(i, j)], direct) < 1e-10,
+                    "gram[{i},{j}]={} direct={direct}",
+                    gram[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bank_is_unbiased_for_its_target() {
+        // Average fresh banks: isotropic → softmax kernel, data-aware →
+        // Sigma kernel.
+        let mut rng = Pcg64::seed(903);
+        let q = vec![0.25, -0.15, 0.2];
+        let k = vec![-0.05, 0.3, 0.1];
+        let sigma = anisotropic_covariance(3, 0.8, 0.6, &mut rng);
+        let cases: Vec<(PrfEstimator, f64)> = vec![
+            (
+                PrfEstimator::new(3, 8, Sampling::Isotropic),
+                exact_softmax_kernel(&q, &k),
+            ),
+            (
+                PrfEstimator::new(
+                    3,
+                    8,
+                    Sampling::DataAware(
+                        MultivariateGaussian::new(sigma.clone()).unwrap(),
+                    ),
+                ),
+                exact_sigma_kernel(&q, &k, &sigma),
+            ),
+        ];
+        for (est, target) in &cases {
+            let reps = 6000;
+            let vals: Vec<f64> = (0..reps)
+                .map(|_| FeatureBank::draw(est, &mut rng).estimate(&q, &k))
+                .collect();
+            let mean = vals.iter().sum::<f64>() / reps as f64;
+            let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+                / (reps - 1) as f64;
+            let se = (var / reps as f64).sqrt();
+            assert!(
+                (mean - target).abs() < 5.0 * se + 1e-9,
+                "mean={mean} target={target} se={se}"
+            );
+        }
+    }
+
+    #[test]
+    fn orthogonal_bank_is_unbiased_for_softmax() {
+        let mut rng = Pcg64::seed(904);
+        let q = vec![0.3, -0.2, 0.1];
+        let k = vec![-0.1, 0.25, 0.2];
+        let est = PrfEstimator::new(3, 6, Sampling::Isotropic);
+        let reps = 4000;
+        let vals: Vec<f64> = (0..reps)
+            .map(|_| {
+                FeatureBank::draw_orthogonal(&est, &mut rng).estimate(&q, &k)
+            })
+            .collect();
+        let mean = vals.iter().sum::<f64>() / reps as f64;
+        let exact = exact_softmax_kernel(&q, &k);
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+            / (reps - 1) as f64;
+        let se = (var / reps as f64).sqrt();
+        assert!(
+            (mean - exact).abs() < 5.0 * se + 1e-9,
+            "mean={mean} exact={exact} se={se}"
+        );
+    }
+
+    #[test]
+    fn feature_matrix_shapes() {
+        let est = PrfEstimator::new(5, 12, Sampling::Isotropic);
+        let mut rng = Pcg64::seed(905);
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let xs: Vec<Vec<f64>> = (0..7).map(|_| rng.gaussian_vec(5)).collect();
+        let phi = bank.feature_matrix(&xs);
+        assert_eq!((phi.rows(), phi.cols()), (7, 12));
+        assert_eq!(bank.n_features(), 12);
+        assert_eq!(bank.dim(), 5);
+        assert!(phi.data().iter().all(|v| *v > 0.0), "features are positive");
+    }
+}

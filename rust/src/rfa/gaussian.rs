@@ -25,6 +25,13 @@ impl MultivariateGaussian {
         &self.cov
     }
 
+    /// Lower-triangular Cholesky factor `L` with `Cov = L·Lᵀ`. Exposed so
+    /// batched samplers ([`crate::rfa::features::FeatureBank`]) can draw a
+    /// whole bank as one `Z·Lᵀ` contraction instead of per-draw matvecs.
+    pub fn chol(&self) -> &Matrix {
+        &self.chol
+    }
+
     pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
         let z = rng.gaussian_vec(self.dim());
         self.chol.matvec(&z)

@@ -7,26 +7,53 @@
 //!   (Cholesky sampling), anisotropic covariance constructors.
 //! * [`estimators`] — the PRF softmax-kernel estimators: isotropic
 //!   (Performer), data-aware `N(0, Sigma)` (DARKFormer), and explicitly
-//!   importance-weighted (Lemma 3.1 form).
+//!   importance-weighted (Lemma 3.1 form). The scalar
+//!   [`PrfEstimator::estimate`] is the oracle every batched path is
+//!   property-tested against.
+//! * [`features`] — the batched feature-map engine: one shared `n×d`
+//!   draw bank per estimator ([`features::FeatureBank`], optionally
+//!   block-orthogonal), positive feature matrices `Φ(X) ∈ R^{L×n}` with
+//!   per-row normalizers computed once per vector, and kernel grams as a
+//!   single `Φ(Q)·Φ(K)ᵀ` contraction.
+//! * [`attention`] — pure-Rust linear-attention forwards over the
+//!   feature maps: non-causal and causal (FAVOR+-style running
+//!   prefix-sum state), plus an exact masked-softmax reference.
 //! * [`proposal`] — the closed-form optimal proposal of Theorem 3.2,
 //!   `Sigma* = (I + 2L)(I - 2L)^{-1}`, plus its validity condition.
-//! * [`variance`] — Monte-Carlo and closed-form variance evaluation; the
-//!   engine behind the `variance` bench and `exp variance` table.
+//! * [`variance`] — scalar-reference Monte-Carlo and closed-form
+//!   variance evaluation.
+//! * [`batch`] — the batched, `std::thread::scope`-parallel variance
+//!   engine behind the `variance` bench: shared draw banks per pair,
+//!   deterministic for a fixed seed and independent of worker count.
 //! * [`mahalanobis`] — Mahalanobis geometry and whitening (App. C).
 //! * [`orthogonal`] — block-orthogonal feature draws (Performer's ORF
 //!   coupling; extension ablation).
 //!
-//! Everything here is f64 and deliberately estimator-shaped rather than
-//! attention-shaped: it validates the paper's *theory* claims, while the
-//! AOT/JAX stack validates the *system* claims.
+//! Everything here is f64. The estimator layer validates the paper's
+//! *theory* claims; [`features`] + [`attention`] carry those statistics
+//! into an O(L·m·d) attention forward at hardware speed, while the
+//! AOT/JAX stack (behind the `pjrt` feature) validates the *system*
+//! claims.
 
+pub mod attention;
+pub mod batch;
 pub mod estimators;
+pub mod features;
 pub mod gaussian;
 pub mod mahalanobis;
 pub mod orthogonal;
 pub mod proposal;
 pub mod variance;
 
+pub use attention::{
+    causal_linear_attention, linear_attention, prf_attention,
+    softmax_attention,
+};
+pub use batch::{
+    expected_mc_variance_batched, expected_mc_variance_threaded,
+    paired_expected_mc_variance_batched, paired_expected_mc_variance_threaded,
+};
 pub use estimators::{exact_softmax_kernel, PrfEstimator, Sampling};
+pub use features::FeatureBank;
 pub use gaussian::MultivariateGaussian;
 pub use proposal::{optimal_proposal, proposal_is_valid};

@@ -11,6 +11,11 @@
 //! (q, k) pair with `n_omega` draws and average over pairs. For the
 //! isotropic Gaussian case the second moment has the closed form used in
 //! Appendix A, which the tests pin against.
+//!
+//! This module is the scalar *reference* engine. The production path is
+//! [`crate::rfa::batch`]: same estimator, shared draw banks, hoisted
+//! normalizers, `std::thread::scope` fan-out — benchmarked against this
+//! one in `benches/variance.rs`.
 
 use crate::rng::Pcg64;
 
@@ -35,6 +40,11 @@ pub fn expected_mc_variance(
 }
 
 /// `Var_omega[Z(q, k, omega)]` estimated from `n_omega` draws.
+///
+/// The pair normalizers (O(d²) Mahalanobis norms in the data-aware arm)
+/// are hoisted out of the draw loop: each draw costs O(d). For the
+/// bank-based, multi-core version of the whole pipeline see
+/// [`crate::rfa::batch`].
 pub fn single_draw_variance(
     est: &PrfEstimator,
     q: &[f64],
@@ -42,6 +52,7 @@ pub fn single_draw_variance(
     n_omega: usize,
     rng: &mut Pcg64,
 ) -> f64 {
+    let (aq, ak) = est.pair_normalizers(q, k);
     // Welford for numerical stability: Z spans orders of magnitude.
     let mut mean = 0.0;
     let mut m2 = 0.0;
@@ -54,7 +65,7 @@ pub fn single_draw_variance(
             }
             _ => est_draw(est, rng),
         };
-        let z = est.single_term(q, k, &omega);
+        let z = est.single_term_normalized(q, k, &omega, aq, ak);
         let delta = z - mean;
         mean += delta / (i + 1) as f64;
         m2 += delta * (z - mean);

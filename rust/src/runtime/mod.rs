@@ -10,7 +10,9 @@
 //! reassigns ids (see DESIGN.md section 1 and /opt/xla-example).
 
 mod manifest;
+#[cfg(feature = "pjrt")]
 mod program;
 
 pub use manifest::{Manifest, ModelMeta, ParamSpec};
+#[cfg(feature = "pjrt")]
 pub use program::{literal_to_tensor, tensor_to_literal, Program, Runtime};

@@ -1,0 +1,316 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The container that builds this repo has no XLA/PJRT shared libraries,
+//! so the real `xla` crate cannot link. This stub keeps the `--features
+//! pjrt` configuration *compiling* offline:
+//!
+//! * [`Literal`] is an honest host-side tensor container — `scalar`,
+//!   `vec1`, `reshape`, `to_vec`, `get_first_element`, `array_shape`,
+//!   `ty` and `decompose_tuple` all work, so host-only code paths (and
+//!   their unit tests) behave normally.
+//! * [`PjRtClient::cpu`] returns an error explaining that this build has
+//!   no PJRT backend; nothing that needs a device can be constructed, so
+//!   the compile/execute surface is unreachable stubs.
+//!
+//! Deployments with real artifacts point the `xla` dependency at the
+//! actual bindings instead of this directory.
+
+use std::fmt;
+
+/// Element types the coordinator exchanges with artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    Tuple,
+}
+
+/// Stub error type; `Debug`-formatted by callers.
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> Self {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.msg)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const NO_BACKEND: &str = "PJRT backend unavailable: this binary was built \
+against the vendored stub `xla` crate (rust/vendor/xla). Point the `xla` \
+dependency at the real bindings to execute AOT artifacts.";
+
+/// Typed storage behind a [`Literal`].
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn into_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::U32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape: dimensions in row-major order.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal (tensor of scalars, or a tuple of literals).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { ty: T::TY, dims: Vec::new(), data: T::into_data(vec![v]) }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            dims: vec![v.len() as i64],
+            data: T::into_data(v.to_vec()),
+        }
+    }
+
+    fn element_count(&self) -> i64 {
+        self.dims.iter().product()
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let new_count: i64 = dims.iter().product();
+        if new_count != self.element_count() {
+            return Err(XlaError::new(format!(
+                "reshape: {:?} has {} elements, target {:?} has {}",
+                self.dims,
+                self.element_count(),
+                dims,
+                new_count
+            )));
+        }
+        Ok(Literal { ty: self.ty, dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Element type of the literal.
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    /// Shape of an array (non-tuple) literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            Data::Tuple(_) => Err(XlaError::new("array_shape of a tuple literal")),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data).ok_or_else(|| {
+            XlaError::new(format!(
+                "to_vec: literal holds {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            ))
+        })
+    }
+
+    /// First element of the flattened literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.first().copied().ok_or_else(|| XlaError::new("empty literal"))
+    }
+
+    /// Split a tuple literal into its components.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.data, Data::Tuple(Vec::new())) {
+            Data::Tuple(items) => Ok(items),
+            other => {
+                self.data = other;
+                Err(XlaError::new("decompose_tuple of a non-tuple literal"))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module handle (never constructible offline).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::new(NO_BACKEND))
+    }
+}
+
+/// Computation wrapper over a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer handle (never constructible offline).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::new(NO_BACKEND))
+    }
+}
+
+/// Compiled executable handle (never constructible offline).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(NO_BACKEND))
+    }
+}
+
+/// PJRT client. The stub has no backend, so construction always fails
+/// with an actionable message.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::new(NO_BACKEND))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(NO_BACKEND))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(r.ty().unwrap(), ElementType::F32);
+        assert!(r.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalars_and_first_element() {
+        assert_eq!(Literal::scalar(7u32).get_first_element::<u32>().unwrap(), 7);
+        assert_eq!(Literal::scalar(1.5f32).get_first_element::<f32>().unwrap(), 1.5);
+        assert!(Literal::scalar(1i32).get_first_element::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err:?}").contains("PJRT backend unavailable"));
+    }
+}
