@@ -9,7 +9,8 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy bench bench-json pjrt-check clean
+.PHONY: verify build test lint fmt clippy bench bench-json bench-diff \
+	bench-baseline pjrt-check clean
 
 verify: build test lint
 
@@ -32,10 +33,21 @@ clippy:
 bench:
 	$(CARGO) bench --bench variance
 	$(CARGO) bench --bench linear_attention
+	$(CARGO) bench --bench multihead
 	$(CARGO) bench --bench substrates
 
 bench-json: bench
 	@ls -l BENCH_*.json 2>/dev/null || true
+
+# Compare the working tree's BENCH_*.json against the committed baseline
+# (benches/baseline/); prints per-case and per-metric deltas so perf
+# regressions are visible in review. Run `make bench` first.
+bench-diff:
+	$(CARGO) run --release --bin bench_diff
+
+# Regenerate the committed baseline snapshots in benches/baseline/.
+bench-baseline:
+	BENCH_OUT_DIR=benches/baseline $(MAKE) bench
 
 # Compile check for the PJRT-gated stack (links the vendored xla stub;
 # executing artifacts additionally needs the real xla bindings).

@@ -1,18 +1,22 @@
 //! Linear-attention scaling bench: exact softmax O(L²d) vs pure-Rust PRF
 //! linear attention O(L·m·d), causal and non-causal, isotropic
-//! (Performer) and data-aware (DARKFormer) banks, L ∈ {64..2048}.
+//! (Performer) and data-aware (DARKFormer) banks, L ∈ {64..2048}, plus
+//! the chunked-engine long-sequence section at L=131072 (per-position vs
+//! chunk-blocked f64 vs chunk-blocked f32 on shared feature matrices).
 //!
 //! Prints the per-L latency table, checks the PRF forward against the
 //! exact reference at a moderate L, fits the log-log scaling exponent of
-//! the causal PRF path, and emits `BENCH_linear_attention.json`.
+//! the causal PRF path, and emits `BENCH_linear_attention.json` with the
+//! headline metrics `chunked_vs_perpos_causal_speedup_L131072` and
+//! `f32_vs_f64_chunked_throughput_L131072`.
 //!
 //! Run: `cargo bench --bench linear_attention`.
 
 use darkformer::bench::BenchSuite;
-use darkformer::linalg::Matrix;
+use darkformer::linalg::{Matrix, Matrix32};
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
-use darkformer::rfa::{attention, FeatureBank, PrfEstimator};
+use darkformer::rfa::{attention, engine, FeatureBank, PrfEstimator};
 use darkformer::rng::{GaussianExt, Pcg64};
 
 fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
@@ -135,6 +139,69 @@ fn main() {
         "speedup_at_L2048",
         exact_times.last().unwrap().1 / causal_times.last().unwrap().1,
     );
+
+    // ----------------------------------------------------------------
+    // Long-sequence chunked-engine section: L=131072 single-head, on
+    // shared precomputed feature matrices so the comparison isolates the
+    // causal forward itself (per-position loop vs chunk-blocked engine,
+    // f64 vs f32).
+    // ----------------------------------------------------------------
+    {
+        let l = 131072usize;
+        let chunk = 32usize;
+        println!("\nlong-sequence causal engine, L={l}, m={m}, chunk={chunk}");
+        let q = rows(l, d, 0.1, &mut rng);
+        let k = rows(l, d, 0.1, &mut rng);
+        let v = Matrix::from_rows(&rows(l, dv, 0.5, &mut rng));
+        let phi_q = iso_bank.feature_matrix(&q);
+        let phi_k = iso_bank.feature_matrix(&k);
+        let phi_q32 = iso_bank.feature_matrix32(&q);
+        let phi_k32 = iso_bank.feature_matrix32(&k);
+        let v32 = Matrix32::from_f64(&v);
+
+        let perpos_ms = suite.bench("causal_perpos_f64/L131072", 1, 3, || {
+            std::hint::black_box(attention::causal_linear_attention(
+                &phi_q, &phi_k, &v,
+            ));
+        });
+        let chunked_ms =
+            suite.bench("causal_chunked_f64/L131072", 1, 3, || {
+                std::hint::black_box(engine::chunked_causal_linear_attention(
+                    &phi_q, &phi_k, &v, chunk,
+                ));
+            });
+        let chunked32_ms =
+            suite.bench("causal_chunked_f32/L131072", 1, 3, || {
+                std::hint::black_box(
+                    engine::chunked_causal_linear_attention32(
+                        &phi_q32, &phi_k32, &v32, chunk,
+                    ),
+                );
+            });
+
+        // Sanity: the three paths compute the same estimator.
+        let ref64 = engine::chunked_causal_linear_attention(
+            &phi_q, &phi_k, &v, chunk,
+        );
+        let diff32 = ref64.max_abs_diff(
+            &engine::chunked_causal_linear_attention32(
+                &phi_q32, &phi_k32, &v32, chunk,
+            )
+            .to_f64(),
+        );
+        println!("f32-vs-f64 chunked max |Δ| at L={l}: {diff32:.2e}");
+        suite.metric("f32_vs_f64_chunked_max_abs_err_L131072", diff32);
+
+        let speedup = perpos_ms / chunked_ms;
+        let f32_throughput = chunked_ms / chunked32_ms;
+        println!(
+            "chunked-vs-per-position speedup: {speedup:.2}x {}",
+            if speedup >= 2.0 { "(>=2x: OK)" } else { "(UNEXPECTED: <2x)" }
+        );
+        println!("f32-vs-f64 chunked throughput: {f32_throughput:.2}x");
+        suite.metric("chunked_vs_perpos_causal_speedup_L131072", speedup);
+        suite.metric("f32_vs_f64_chunked_throughput_L131072", f32_throughput);
+    }
 
     if let Err(e) = suite.write() {
         eprintln!("could not write bench json: {e}");

@@ -1,0 +1,114 @@
+//! Multi-head chunked-attention bench: heads ∈ {1, 4, 8} × L ∈ {1k, 8k,
+//! 64k} on the f32 engine hot path, plus a threads-vs-heads scaling
+//! probe (same 8-head workload on 1 worker vs all cores).
+//!
+//! Emits `BENCH_multihead.json`; the headline metric
+//! `threads_vs_heads_scaling_h8_L8192` is the wall-clock ratio
+//! single-worker / all-cores for 8 heads at L=8192 (ideal = min(8,
+//! cores)), and `h8_over_h1_wallclock_L8192` shows how close 8 parallel
+//! heads come to single-head latency.
+//!
+//! Run: `cargo bench --bench multihead`.
+
+use darkformer::bench::BenchSuite;
+use darkformer::linalg::Matrix;
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::{engine, PrfEstimator};
+use darkformer::rng::{GaussianExt, Pcg64};
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+fn make_heads(
+    n_heads: usize,
+    l: usize,
+    d: usize,
+    dv: usize,
+    rng: &mut Pcg64,
+) -> Vec<engine::Head> {
+    (0..n_heads)
+        .map(|_| engine::Head {
+            q: rows(l, d, 0.1, rng),
+            k: rows(l, d, 0.1, rng),
+            v: Matrix::from_rows(&rows(l, dv, 0.5, rng)),
+        })
+        .collect()
+}
+
+fn main() {
+    let (d, dv, m, chunk) = (16usize, 16usize, 32usize, 32usize);
+    let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+    let mut rng = Pcg64::seed(0x6ead5);
+    let mut suite = BenchSuite::new("multihead");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    suite.metric("available_cores", cores as f64);
+
+    println!(
+        "multi-head chunked f32 engine: d={d} dv={dv} m={m} chunk={chunk} \
+         cores={cores}\n"
+    );
+    let head_counts = [1usize, 4, 8];
+    let seq_lens = [1024usize, 8192, 65536];
+    let mut grid: Vec<(usize, usize, f64)> = Vec::new();
+    for &l in &seq_lens {
+        for &h in &head_counts {
+            let banks = engine::draw_head_banks(&est, h, &mut Pcg64::seed(7));
+            let heads = make_heads(h, l, d, dv, &mut rng);
+            let cfg = engine::EngineConfig { chunk, threads: 0 };
+            let iters = if l >= 65536 { 2 } else { 4 };
+            let ms =
+                suite.bench(&format!("mh32/h{h}/L{l}"), 1, iters, || {
+                    std::hint::black_box(
+                        engine::multi_head_causal_attention32(
+                            &banks, &heads, &cfg,
+                        ),
+                    );
+                });
+            grid.push((h, l, ms));
+        }
+    }
+
+    // Threads-vs-heads scaling: identical 8-head workload, 1 worker vs
+    // all cores. Head-order reduction makes the outputs identical; only
+    // the wall clock moves.
+    {
+        let (h, l) = (8usize, 8192usize);
+        let banks = engine::draw_head_banks(&est, h, &mut Pcg64::seed(7));
+        let heads = make_heads(h, l, d, dv, &mut rng);
+        let t1 = suite.bench("mh32/h8/L8192/threads1", 1, 3, || {
+            let cfg = engine::EngineConfig { chunk, threads: 1 };
+            std::hint::black_box(engine::multi_head_causal_attention32(
+                &banks, &heads, &cfg,
+            ));
+        });
+        let tall = suite.bench("mh32/h8/L8192/threads_all", 1, 3, || {
+            let cfg = engine::EngineConfig { chunk, threads: 0 };
+            std::hint::black_box(engine::multi_head_causal_attention32(
+                &banks, &heads, &cfg,
+            ));
+        });
+        let scaling = t1 / tall;
+        println!(
+            "\nthreads-vs-heads scaling (h=8, L=8192): {scaling:.2}x \
+             across {cores} cores"
+        );
+        suite.metric("threads_vs_heads_scaling_h8_L8192", scaling);
+    }
+
+    // How close is 8-head wall clock to 1-head at the same L (ideal 1.0
+    // with >= 8 free cores)?
+    let at = |h: usize, l: usize| {
+        grid.iter().find(|g| g.0 == h && g.1 == l).map(|g| g.2).unwrap()
+    };
+    suite.metric("h8_over_h1_wallclock_L8192", at(8, 8192) / at(1, 8192));
+    suite.metric("h8_over_h1_wallclock_L65536", at(8, 65536) / at(1, 65536));
+
+    if let Err(e) = suite.write() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Compare current `BENCH_<suite>.json` files against a committed
+//! baseline and print per-metric / per-case deltas, so perf regressions
+//! are visible in review.
+//!
+//! Usage:
+//!
+//! ```text
+//! bench_diff [--baseline DIR] [--current DIR] [--fail-over PCT]
+//! ```
+//!
+//! Defaults: baseline `benches/baseline`, current `$BENCH_OUT_DIR` (the
+//! same env var the bench targets write through) falling back to `.`.
+//! For every
+//! `BENCH_*.json` in the baseline dir the tool prints the change in each
+//! timing case's `mean_ms` (positive = slower than baseline) and in each
+//! scalar metric. With `--fail-over PCT` the exit code is 1 if any
+//! timing case regressed by more than PCT percent — usable as a CI gate.
+//!
+//! Regenerate the baseline on a machine with a Rust toolchain via
+//! `make bench-baseline` (runs the offline benches with
+//! `BENCH_OUT_DIR=benches/baseline`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use darkformer::ser::{parse, Json};
+
+struct Suite {
+    /// case name -> mean_ms
+    cases: BTreeMap<String, f64>,
+    /// metric key -> value
+    metrics: BTreeMap<String, f64>,
+}
+
+fn load_suite(path: &Path) -> Result<Suite, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let json = parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut cases = BTreeMap::new();
+    if let Some(results) = json.field("results").and_then(Json::as_arr) {
+        for r in results {
+            if let (Some(name), Some(mean)) = (
+                r.field("name").and_then(Json::as_str),
+                r.field("mean_ms").and_then(Json::as_f64),
+            ) {
+                cases.insert(name.to_string(), mean);
+            }
+        }
+    }
+    let mut metrics = BTreeMap::new();
+    if let Some(obj) = json.field("metrics").and_then(Json::as_obj) {
+        for (k, v) in obj.iter() {
+            if let Some(x) = v.as_f64() {
+                metrics.insert(k.clone(), x);
+            }
+        }
+    }
+    Ok(Suite { cases, metrics })
+}
+
+fn pct_change(base: f64, cur: f64) -> f64 {
+    if base == 0.0 {
+        return 0.0;
+    }
+    (cur - base) / base * 100.0
+}
+
+fn baseline_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| {
+                        n.starts_with("BENCH_") && n.ends_with(".json")
+                    })
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    files.sort();
+    files
+}
+
+fn main() -> ExitCode {
+    let mut baseline_dir = PathBuf::from("benches/baseline");
+    // Match BenchSuite::write: benches land in BENCH_OUT_DIR when set.
+    let mut current_dir = std::env::var("BENCH_OUT_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."));
+    let mut fail_over: Option<f64> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        let mut take = |what: &str| {
+            args.next().unwrap_or_else(|| {
+                eprintln!("{what} needs a value");
+                std::process::exit(2);
+            })
+        };
+        match arg.as_str() {
+            "--baseline" => baseline_dir = PathBuf::from(take("--baseline")),
+            "--current" => current_dir = PathBuf::from(take("--current")),
+            "--fail-over" => {
+                fail_over = Some(take("--fail-over").parse().unwrap_or_else(
+                    |_| {
+                        eprintln!("--fail-over needs a number (percent)");
+                        std::process::exit(2);
+                    },
+                ))
+            }
+            other => {
+                eprintln!(
+                    "unknown arg {other}\nusage: bench_diff [--baseline DIR] \
+                     [--current DIR] [--fail-over PCT]"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let files = baseline_files(&baseline_dir);
+    if files.is_empty() {
+        println!(
+            "no BENCH_*.json baseline found under {} — generate one with \
+             `make bench-baseline` and commit it.",
+            baseline_dir.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let mut worst_regression: Option<(String, f64)> = None;
+    for base_path in files {
+        let name = base_path.file_name().unwrap().to_str().unwrap();
+        let cur_path = current_dir.join(name);
+        println!("== {name} ==");
+        let base = match load_suite(&base_path) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("  unreadable baseline: {e}");
+                continue;
+            }
+        };
+        let cur = match load_suite(&cur_path) {
+            Ok(s) => s,
+            Err(_) => {
+                println!(
+                    "  no current {name} (run `make bench` first) — skipped"
+                );
+                continue;
+            }
+        };
+        for (case, &base_ms) in &base.cases {
+            match cur.cases.get(case) {
+                Some(&cur_ms) => {
+                    let pct = pct_change(base_ms, cur_ms);
+                    println!(
+                        "  {case:<44} {base_ms:>10.4} -> {cur_ms:>10.4} ms  \
+                         {pct:>+7.1}%"
+                    );
+                    let is_worse = match &worst_regression {
+                        Some((_, worst)) => pct > *worst,
+                        None => true,
+                    };
+                    if is_worse {
+                        worst_regression = Some((case.clone(), pct));
+                    }
+                }
+                None => println!("  {case:<44} missing from current run"),
+            }
+        }
+        for case in cur.cases.keys() {
+            if !base.cases.contains_key(case) {
+                println!("  {case:<44} new (no baseline)");
+            }
+        }
+        for (key, &base_v) in &base.metrics {
+            match cur.metrics.get(key) {
+                Some(&cur_v) => println!(
+                    "  metric {key:<37} {base_v:>10.4} -> {cur_v:>10.4}  \
+                     {:>+7.1}%",
+                    pct_change(base_v, cur_v)
+                ),
+                None => println!("  metric {key:<37} missing from current"),
+            }
+        }
+        for key in cur.metrics.keys() {
+            if !base.metrics.contains_key(key) {
+                println!(
+                    "  metric {key:<37} new: {:.4}",
+                    cur.metrics[key]
+                );
+            }
+        }
+        println!();
+    }
+
+    if let (Some(limit), Some((case, pct))) = (fail_over, &worst_regression) {
+        if *pct > limit {
+            eprintln!(
+                "FAIL: {case} regressed {pct:+.1}% (> {limit}% allowed)"
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+    if let Some((case, pct)) = worst_regression {
+        println!("worst timing delta: {case} {pct:+.1}%");
+    }
+    ExitCode::SUCCESS
+}

@@ -75,8 +75,40 @@ impl Matrix {
         &self.data
     }
 
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of rows `[r0, r1)` as a standalone matrix. Rows are contiguous
+    /// in the row-major layout, so this is one memcpy — the chunked
+    /// attention engine uses it to slice sequences into blocks.
+    pub fn row_block(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_block out of range");
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Column sums `out[j] = Σ_r self[r, j]` — the `Φ(K)ᵀ·1` normalizer
+    /// summary, streamed over contiguous rows.
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -145,6 +177,30 @@ impl Matrix {
             let orow = &mut out.data[i * n..(i + 1) * n];
             for (o, j) in orow.iter_mut().zip(0..n) {
                 *o = dot_unrolled(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    ///
+    /// `self` is `k×m` and `other` `k×n`; the result is `m×n`, accumulated
+    /// as `k` rank-1 updates `out += a_rᵀ ⊗ b_r`. Every operand row and
+    /// every output row is walked contiguously, which is exactly the
+    /// access pattern of the summary contractions `Φ(K)ᵀ·V` where both
+    /// factors are naturally stored row-major with `k = L` long.
+    pub fn matmul_transa(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_transa shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for r in 0..k {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for (i, &a) in arow.iter().enumerate() {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
             }
         }
         out
@@ -371,8 +427,10 @@ impl Matrix {
 /// Dot product with four independent accumulators: breaks the add-latency
 /// dependency chain so the compiler can keep multiple FMAs in flight.
 /// Summation order differs from a sequential fold, which is fine for the
-/// fresh entries [`Matrix::matmul_transb`] produces.
-fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+/// fresh entries [`Matrix::matmul_transb`] produces. Public as
+/// [`crate::linalg::dot`]: the attention engines use it for masked
+/// row-wise score computation where a full gram would waste work.
+pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f64; 4];
     let mut ca = a.chunks_exact(4);
@@ -487,6 +545,35 @@ mod tests {
         a[(4, 5)] = -3.0;
         let b = random_matrix(6, 4, 9);
         assert!(a.matmul(&b).max_abs_diff(&matmul_naive(&a, &b)) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_transa_matches_explicit_transpose() {
+        for &(k, m, n) in &[(1, 1, 1), (5, 3, 4), (66, 9, 31), (128, 33, 12)] {
+            let a = random_matrix(k, m, 101 + k as u64);
+            let b = random_matrix(k, n, 202 + n as u64);
+            let fast = a.matmul_transa(&b);
+            let reference = a.transpose().matmul(&b);
+            assert!(
+                fast.max_abs_diff(&reference) < 1e-10,
+                "({k},{m},{n}): diff={}",
+                fast.max_abs_diff(&reference)
+            );
+        }
+    }
+
+    #[test]
+    fn row_block_and_col_sums() {
+        let a = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ]);
+        let block = a.row_block(1, 3);
+        assert_eq!((block.rows(), block.cols()), (2, 2));
+        assert_eq!(block.data(), &[3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.row_block(1, 1).rows(), 0);
+        assert_eq!(a.col_sums(), vec![9.0, 12.0]);
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! `f32` dense matrix: the SIMD hot-path storage for the attention engine.
+//!
+//! Same row-major layout and the same tiled kernel structure as the `f64`
+//! [`Matrix`](super::Matrix), but with half the memory traffic and twice
+//! the SIMD lanes per vector register. All kernels are written as flat
+//! contiguous-slice loops (`iter_mut().zip(..)` over row chunks) so LLVM
+//! autovectorizes them; the 8-wide unrolled dot keeps eight independent
+//! accumulators in flight to hide FMA latency.
+//!
+//! This type deliberately carries *only* the multiply/contract surface the
+//! attention hot path needs. Decompositions (Cholesky, eigen, inverses)
+//! stay f64-only in [`Matrix`](super::Matrix) — they are setup-time
+//! operations where precision matters and throughput does not.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use super::Matrix;
+
+/// Dense `rows x cols` matrix of `f32`, row-major.
+#[derive(Clone, PartialEq)]
+pub struct Matrix32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix32 {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            write!(f, "  [")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Downcast an f64 matrix (round-to-nearest per entry).
+    pub fn from_f64(m: &Matrix) -> Self {
+        Self {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.data().iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// Upcast to f64 (exact: every f32 is representable).
+    pub fn to_f64(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&x| x as f64).collect(),
+        )
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of rows `[r0, r1)` — one memcpy in the row-major layout.
+    pub fn row_block(&self, r0: usize, r1: usize) -> Matrix32 {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_block out of range");
+        Matrix32 {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// `self · other`, tiled exactly like [`Matrix::matmul`]: jb → kb → i
+    /// → k → j with the `other` panel cache-resident and the inner j loop
+    /// a contiguous axpy that autovectorizes to full-width f32 lanes.
+    pub fn matmul(&self, other: &Matrix32) -> Matrix32 {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, kk, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix32::zeros(m, n);
+        // f32 halves the panel footprint vs the f64 kernel; keep the same
+        // element counts so the tuning carries over (panel = 64 KiB).
+        const KT: usize = 64;
+        const JT: usize = 256;
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + JT).min(n);
+            let mut kb = 0;
+            while kb < kk {
+                let ke = (kb + KT).min(kk);
+                for i in 0..m {
+                    let arow = &self.data[i * kk..(i + 1) * kk];
+                    let orow = &mut out.data[i * n + jb..i * n + je];
+                    for k in kb..ke {
+                        let a = arow[k];
+                        let brow = &other.data[k * n + jb..k * n + je];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
+                        }
+                    }
+                }
+                kb = ke;
+            }
+            jb = je;
+        }
+        out
+    }
+
+    /// `self · otherᵀ` without materializing the transpose; both operands
+    /// stream along contiguous rows (the `Φ(Q)·Φ(K)ᵀ` gram kernel).
+    pub fn matmul_transb(&self, other: &Matrix32) -> Matrix32 {
+        assert_eq!(self.cols, other.cols, "matmul_transb shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Matrix32::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (o, j) in orow.iter_mut().zip(0..n) {
+                *o = dot32(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · other` as `k` rank-1 updates (the `Φ(K)ᵀ·V` summary
+    /// kernel); every row access is contiguous.
+    pub fn matmul_transa(&self, other: &Matrix32) -> Matrix32 {
+        assert_eq!(self.rows, other.rows, "matmul_transa shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix32::zeros(m, n);
+        for r in 0..k {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for (i, &a) in arow.iter().enumerate() {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Column sums `out[j] = Σ_r self[r, j]`, accumulated in f64: this is
+    /// the `Φ(K)ᵀ·1` denominator summary, a monotone sum of positives
+    /// whose f32 roundoff would grow linearly with the row count.
+    pub fn col_sums_f64(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x as f64;
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix32 {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Matrix32 { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Maximum absolute entrywise difference (in f64 to avoid the
+    /// comparison itself rounding).
+    pub fn max_abs_diff(&self, other: &Matrix32) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// f32 dot with eight independent accumulators: at 8 f32 lanes per
+/// 256-bit register this keeps a full vector of FMAs in flight per
+/// accumulator. Summation order differs from a sequential fold (fine for
+/// fresh gram entries, same contract as the f64 `dot_unrolled`).
+pub fn dot32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for (a, (&x, &y)) in acc.iter_mut().zip(xa.iter().zip(xb)) {
+            *a += x * y;
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+        + tail
+}
+
+impl Index<(usize, usize)> for Matrix32 {
+    type Output = f32;
+
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix32 {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random32(rows: usize, cols: usize, seed: u64) -> Matrix32 {
+        use crate::rng::{GaussianExt, Pcg64};
+        let mut rng = Pcg64::seed(seed);
+        Matrix32::from_vec(
+            rows,
+            cols,
+            rng.gaussian_vec(rows * cols).iter().map(|&x| x as f32).collect(),
+        )
+    }
+
+    /// All three contraction kernels vs the f64 reference on the exact
+    /// same (f32-representable) entries: agreement to f32 accumulation
+    /// noise across tile/unroll boundaries.
+    #[test]
+    fn kernels_match_f64_reference() {
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 64, 63),
+            (8, 65, 257),
+            (33, 130, 12),
+        ] {
+            let a = random32(m, k, 11 + m as u64);
+            let b = random32(k, n, 22 + n as u64);
+            let bt = random32(n, k, 33 + n as u64);
+            let a64 = a.to_f64();
+
+            let mm = a.matmul(&b).to_f64();
+            let mm_ref = a64.matmul(&b.to_f64());
+            assert!(mm.max_abs_diff(&mm_ref) < 1e-4 * k as f64);
+
+            let tb = a.matmul_transb(&bt).to_f64();
+            let tb_ref = a64.matmul_transb(&bt.to_f64());
+            assert!(tb.max_abs_diff(&tb_ref) < 1e-4 * k as f64);
+
+            let bt2 = random32(m, n, 44 + n as u64);
+            let ta = a.matmul_transa(&bt2).to_f64();
+            let ta_ref = a64.matmul_transa(&bt2.to_f64());
+            assert!(ta.max_abs_diff(&ta_ref) < 1e-4 * m as f64);
+        }
+    }
+
+    #[test]
+    fn col_sums_accumulate_in_f64() {
+        // 2^24 + 1 is not representable in f32; an f64 accumulator over
+        // f32 entries must still resolve the +1.
+        let l = 1 << 12;
+        let mut data = vec![4096.0f32; l];
+        data[0] = 4097.0;
+        let m = Matrix32::from_vec(l, 1, data);
+        let s = m.col_sums_f64();
+        assert_eq!(s[0], 4096.0 * (l as f64) + 1.0);
+    }
+
+    #[test]
+    fn round_trip_and_row_block() {
+        let m = random32(7, 5, 99);
+        assert_eq!(Matrix32::from_f64(&m.to_f64()), m);
+        let block = m.row_block(2, 5);
+        assert_eq!(block.rows(), 3);
+        assert_eq!(block.row(0), m.row(2));
+        assert_eq!(block.row(2), m.row(4));
+    }
+
+    #[test]
+    fn dot32_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32) * 0.25 - 4.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| 1.5 - (i as f32) * 0.125).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot32(&a, &b) - naive).abs() < 1e-3);
+    }
+}

@@ -1,14 +1,21 @@
-//! Dense linear-algebra substrate (f64, row-major).
+//! Dense linear-algebra substrate (row-major).
 //!
 //! Powers the pure-Rust random-feature analysis in [`crate::rfa`]: building
 //! anisotropic covariances, Cholesky-sampling Gaussians, and evaluating the
 //! closed-form optimal proposal of Theorem 3.2, which needs
 //! `(I + 2L)(I - 2L)^{-1}` and eigen-decompositions. Deliberately small —
 //! just what the reproduction needs, tested against hand-computable cases.
+//!
+//! Two storage precisions share the kernel structure: [`Matrix`] (f64) is
+//! the default and carries every decomposition; [`Matrix32`] (f32) carries
+//! only the multiply/contract surface and is the attention engine's SIMD
+//! hot path — half the memory traffic, twice the lanes per register.
 
 mod matrix;
+mod matrix32;
 
-pub use matrix::Matrix;
+pub use matrix::{dot_unrolled as dot, Matrix};
+pub use matrix32::{dot32, Matrix32};
 
 /// Machine tolerance used by the iterative routines.
 pub const TOL: f64 = 1e-12;

@@ -26,6 +26,11 @@ use super::features::FeatureBank;
 /// Exact softmax attention reference: `out = softmax(Q·Kᵀ)·V`, optionally
 /// causally masked. O(L²·d) — the brute-force baseline the linear path is
 /// validated against.
+///
+/// When `causal` only the lower triangle of the score matrix exists after
+/// masking, so only those `L·(L+1)/2` dots are computed — the full-gram
+/// shortcut would double the baseline's work and skew every "exact vs
+/// linear" timing comparison.
 pub fn softmax_attention(
     q: &Matrix,
     k: &Matrix,
@@ -35,18 +40,29 @@ pub fn softmax_attention(
     assert_eq!(q.cols(), k.cols(), "q/k dim mismatch");
     assert_eq!(k.rows(), v.rows(), "k/v length mismatch");
     let (lq, lk, dv) = (q.rows(), k.rows(), v.cols());
-    let scores = q.matmul_transb(k);
     let mut out = Matrix::zeros(lq, dv);
+    // Non-causal: every score is live, one dense gram is optimal. Causal:
+    // compute each row's surviving prefix of scores directly.
+    let full_scores = if causal { None } else { Some(q.matmul_transb(k)) };
+    let mut row_scores = Vec::new();
     for i in 0..lq {
         let limit = if causal { (i + 1).min(lk) } else { lk };
+        let scores: &[f64] = match &full_scores {
+            Some(s) => &s.row(i)[..limit],
+            None => {
+                let qrow = q.row(i);
+                row_scores.clear();
+                row_scores.extend(
+                    (0..limit).map(|j| crate::linalg::dot(qrow, k.row(j))),
+                );
+                &row_scores
+            }
+        };
         // Stable softmax over the (masked) row.
-        let mut max = f64::NEG_INFINITY;
-        for j in 0..limit {
-            max = max.max(scores[(i, j)]);
-        }
+        let max = scores.iter().fold(f64::NEG_INFINITY, |m, &s| m.max(s));
         let mut denom = 0.0;
-        for j in 0..limit {
-            let w = (scores[(i, j)] - max).exp();
+        for (j, &s) in scores.iter().enumerate() {
+            let w = (s - max).exp();
             denom += w;
             for c in 0..dv {
                 out[(i, c)] += w * v[(j, c)];
@@ -62,8 +78,9 @@ pub fn softmax_attention(
 /// Non-causal linear attention from precomputed feature matrices:
 /// `out = diag(Φq·z)⁻¹ · Φq · (Φkᵀ·V)` with `z = Φkᵀ·1`.
 ///
-/// O(L·n·dv): the key/value summary `S = Φkᵀ·V` is built in one pass, the
-/// readout is a single `Φq·S` matmul.
+/// O(L·n·dv): the key/value summary `S = Φkᵀ·V` is one
+/// [`Matrix::matmul_transa`] contraction, the readout a single `Φq·S`
+/// matmul.
 pub fn linear_attention(
     phi_q: &Matrix,
     phi_k: &Matrix,
@@ -71,20 +88,10 @@ pub fn linear_attention(
 ) -> Matrix {
     assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
     assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
-    let (lk, n, dv) = (phi_k.rows(), phi_k.cols(), v.cols());
-    // S[i, c] = Σ_j Φk[j, i] · V[j, c]  (stream over rows: cache-friendly)
-    let mut s = Matrix::zeros(n, dv);
-    let mut z = vec![0.0; n];
-    for j in 0..lk {
-        let krow = phi_k.row(j);
-        let vrow = v.row(j);
-        for (i, &phi) in krow.iter().enumerate() {
-            z[i] += phi;
-            for (c, &vc) in vrow.iter().enumerate() {
-                s[(i, c)] += phi * vc;
-            }
-        }
-    }
+    let dv = v.cols();
+    // S = Φkᵀ·V and z = Φkᵀ·1, both streamed over contiguous rows.
+    let s = phi_k.matmul_transa(v);
+    let z = phi_k.col_sums();
     let mut out = phi_q.matmul(&s);
     let denom = phi_q.matvec(&z);
     for l in 0..out.rows() {

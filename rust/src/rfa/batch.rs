@@ -74,12 +74,15 @@ fn pair_variance(
 }
 
 /// Run `f` over the jobs on `threads` workers, writing one value per job.
-/// Chunking only affects scheduling: each job's value comes from its own
-/// rng stream, and the caller reduces in job order.
-fn run_jobs<T, F>(jobs: &mut [PairJob], threads: usize, f: F) -> Vec<T>
+/// Chunking only affects scheduling: results come back in job order, so
+/// any job-order reduction is thread-count independent. Shared with
+/// [`super::engine`], which fans attention heads across workers with the
+/// same contract.
+pub(crate) fn run_jobs<J, T, F>(jobs: &mut [J], threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
-    F: Fn(&mut PairJob) -> T + Sync,
+    J: Send,
+    T: Send,
+    F: Fn(&mut J) -> T + Sync,
 {
     let n = jobs.len();
     if n == 0 {
@@ -87,7 +90,8 @@ where
     }
     let workers = threads.max(1).min(n);
     let chunk = n.div_ceil(workers);
-    let mut results = vec![T::default(); n];
+    let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
     std::thread::scope(|scope| {
         let f = &f;
         for (job_chunk, out_chunk) in
@@ -95,15 +99,15 @@ where
         {
             scope.spawn(move || {
                 for (job, out) in job_chunk.iter_mut().zip(out_chunk) {
-                    *out = f(job);
+                    *out = Some(f(job));
                 }
             });
         }
     });
-    results
+    results.into_iter().map(|r| r.expect("worker filled its slot")).collect()
 }
 
-fn default_threads() -> usize {
+pub(crate) fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 

@@ -1,0 +1,620 @@
+//! Multi-head, chunk-blocked linear-attention engine — the serving-scale
+//! forward on top of [`super::features::FeatureBank`].
+//!
+//! # Chunked causal evaluation
+//!
+//! [`super::attention::causal_linear_attention`] walks the sequence one
+//! position at a time: per position it does two `n×dv` scalar sweeps
+//! (state update, readout) whose loop/indexing overhead — not arithmetic —
+//! dominates the runtime. This module blocks the same prefix-sum algebra
+//! into chunks of `C` positions (the blocked-prefix formulation of the
+//! FAVOR+/linear-RA estimators):
+//!
+//! ```text
+//! for each chunk Q_c, K_c, V_c of C rows:
+//!   out_c    = Φ(Q_c)·S          + tril(Φ(Q_c)·Φ(K_c)ᵀ)·V_c   (inter + intra)
+//!   denom_c  = Φ(Q_c)·z          + tril(Φ(Q_c)·Φ(K_c)ᵀ)·1
+//!   S       += Φ(K_c)ᵀ·V_c ;  z += Φ(K_c)ᵀ·1                  (state fold)
+//! ```
+//!
+//! Everything left of the `tril` is a dense contraction (`matmul`,
+//! [`Matrix::matmul_transa`]); the masked intra-chunk gram is `C(C+1)/2`
+//! unrolled dots per chunk. The causal path therefore costs
+//! O(L·(C·n + n·dv)) of dense, autovectorized work instead of O(L) scalar
+//! iterations, while the state stays O(n·dv) — a [`CausalState`] can
+//! stream L ≫ 10⁵ chunk by chunk without ever materializing the sequence.
+//!
+//! # f32 accumulation policy
+//!
+//! The f32 path ([`CausalState32`], [`chunked_causal_linear_attention32`])
+//! keeps every O(L·C·n) contraction — intra-chunk grams, inter-chunk
+//! readouts, chunk summaries — in f32, where SIMD width and memory
+//! bandwidth pay. f64 is kept exactly where roundoff compounds with
+//! sequence length:
+//!
+//! * the running state `S = Σ φ(k_j)·v_jᵀ` and `z = Σ φ(k_j)` are f64
+//!   accumulators, folded once per chunk from the f32 chunk summaries —
+//!   they are monotone sums of L positive terms, and an f32 running sum
+//!   would accumulate O(L·ε₃₂) relative error (≈1% at L=10⁵); folding
+//!   per chunk bounds each f32 partial sum to C terms;
+//! * per-row denominators accumulate in f64 for the same reason, and the
+//!   final normalization divides in f64 before rounding the output to
+//!   f32 (the numerator/denominator are correlated sums — dividing in
+//!   f32 would forfeit the cancellation of their shared error);
+//! * the state is rounded to f32 once per chunk for the readout matmul,
+//!   so the rounding enters each output once instead of drifting
+//!   per-position;
+//! * feature values themselves come from
+//!   [`FeatureBank::feature_matrix32`], which exponentiates in f64 (the
+//!   exponent is a cancellation-sensitive difference) and stores f32.
+//!
+//! `rust/tests/rfa_engine.rs` pins the f32 path to the f64 reference at
+//! L=512 under this policy.
+//!
+//! # Multi-head batching
+//!
+//! Heads are embarrassingly parallel: [`multi_head_causal_attention`]
+//! fans one chunked forward per head across `std::thread::scope` workers
+//! via the same job runner as the [`super::batch`] variance engine, and
+//! [`draw_head_banks`] splits one child rng stream per head *before* any
+//! thread is spawned — outputs are a pure function of the seed,
+//! independent of worker count.
+
+use crate::linalg::{dot, dot32, Matrix, Matrix32};
+use crate::rng::Pcg64;
+
+use super::batch::{default_threads, run_jobs};
+use super::estimators::PrfEstimator;
+use super::features::FeatureBank;
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Causal chunk length `C`. Larger chunks amortize more per-position
+    /// work into dense contractions but pay O(C·n) masked-gram work per
+    /// position; 16–64 is the sweet spot for n ∈ [32, 128].
+    pub chunk: usize,
+    /// Worker threads for multi-head fan-out; `0` = all available cores.
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { chunk: 32, threads: 0 }
+    }
+}
+
+impl EngineConfig {
+    pub(crate) fn worker_count(&self) -> usize {
+        if self.threads == 0 {
+            default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f64 chunked causal state
+// ---------------------------------------------------------------------
+
+/// Streaming causal-attention state: the O(n·dv) running prefix summaries
+/// `S = Σ_{j<t} φ(k_j)·v_jᵀ` and `z = Σ_{j<t} φ(k_j)`, advanced one chunk
+/// at a time. Feeding chunks of any sizes produces the same output rows
+/// as one monolithic call — only fp reassociation differs.
+pub struct CausalState {
+    s: Matrix,
+    z: Vec<f64>,
+}
+
+impl CausalState {
+    /// Fresh (all-zero) state for `n` features and `dv` value channels.
+    pub fn new(n: usize, dv: usize) -> Self {
+        Self { s: Matrix::zeros(n, dv), z: vec![0.0; n] }
+    }
+
+    /// Number of feature channels `n`.
+    pub fn n_features(&self) -> usize {
+        self.s.rows()
+    }
+
+    /// Process one chunk: returns the normalized attention rows for the
+    /// chunk's positions and folds the chunk's key/value summaries into
+    /// the running state.
+    pub fn forward_chunk(
+        &mut self,
+        phi_q: &Matrix,
+        phi_k: &Matrix,
+        v: &Matrix,
+    ) -> Matrix {
+        let (n, dv) = (self.s.rows(), self.s.cols());
+        assert_eq!(phi_q.cols(), n, "phi_q feature dim mismatch");
+        assert_eq!(phi_k.cols(), n, "phi_k feature dim mismatch");
+        assert_eq!(v.cols(), dv, "v channel dim mismatch");
+        assert_eq!(phi_q.rows(), phi_k.rows(), "chunk q/k length mismatch");
+        assert_eq!(phi_k.rows(), v.rows(), "chunk k/v length mismatch");
+        let c = phi_q.rows();
+
+        // Inter-chunk: everything before this chunk, two dense contractions.
+        let mut out = phi_q.matmul(&self.s);
+        let mut denom = phi_q.matvec(&self.z);
+
+        // Intra-chunk: masked gram rows — position t sees keys j ≤ t.
+        for t in 0..c {
+            let qrow = phi_q.row(t);
+            let orow = out.row_mut(t);
+            let mut acc = 0.0;
+            for j in 0..=t {
+                let g = dot(qrow, phi_k.row(j));
+                acc += g;
+                for (o, &vc) in orow.iter_mut().zip(v.row(j)) {
+                    *o += g * vc;
+                }
+            }
+            denom[t] += acc;
+        }
+
+        // State fold: single contractions over the whole chunk.
+        let summary = phi_k.matmul_transa(v);
+        for (s, &x) in self.s.data_mut().iter_mut().zip(summary.data()) {
+            *s += x;
+        }
+        for (z, x) in self.z.iter_mut().zip(phi_k.col_sums()) {
+            *z += x;
+        }
+
+        for t in 0..c {
+            let d = denom[t];
+            for o in out.row_mut(t) {
+                *o /= d;
+            }
+        }
+        out
+    }
+
+    /// Process an arbitrary-length segment by slicing it into `chunk`-row
+    /// blocks internally (the masked gram in [`Self::forward_chunk`] is
+    /// O(C²·n), so large segments must not be fed as one chunk). The
+    /// streaming API: feed consecutive segments of any sizes.
+    pub fn forward(
+        &mut self,
+        phi_q: &Matrix,
+        phi_k: &Matrix,
+        v: &Matrix,
+        chunk: usize,
+    ) -> Matrix {
+        let (l, dv) = (phi_q.rows(), self.s.cols());
+        let chunk = chunk.max(1);
+        let mut out = Matrix::zeros(l, dv);
+        let mut b = 0;
+        while b < l {
+            let e = (b + chunk).min(l);
+            let block = self.forward_chunk(
+                &phi_q.row_block(b, e),
+                &phi_k.row_block(b, e),
+                &v.row_block(b, e),
+            );
+            out.data_mut()[b * dv..e * dv].copy_from_slice(block.data());
+            b = e;
+        }
+        out
+    }
+}
+
+/// Chunk-blocked causal linear attention: same estimator as
+/// [`super::attention::causal_linear_attention`], evaluated block-wise.
+/// `chunk` is the block length C (clamped to ≥ 1); C = 1 degenerates to
+/// per-position processing.
+pub fn chunked_causal_linear_attention(
+    phi_q: &Matrix,
+    phi_k: &Matrix,
+    v: &Matrix,
+    chunk: usize,
+) -> Matrix {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_q.rows(), phi_k.rows(), "causal attention needs lq == lk");
+    assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
+    CausalState::new(phi_q.cols(), v.cols()).forward(phi_q, phi_k, v, chunk)
+}
+
+// ---------------------------------------------------------------------
+// f32 chunked causal state (f64 accumulators per the module policy)
+// ---------------------------------------------------------------------
+
+/// f32 streaming causal state. Chunk-local compute is f32; the running
+/// `S`/`z` prefixes and per-row denominators are f64 accumulators (see
+/// the module docs for the full policy).
+pub struct CausalState32 {
+    /// Running `Φ(K)ᵀ·V` prefix, row-major `n×dv`, f64 accumulator.
+    s: Vec<f64>,
+    /// Running `Φ(K)ᵀ·1` prefix, f64 accumulator.
+    z: Vec<f64>,
+    n: usize,
+    dv: usize,
+}
+
+impl CausalState32 {
+    /// Fresh (all-zero) state for `n` features and `dv` value channels.
+    pub fn new(n: usize, dv: usize) -> Self {
+        Self { s: vec![0.0; n * dv], z: vec![0.0; n], n, dv }
+    }
+
+    /// Process one chunk; see [`CausalState::forward_chunk`]. The state
+    /// snapshot is rounded to f32 once per chunk for the readout matmul.
+    pub fn forward_chunk(
+        &mut self,
+        phi_q: &Matrix32,
+        phi_k: &Matrix32,
+        v: &Matrix32,
+    ) -> Matrix32 {
+        let (n, dv) = (self.n, self.dv);
+        assert_eq!(phi_q.cols(), n, "phi_q feature dim mismatch");
+        assert_eq!(phi_k.cols(), n, "phi_k feature dim mismatch");
+        assert_eq!(v.cols(), dv, "v channel dim mismatch");
+        assert_eq!(phi_q.rows(), phi_k.rows(), "chunk q/k length mismatch");
+        assert_eq!(phi_k.rows(), v.rows(), "chunk k/v length mismatch");
+        let c = phi_q.rows();
+
+        // One rounding of the running state per chunk.
+        let s32 = Matrix32::from_vec(
+            n,
+            dv,
+            self.s.iter().map(|&x| x as f32).collect(),
+        );
+        let z32: Vec<f32> = self.z.iter().map(|&x| x as f32).collect();
+
+        // Inter-chunk readout in f32; denominators accumulate in f64.
+        let mut out = phi_q.matmul(&s32);
+        let mut denom: Vec<f64> = (0..c)
+            .map(|t| {
+                phi_q
+                    .row(t)
+                    .iter()
+                    .zip(&z32)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum()
+            })
+            .collect();
+
+        // Intra-chunk masked gram in f32.
+        for t in 0..c {
+            let qrow = phi_q.row(t);
+            let orow = out.row_mut(t);
+            let mut acc = 0.0f64;
+            for j in 0..=t {
+                let g = dot32(qrow, phi_k.row(j));
+                acc += g as f64;
+                for (o, &vc) in orow.iter_mut().zip(v.row(j)) {
+                    *o += g * vc;
+                }
+            }
+            denom[t] += acc;
+        }
+
+        // Chunk summaries in f32 (≤ C terms each), folded into f64 state.
+        let summary = phi_k.matmul_transa(v);
+        for (s, &x) in self.s.iter_mut().zip(summary.data()) {
+            *s += x as f64;
+        }
+        for (z, x) in self.z.iter_mut().zip(phi_k.col_sums_f64()) {
+            *z += x;
+        }
+
+        // Normalize in f64, store f32.
+        for t in 0..c {
+            let d = denom[t];
+            for o in out.row_mut(t) {
+                *o = (*o as f64 / d) as f32;
+            }
+        }
+        out
+    }
+
+    /// Segment-streaming wrapper over [`Self::forward_chunk`]; see
+    /// [`CausalState::forward`].
+    pub fn forward(
+        &mut self,
+        phi_q: &Matrix32,
+        phi_k: &Matrix32,
+        v: &Matrix32,
+        chunk: usize,
+    ) -> Matrix32 {
+        let (l, dv) = (phi_q.rows(), self.dv);
+        let chunk = chunk.max(1);
+        let mut out = Matrix32::zeros(l, dv);
+        let mut b = 0;
+        while b < l {
+            let e = (b + chunk).min(l);
+            let block = self.forward_chunk(
+                &phi_q.row_block(b, e),
+                &phi_k.row_block(b, e),
+                &v.row_block(b, e),
+            );
+            out.data_mut()[b * dv..e * dv].copy_from_slice(block.data());
+            b = e;
+        }
+        out
+    }
+}
+
+/// f32 chunk-blocked causal linear attention; see
+/// [`chunked_causal_linear_attention`] and the module's f32 policy.
+pub fn chunked_causal_linear_attention32(
+    phi_q: &Matrix32,
+    phi_k: &Matrix32,
+    v: &Matrix32,
+    chunk: usize,
+) -> Matrix32 {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_q.rows(), phi_k.rows(), "causal attention needs lq == lk");
+    assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
+    CausalState32::new(phi_q.cols(), v.cols())
+        .forward(phi_q, phi_k, v, chunk)
+}
+
+/// f32 non-causal linear attention: `diag(Φq·z)⁻¹·Φq·(Φkᵀ·V)`. The key
+/// summaries are folded per 128-row block so each f32 partial sum is
+/// bounded while the length-L accumulation runs in f64 (same policy as
+/// the causal state).
+pub fn linear_attention32(
+    phi_q: &Matrix32,
+    phi_k: &Matrix32,
+    v: &Matrix32,
+) -> Matrix32 {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
+    let (lk, n, dv) = (phi_k.rows(), phi_k.cols(), v.cols());
+    const FOLD: usize = 128;
+    let mut s = vec![0.0f64; n * dv];
+    let mut z = vec![0.0f64; n];
+    let mut b = 0;
+    while b < lk {
+        let e = (b + FOLD).min(lk);
+        let summary =
+            phi_k.row_block(b, e).matmul_transa(&v.row_block(b, e));
+        for (acc, &x) in s.iter_mut().zip(summary.data()) {
+            *acc += x as f64;
+        }
+        for (acc, x) in z.iter_mut().zip(phi_k.row_block(b, e).col_sums_f64())
+        {
+            *acc += x;
+        }
+        b = e;
+    }
+    let s32 =
+        Matrix32::from_vec(n, dv, s.iter().map(|&x| x as f32).collect());
+    let mut out = phi_q.matmul(&s32);
+    for t in 0..phi_q.rows() {
+        let d: f64 = phi_q
+            .row(t)
+            .iter()
+            .zip(&z)
+            .map(|(&a, b)| a as f64 * b)
+            .sum();
+        for o in out.row_mut(t) {
+            *o = (*o as f64 / d) as f32;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// End-to-end single-head wrappers
+// ---------------------------------------------------------------------
+
+/// End-to-end chunked causal PRF attention (f64): feature maps from the
+/// bank, then the blocked forward.
+pub fn prf_attention_chunked(
+    bank: &FeatureBank,
+    q: &[Vec<f64>],
+    k: &[Vec<f64>],
+    v: &Matrix,
+    cfg: &EngineConfig,
+) -> Matrix {
+    let phi_q = bank.feature_matrix(q);
+    let phi_k = bank.feature_matrix(k);
+    chunked_causal_linear_attention(&phi_q, &phi_k, v, cfg.chunk)
+}
+
+/// End-to-end chunked causal PRF attention on the f32 hot path.
+pub fn prf_attention_chunked32(
+    bank: &FeatureBank,
+    q: &[Vec<f64>],
+    k: &[Vec<f64>],
+    v: &Matrix32,
+    cfg: &EngineConfig,
+) -> Matrix32 {
+    let phi_q = bank.feature_matrix32(q);
+    let phi_k = bank.feature_matrix32(k);
+    chunked_causal_linear_attention32(&phi_q, &phi_k, v, cfg.chunk)
+}
+
+// ---------------------------------------------------------------------
+// Multi-head fan-out
+// ---------------------------------------------------------------------
+
+/// One attention head's inputs: query/key rows (length `bank.dim()`) and
+/// the value matrix (one row per position).
+pub struct Head {
+    pub q: Vec<Vec<f64>>,
+    pub k: Vec<Vec<f64>>,
+    pub v: Matrix,
+}
+
+/// Draw one feature bank per head with the [`super::batch`] seeding
+/// scheme: one child stream is split off `rng` per head *before* any
+/// thread exists, so bank h is a pure function of (seed, h) regardless
+/// of how heads are later scheduled onto workers.
+pub fn draw_head_banks(
+    est: &PrfEstimator,
+    n_heads: usize,
+    rng: &mut Pcg64,
+) -> Vec<FeatureBank> {
+    (0..n_heads)
+        .map(|_| {
+            let mut child = rng.split();
+            FeatureBank::draw(est, &mut child)
+        })
+        .collect()
+}
+
+/// Multi-head chunked causal attention (f64): head h runs the blocked
+/// forward under `banks[h]`, heads fan across `cfg` worker threads, and
+/// outputs come back in head order. Thread-count independent.
+pub fn multi_head_causal_attention(
+    banks: &[FeatureBank],
+    heads: &[Head],
+    cfg: &EngineConfig,
+) -> Vec<Matrix> {
+    assert_eq!(banks.len(), heads.len(), "one bank per head");
+    let mut jobs: Vec<(&FeatureBank, &Head)> =
+        banks.iter().zip(heads).collect();
+    run_jobs(&mut jobs, cfg.worker_count(), |&mut (bank, head)| {
+        prf_attention_chunked(bank, &head.q, &head.k, &head.v, cfg)
+    })
+}
+
+/// Multi-head chunked causal attention on the f32 hot path; values are
+/// rounded to f32 at the head boundary.
+pub fn multi_head_causal_attention32(
+    banks: &[FeatureBank],
+    heads: &[Head],
+    cfg: &EngineConfig,
+) -> Vec<Matrix32> {
+    assert_eq!(banks.len(), heads.len(), "one bank per head");
+    let mut jobs: Vec<(&FeatureBank, &Head)> =
+        banks.iter().zip(heads).collect();
+    run_jobs(&mut jobs, cfg.worker_count(), |&mut (bank, head)| {
+        let v32 = Matrix32::from_f64(&head.v);
+        prf_attention_chunked32(bank, &head.q, &head.k, &v32, cfg)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfa::attention::causal_linear_attention;
+    use crate::rfa::estimators::Sampling;
+    use crate::rng::{GaussianExt, Pcg64};
+
+    fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        (0..l)
+            .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+            .collect()
+    }
+
+    #[test]
+    fn chunked_matches_per_position_reference() {
+        let mut rng = Pcg64::seed(3101);
+        let (l, d, dv, m) = (37, 4, 3, 24);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let phi_q = bank.feature_matrix(&rows(l, d, 0.3, &mut rng));
+        let phi_k = bank.feature_matrix(&rows(l, d, 0.3, &mut rng));
+        let v = Matrix::from_rows(&rows(l, dv, 1.0, &mut rng));
+        let reference = causal_linear_attention(&phi_q, &phi_k, &v);
+        for chunk in [1usize, 5, 16, 37, 64] {
+            let blocked =
+                chunked_causal_linear_attention(&phi_q, &phi_k, &v, chunk);
+            assert!(
+                blocked.max_abs_diff(&reference) < 1e-12,
+                "chunk={chunk}: diff={}",
+                blocked.max_abs_diff(&reference)
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_state_equals_one_shot() {
+        // Feeding irregular chunk sizes through one CausalState equals the
+        // monolithic call: the state is the whole cross-chunk interface.
+        let mut rng = Pcg64::seed(3102);
+        let (l, d, dv, m) = (23, 3, 2, 16);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let phi_q = bank.feature_matrix(&rows(l, d, 0.3, &mut rng));
+        let phi_k = bank.feature_matrix(&rows(l, d, 0.3, &mut rng));
+        let v = Matrix::from_rows(&rows(l, dv, 1.0, &mut rng));
+        let one_shot =
+            chunked_causal_linear_attention(&phi_q, &phi_k, &v, 6);
+        let mut state = CausalState::new(m, dv);
+        let mut streamed = Matrix::zeros(l, dv);
+        let mut b = 0;
+        for size in [6usize, 6, 6, 5] {
+            let e = (b + size).min(l);
+            let block = state.forward_chunk(
+                &phi_q.row_block(b, e),
+                &phi_k.row_block(b, e),
+                &v.row_block(b, e),
+            );
+            streamed.data_mut()[b * dv..e * dv]
+                .copy_from_slice(block.data());
+            b = e;
+        }
+        assert_eq!(b, l);
+        assert_eq!(streamed, one_shot, "streaming must be bitwise one-shot");
+    }
+
+    #[test]
+    fn f32_engine_tracks_f64() {
+        let mut rng = Pcg64::seed(3103);
+        let (l, d, dv, m) = (64, 4, 3, 32);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let q = rows(l, d, 0.3, &mut rng);
+        let k = rows(l, d, 0.3, &mut rng);
+        let v = Matrix::from_rows(&rows(l, dv, 1.0, &mut rng));
+        let cfg = EngineConfig { chunk: 16, threads: 1 };
+        let out64 = prf_attention_chunked(&bank, &q, &k, &v, &cfg);
+        let out32 = prf_attention_chunked32(
+            &bank,
+            &q,
+            &k,
+            &Matrix32::from_f64(&v),
+            &cfg,
+        )
+        .to_f64();
+        assert!(
+            out64.max_abs_diff(&out32) < 1e-3,
+            "f32 drifted: {}",
+            out64.max_abs_diff(&out32)
+        );
+    }
+
+    #[test]
+    fn noncausal_f32_matches_f64_linear_attention() {
+        let mut rng = Pcg64::seed(3104);
+        let (lq, lk, d, dv, m) = (11, 300, 4, 3, 16);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let phi_q = bank.feature_matrix(&rows(lq, d, 0.3, &mut rng));
+        let phi_k = bank.feature_matrix(&rows(lk, d, 0.3, &mut rng));
+        let v = Matrix::from_rows(&rows(lk, dv, 1.0, &mut rng));
+        let out64 = crate::rfa::attention::linear_attention(
+            &phi_q, &phi_k, &v,
+        );
+        let out32 = linear_attention32(
+            &Matrix32::from_f64(&phi_q),
+            &Matrix32::from_f64(&phi_k),
+            &Matrix32::from_f64(&v),
+        )
+        .to_f64();
+        assert!(
+            out64.max_abs_diff(&out32) < 1e-3,
+            "f32 non-causal drifted: {}",
+            out64.max_abs_diff(&out32)
+        );
+    }
+
+    #[test]
+    fn head_banks_are_deterministic() {
+        let est = PrfEstimator::new(3, 8, Sampling::Isotropic);
+        let a = draw_head_banks(&est, 4, &mut Pcg64::seed(77));
+        let b = draw_head_banks(&est, 4, &mut Pcg64::seed(77));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.omegas(), y.omegas());
+        }
+        // Distinct heads get distinct draws.
+        assert_ne!(a[0].omegas(), a[1].omegas());
+    }
+}

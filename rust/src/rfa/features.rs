@@ -23,7 +23,7 @@
 //! [`Sampling`] modes — the equivalence property `rust/tests/rfa_batch.rs`
 //! pins down.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Matrix32};
 use crate::rng::{GaussianExt, Pcg64};
 
 use super::estimators::{PrfEstimator, Sampling};
@@ -153,6 +153,48 @@ impl FeatureBank {
         let phi_q = self.feature_matrix(qs);
         let phi_k = self.feature_matrix(ks);
         phi_q.matmul_transb(&phi_k).scale(1.0 / self.n_features() as f64)
+    }
+
+    /// f32 positive feature matrix — the SIMD hot-path variant of
+    /// [`Self::feature_matrix`].
+    ///
+    /// Precision policy: the projections `ω_i·x_l` run as one f32
+    /// [`Matrix32::matmul_transb`] contraction (the O(L·n·d) bulk), but
+    /// each per-row normalizer `a_x` is computed in f64 ([`Self::
+    /// normalizer`]) and subtracted from the f64-upcast projection before
+    /// a single f64 `exp` — the exponent is a cancellation-sensitive
+    /// difference, and getting it wrong costs *relative* error `≈ |Δ|` in
+    /// every feature. Only the final feature value is rounded to f32.
+    pub fn feature_matrix32(&self, xs: &[Vec<f64>]) -> Matrix32 {
+        let l = xs.len();
+        let d = self.dim();
+        let n = self.n_features();
+        let mut flat = Vec::with_capacity(l * d);
+        for x in xs {
+            assert_eq!(x.len(), d, "feature_matrix32: row dim mismatch");
+            flat.extend(x.iter().map(|&v| v as f32));
+        }
+        let x_mat = Matrix32::from_vec(l, d, flat);
+        let omegas32 = Matrix32::from_f64(&self.omegas);
+        let mut proj = x_mat.matmul_transb(&omegas32);
+        for (li, x) in xs.iter().enumerate() {
+            let a = self.normalizer(x);
+            let row = &mut proj.data_mut()[li * n..(li + 1) * n];
+            for (p, &sw) in row.iter_mut().zip(&self.sqrt_weights) {
+                *p = ((*p as f64 - a).exp() * sw) as f32;
+            }
+        }
+        proj
+    }
+
+    /// f32 kernel gram `Φ(Q)·Φ(K)ᵀ / n` — the hot-path variant of
+    /// [`Self::gram`]; the contraction runs entirely in f32.
+    pub fn gram32(&self, qs: &[Vec<f64>], ks: &[Vec<f64>]) -> Matrix32 {
+        let phi_q = self.feature_matrix32(qs);
+        let phi_k = self.feature_matrix32(ks);
+        phi_q
+            .matmul_transb(&phi_k)
+            .scale(1.0 / self.n_features() as f32)
     }
 
     /// Per-draw integrand values `Z_i(q, k)` — the variance engine's
@@ -293,6 +335,39 @@ mod tests {
             (mean - exact).abs() < 5.0 * se + 1e-9,
             "mean={mean} exact={exact} se={se}"
         );
+    }
+
+    #[test]
+    fn feature_matrix32_tracks_f64_path() {
+        // f32 features vs the f64 reference on the same bank: the
+        // projection runs in f32 (relative error ~n·d·eps32), the
+        // normalizer/exp in f64, so entries agree to ~1e-5 relative.
+        let mut rng = Pcg64::seed(906);
+        let sigma = anisotropic_covariance(4, 0.7, 0.5, &mut rng);
+        for sampling in [
+            Sampling::Isotropic,
+            Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+        ] {
+            let est = PrfEstimator::new(4, 24, sampling);
+            let bank = FeatureBank::draw(&est, &mut rng);
+            let xs: Vec<Vec<f64>> = (0..9)
+                .map(|_| rng.gaussian_vec(4).iter().map(|x| 0.4 * x).collect())
+                .collect();
+            let phi64 = bank.feature_matrix(&xs);
+            let phi32 = bank.feature_matrix32(&xs).to_f64();
+            for r in 0..phi64.rows() {
+                for c in 0..phi64.cols() {
+                    let (a, b) = (phi64[(r, c)], phi32[(r, c)]);
+                    assert!(
+                        rel_err(b, a) < 1e-4,
+                        "phi32[{r},{c}]={b} phi64={a}"
+                    );
+                }
+            }
+            let g64 = bank.gram(&xs, &xs);
+            let g32 = bank.gram32(&xs, &xs).to_f64();
+            assert!(g64.max_abs_diff(&g32) < 1e-3 * g64.frobenius_norm());
+        }
     }
 
     #[test]

@@ -17,7 +17,15 @@
 //!   single `Φ(Q)·Φ(K)ᵀ` contraction.
 //! * [`attention`] — pure-Rust linear-attention forwards over the
 //!   feature maps: non-causal and causal (FAVOR+-style running
-//!   prefix-sum state), plus an exact masked-softmax reference.
+//!   prefix-sum state), plus an exact masked-softmax reference (the
+//!   causal reference computes only the surviving lower-triangle
+//!   scores).
+//! * [`engine`] — the serving-scale forward: chunk-blocked causal
+//!   evaluation (dense intra-chunk grams + per-chunk state folds,
+//!   streamable to L ≫ 10⁵ with O(n·dv) state), an f32 SIMD hot path
+//!   with a documented f64-accumulator policy, and multi-head fan-out
+//!   across `std::thread::scope` workers with deterministic per-head
+//!   bank seeding.
 //! * [`proposal`] — the closed-form optimal proposal of Theorem 3.2,
 //!   `Sigma* = (I + 2L)(I - 2L)^{-1}`, plus its validity condition.
 //! * [`variance`] — scalar-reference Monte-Carlo and closed-form
@@ -29,14 +37,15 @@
 //! * [`orthogonal`] — block-orthogonal feature draws (Performer's ORF
 //!   coupling; extension ablation).
 //!
-//! Everything here is f64. The estimator layer validates the paper's
-//! *theory* claims; [`features`] + [`attention`] carry those statistics
-//! into an O(L·m·d) attention forward at hardware speed, while the
-//! AOT/JAX stack (behind the `pjrt` feature) validates the *system*
-//! claims.
+//! The estimator layer is f64 and validates the paper's *theory* claims;
+//! [`features`] + [`attention`] carry those statistics into an O(L·m·d)
+//! attention forward, [`engine`] runs that forward at serving scale
+//! (chunked, multi-head, f32 hot path), and the AOT/JAX stack (behind
+//! the `pjrt` feature) validates the *system* claims.
 
 pub mod attention;
 pub mod batch;
+pub mod engine;
 pub mod estimators;
 pub mod features;
 pub mod gaussian;
@@ -52,6 +61,12 @@ pub use attention::{
 pub use batch::{
     expected_mc_variance_batched, expected_mc_variance_threaded,
     paired_expected_mc_variance_batched, paired_expected_mc_variance_threaded,
+};
+pub use engine::{
+    chunked_causal_linear_attention, chunked_causal_linear_attention32,
+    draw_head_banks, linear_attention32, multi_head_causal_attention,
+    multi_head_causal_attention32, prf_attention_chunked,
+    prf_attention_chunked32, CausalState, CausalState32, EngineConfig, Head,
 };
 pub use estimators::{exact_softmax_kernel, PrfEstimator, Sampling};
 pub use features::FeatureBank;
