@@ -9,8 +9,8 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy bench bench-json bench-diff \
-	bench-baseline pjrt-check clean
+.PHONY: verify build test lint fmt clippy bench bench-json bench-serving \
+	bench-diff bench-baseline pjrt-check clean
 
 verify: build test lint
 
@@ -34,10 +34,16 @@ bench:
 	$(CARGO) bench --bench variance
 	$(CARGO) bench --bench linear_attention
 	$(CARGO) bench --bench multihead
+	$(CARGO) bench --bench serving
 	$(CARGO) bench --bench substrates
 
 bench-json: bench
 	@ls -l BENCH_*.json 2>/dev/null || true
+
+# Serving-layer throughput only (tokens/sec over concurrent sessions,
+# thread scaling, eviction-churn cost) — writes BENCH_serving.json.
+bench-serving:
+	$(CARGO) bench --bench serving
 
 # Compare the working tree's BENCH_*.json against the committed baseline
 # (benches/baseline/); prints per-case and per-metric deltas so perf

@@ -1,0 +1,233 @@
+//! Serving-layer bench: tokens/sec through the `rfa::serve` scheduler
+//! over {1, 8, 32} concurrent sessions × {f64, f32} precision, a
+//! thread-scaling probe, and the cost of LRU eviction/restore churn
+//! under a one-session memory budget.
+//!
+//! Emits `BENCH_serving.json`. Headline metrics:
+//! `tokens_per_sec_s{1,8,32}_{f64,f32}` (scheduled positions per second
+//! at each concurrency), `serve_thread_scaling_s8_f32` (1 worker vs all
+//! cores on the same workload) and `eviction_churn_slowdown_s8_f32`
+//! (sequential per-session drains with snapshot churn vs without).
+//!
+//! Run: `cargo bench --bench serving`.
+
+use darkformer::bench::BenchSuite;
+use darkformer::linalg::Matrix;
+use darkformer::rfa::engine::Head;
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::serve::{
+    BatchScheduler, Precision, ServeConfig, SessionPool, StepRequest,
+};
+use darkformer::rfa::PrfEstimator;
+use darkformer::rng::{GaussianExt, Pcg64};
+
+const D: usize = 16;
+const DV: usize = 16;
+const M: usize = 32;
+const N_HEADS: usize = 4;
+const CHUNK: usize = 32;
+const SEG: usize = 128;
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+fn serve_config(
+    precision: Precision,
+    threads: usize,
+    memory_budget: usize,
+) -> ServeConfig {
+    ServeConfig {
+        est: PrfEstimator::new(D, M, Sampling::Isotropic),
+        n_heads: N_HEADS,
+        dv: DV,
+        precision,
+        chunk: CHUNK,
+        threads,
+        memory_budget,
+        snapshot_dir: std::env::temp_dir()
+            .join(format!("serving_bench_{}", std::process::id())),
+    }
+}
+
+/// One pre-generated request segment per session (cloned per submit).
+fn session_inputs(n_sessions: usize) -> Vec<Vec<Head>> {
+    let mut rng = Pcg64::seed(0x5e11e);
+    (0..n_sessions)
+        .map(|_| {
+            (0..N_HEADS)
+                .map(|_| Head {
+                    q: rows(SEG, D, 0.1, &mut rng),
+                    k: rows(SEG, D, 0.1, &mut rng),
+                    v: Matrix::from_rows(&rows(SEG, DV, 0.5, &mut rng)),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn precision_tag(p: Precision) -> &'static str {
+    match p {
+        Precision::F64 => "f64",
+        Precision::F32 => "f32",
+    }
+}
+
+/// Mean ms for one scheduling round: every session submits one segment,
+/// then the queue drains. `batched` coalesces all sessions into shared
+/// ticks; sequential mode drains one session at a time (the pattern that
+/// forces snapshot churn under a tight budget).
+fn bench_round(
+    suite: &mut BenchSuite,
+    name: &str,
+    precision: Precision,
+    threads: usize,
+    memory_budget: usize,
+    n_sessions: usize,
+    batched: bool,
+    iters: usize,
+) -> f64 {
+    let mut pool = SessionPool::new(serve_config(
+        precision,
+        threads,
+        memory_budget,
+    ));
+    let ids: Vec<u64> = (0..n_sessions)
+        .map(|s| pool.create_session(100 + s as u64).unwrap())
+        .collect();
+    let inputs = session_inputs(n_sessions);
+    let mut sched = BatchScheduler::new(pool);
+    suite.bench(name, 1, iters, || {
+        if batched {
+            for (id, heads) in ids.iter().zip(&inputs) {
+                sched
+                    .submit(StepRequest {
+                        session_id: *id,
+                        heads: heads.clone(),
+                    })
+                    .unwrap();
+            }
+            let responses = sched.run_until_idle().unwrap();
+            assert_eq!(responses.len(), n_sessions);
+            std::hint::black_box(responses);
+        } else {
+            for (id, heads) in ids.iter().zip(&inputs) {
+                sched
+                    .submit(StepRequest {
+                        session_id: *id,
+                        heads: heads.clone(),
+                    })
+                    .unwrap();
+                std::hint::black_box(sched.run_until_idle().unwrap());
+            }
+        }
+    })
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("serving");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    suite.metric("available_cores", cores as f64);
+    println!(
+        "serving scheduler: d={D} dv={DV} m={M} heads={N_HEADS} \
+         chunk={CHUNK} segment={SEG} cores={cores}\n"
+    );
+
+    // Tokens/sec over {1, 8, 32} concurrent sessions, both precisions.
+    for precision in [Precision::F64, Precision::F32] {
+        let tag = precision_tag(precision);
+        for n_sessions in [1usize, 8, 32] {
+            let iters = if n_sessions >= 32 { 3 } else { 5 };
+            let ms = bench_round(
+                &mut suite,
+                &format!("serve/{tag}/s{n_sessions}"),
+                precision,
+                0,
+                0,
+                n_sessions,
+                true,
+                iters,
+            );
+            let tokens_per_sec = (n_sessions * SEG) as f64 / (ms / 1e3);
+            println!(
+                "  -> {tokens_per_sec:>12.0} tokens/s \
+                 ({n_sessions} sessions, {tag})"
+            );
+            suite.metric(
+                format!("tokens_per_sec_s{n_sessions}_{tag}"),
+                tokens_per_sec,
+            );
+        }
+    }
+
+    // Thread scaling: identical 8-session workload, 1 worker vs all
+    // cores (outputs identical by the determinism contract).
+    let t1 = bench_round(
+        &mut suite,
+        "serve/f32/s8/threads1",
+        Precision::F32,
+        1,
+        0,
+        8,
+        true,
+        3,
+    );
+    let tall = bench_round(
+        &mut suite,
+        "serve/f32/s8/threads_all",
+        Precision::F32,
+        0,
+        0,
+        8,
+        true,
+        3,
+    );
+    suite.metric("serve_thread_scaling_s8_f32", t1 / tall);
+    println!(
+        "\nthread scaling (8 sessions, f32): {:.2}x across {cores} cores",
+        t1 / tall
+    );
+
+    // Eviction churn: sequential per-session drains with a one-session
+    // budget (every switch snapshots one session out and faults another
+    // in) vs the same drains with no budget pressure.
+    let probe = {
+        let mut pool = SessionPool::new(serve_config(Precision::F32, 1, 0));
+        let id = pool.create_session(0).unwrap();
+        pool.session_mut(id).unwrap().state_bytes()
+    };
+    let no_churn = bench_round(
+        &mut suite,
+        "serve/f32/s8/sequential",
+        Precision::F32,
+        0,
+        0,
+        8,
+        false,
+        3,
+    );
+    let churn = bench_round(
+        &mut suite,
+        "serve/f32/s8/sequential_churn",
+        Precision::F32,
+        0,
+        probe,
+        8,
+        false,
+        3,
+    );
+    suite.metric("eviction_churn_slowdown_s8_f32", churn / no_churn);
+    println!(
+        "eviction/restore churn slowdown (8 sessions, 1-session budget): \
+         {:.2}x",
+        churn / no_churn
+    );
+
+    if let Err(e) = suite.write() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -4,6 +4,12 @@
 //! by chunk, then runs the same workload multi-head across all cores on
 //! the f32 hot path, printing agreement and throughput numbers.
 //!
+//! This demos the raw single-request forward — the middle of the stack.
+//! The serving entry point is `rfa::serve` (multi-tenant session pool,
+//! batch scheduler, resumable snapshots); see
+//! `examples/serve_demo.rs` for the end-to-end serving loop built on
+//! the exact state streamed here.
+//!
 //! Run: `cargo run --release --example chunked_attention`.
 
 use std::time::Instant;

@@ -122,6 +122,23 @@ fn main() -> ExitCode {
     }
 
     let files = baseline_files(&baseline_dir);
+    // Suites present in the current run but absent from the baseline
+    // (e.g. a freshly added bench target like BENCH_serving.json) would
+    // otherwise be invisible here — call them out so the next
+    // `make bench-baseline` run knows to pick them up.
+    let baselined: Vec<String> = files
+        .iter()
+        .filter_map(|p| p.file_name()?.to_str().map(String::from))
+        .collect();
+    for cur_only in baseline_files(&current_dir) {
+        let name = cur_only.file_name().unwrap().to_str().unwrap();
+        if !baselined.iter().any(|b| b == name) {
+            println!(
+                "== {name} == new suite (no baseline — add it via \
+                 `make bench-baseline`)\n"
+            );
+        }
+    }
     if files.is_empty() {
         println!(
             "no BENCH_*.json baseline found under {} — generate one with \

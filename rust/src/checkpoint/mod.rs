@@ -11,8 +11,11 @@
 //!
 //! Used for model parameters and optimizer state between pretraining and
 //! the finetuning experiments (the "pretrained weights" of the paper's
-//! resource-constrained setting), and by the coordinator's periodic
-//! checkpoint cadence.
+//! resource-constrained setting), by the coordinator's periodic
+//! checkpoint cadence, and by [`crate::rfa::serve`]'s resumable session
+//! snapshots — which is why the store carries an F64 dtype (bitwise f64
+//! round-trips) and typed `require_*` reads that turn a missing, renamed
+//! or reshaped tensor into a descriptive error instead of a panic.
 
 mod store;
 

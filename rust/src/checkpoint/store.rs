@@ -15,6 +15,10 @@ pub enum DType {
     F32,
     I32,
     U32,
+    /// Added for the `rfa::serve` session snapshots, whose resumability
+    /// contract is *bitwise* f64 round-trips; files without F64 tensors
+    /// are unchanged, so the format version stays at 1.
+    F64,
 }
 
 impl DType {
@@ -23,6 +27,7 @@ impl DType {
             DType::F32 => 0,
             DType::I32 => 1,
             DType::U32 => 2,
+            DType::F64 => 3,
         }
     }
 
@@ -31,12 +36,16 @@ impl DType {
             0 => DType::F32,
             1 => DType::I32,
             2 => DType::U32,
+            3 => DType::F64,
             t => bail!("unknown dtype tag {t}"),
         })
     }
 
     pub fn size_bytes(self) -> usize {
-        4
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F64 => 8,
+        }
     }
 }
 
@@ -59,6 +68,21 @@ impl Tensor {
         assert_eq!(shape.iter().product::<usize>(), values.len());
         let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
         Self { dtype: DType::I32, shape, data }
+    }
+
+    pub fn from_u32(shape: Vec<usize>, values: &[u32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self { dtype: DType::U32, shape, data }
+    }
+
+    /// f64 tensor — the little-endian bytes preserve every bit, so an
+    /// f64 value round-trips exactly (the property session snapshots
+    /// rely on).
+    pub fn from_f64(shape: Vec<usize>, values: &[f64]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self { dtype: DType::F64, shape, data }
     }
 
     pub fn element_count(&self) -> usize {
@@ -86,6 +110,32 @@ impl Tensor {
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
+
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        if self.dtype != DType::U32 {
+            bail!("tensor is {:?}, not U32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_f64(&self) -> Result<Vec<f64>> {
+        if self.dtype != DType::F64 {
+            bail!("tensor is {:?}, not F64", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(8)
+            .map(|c| {
+                f64::from_le_bytes([
+                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                ])
+            })
+            .collect())
+    }
 }
 
 /// An ordered collection of named tensors.
@@ -105,6 +155,59 @@ impl Checkpoint {
 
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.tensors.get(name)
+    }
+
+    /// Fetch a tensor by name, with a descriptive error (instead of a
+    /// panic or a bare `None`) when it is absent.
+    pub fn require(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| {
+            format!(
+                "checkpoint has no tensor named {name:?} ({} tensors: {})",
+                self.tensors.len(),
+                self.tensors
+                    .keys()
+                    .take(8)
+                    .map(String::as_str)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// Fetch a tensor by name and validate dtype and shape — the typed
+    /// read the `rfa::serve` snapshot path restores through, so a renamed
+    /// or reshaped tensor surfaces as a readable error, never a panic or
+    /// a silently misinterpreted buffer.
+    pub fn require_typed(
+        &self,
+        name: &str,
+        dtype: DType,
+        shape: &[usize],
+    ) -> Result<&Tensor> {
+        let t = self.require(name)?;
+        if t.dtype != dtype {
+            bail!(
+                "tensor {name:?} is {:?}, expected {dtype:?}",
+                t.dtype
+            );
+        }
+        if t.shape != shape {
+            bail!(
+                "tensor {name:?} has shape {:?}, expected {shape:?}",
+                t.shape
+            );
+        }
+        Ok(t)
+    }
+
+    /// Typed f64 read: [`Checkpoint::require_typed`] + decode.
+    pub fn require_f64(&self, name: &str, shape: &[usize]) -> Result<Vec<f64>> {
+        self.require_typed(name, DType::F64, shape)?.as_f64()
+    }
+
+    /// Typed u32 read: [`Checkpoint::require_typed`] + decode.
+    pub fn require_u32(&self, name: &str, shape: &[usize]) -> Result<Vec<u32>> {
+        self.require_typed(name, DType::U32, shape)?.as_u32()
     }
 
     pub fn names(&self) -> impl Iterator<Item = &String> {
@@ -360,6 +463,65 @@ mod tests {
         let path = tmp("empty.dkft");
         ck.save(&path).unwrap();
         assert!(Checkpoint::load(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn f64_round_trip_is_bitwise() {
+        // The serve snapshot contract: every f64 bit pattern survives,
+        // including denormals, negative zero and extreme exponents.
+        let vals = [
+            1.0f64,
+            -0.0,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest denormal
+            1e300,
+            -1.2345678901234567,
+        ];
+        let mut ck = Checkpoint::new();
+        ck.insert("s", Tensor::from_f64(vec![2, 3], &vals));
+        ck.insert("pos", Tensor::from_u32(vec![2], &[0xdead_beef, 7]));
+        let path = tmp("f64bits.dkft");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        let back = loaded.require_f64("s", &[2, 3]).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} changed bits");
+        }
+        assert_eq!(
+            loaded.require_u32("pos", &[2]).unwrap(),
+            vec![0xdead_beef, 7]
+        );
+    }
+
+    #[test]
+    fn require_reports_missing_and_mismatched() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![4], &[1.0, 2.0, 3.0, 4.0]));
+        // Missing name: descriptive error, not a panic.
+        let err = ck.require("nope").unwrap_err();
+        assert!(format!("{err}").contains("nope"), "got: {err}");
+        // Wrong dtype.
+        let err =
+            ck.require_typed("w", DType::F64, &[4]).unwrap_err();
+        assert!(format!("{err}").contains("F32"), "got: {err}");
+        assert!(format!("{err}").contains("F64"), "got: {err}");
+        // Wrong shape.
+        let err = ck.require_typed("w", DType::F32, &[2, 2]).unwrap_err();
+        assert!(format!("{err}").contains("[2, 2]"), "got: {err}");
+    }
+
+    #[test]
+    fn corrupted_crc_is_a_described_error() {
+        let mut ck = Checkpoint::new();
+        ck.insert("s", Tensor::from_f64(vec![3], &[1.0, 2.0, 3.0]));
+        let path = tmp("crc_err.dkft");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("CRC"), "got: {err}");
     }
 
     #[test]

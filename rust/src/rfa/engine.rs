@@ -118,6 +118,32 @@ impl CausalState {
         self.s.rows()
     }
 
+    /// Number of value channels `dv`.
+    pub fn dv(&self) -> usize {
+        self.s.cols()
+    }
+
+    /// The running prefix `S = Σ φ(k_j)·v_jᵀ` (`n×dv`). Read access for
+    /// state snapshots ([`crate::rfa::serve`]); the recursion itself only
+    /// advances through [`Self::forward_chunk`].
+    pub fn state(&self) -> &Matrix {
+        &self.s
+    }
+
+    /// The running normalizer prefix `z = Σ φ(k_j)` (length `n`).
+    pub fn z(&self) -> &[f64] {
+        &self.z
+    }
+
+    /// Rebuild a state from snapshotted parts — the write half of the
+    /// snapshot surface. `s` is the `n×dv` prefix, `z` its length-`n`
+    /// normalizer; a state restored from [`Self::state`]/[`Self::z`]
+    /// continues the stream bitwise identically.
+    pub fn from_parts(s: Matrix, z: Vec<f64>) -> Self {
+        assert_eq!(s.rows(), z.len(), "state/z feature dims differ");
+        Self { s, z }
+    }
+
     /// Process one chunk: returns the normalized attention rows for the
     /// chunk's positions and folds the chunk's key/value summaries into
     /// the running state.
@@ -237,6 +263,36 @@ impl CausalState32 {
     /// Fresh (all-zero) state for `n` features and `dv` value channels.
     pub fn new(n: usize, dv: usize) -> Self {
         Self { s: vec![0.0; n * dv], z: vec![0.0; n], n, dv }
+    }
+
+    /// Number of feature channels `n`.
+    pub fn n_features(&self) -> usize {
+        self.n
+    }
+
+    /// Number of value channels `dv`.
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    /// The running `n×dv` prefix `S`, row-major. Per the module policy
+    /// this is an **f64** accumulator even on the f32 path, so snapshots
+    /// of it are exact-bits by construction.
+    pub fn state(&self) -> &[f64] {
+        &self.s
+    }
+
+    /// The running normalizer prefix `z` (length `n`, f64 accumulator).
+    pub fn z(&self) -> &[f64] {
+        &self.z
+    }
+
+    /// Rebuild a state from snapshotted parts; see
+    /// [`CausalState::from_parts`]. `s` is row-major `n×dv`.
+    pub fn from_parts(n: usize, dv: usize, s: Vec<f64>, z: Vec<f64>) -> Self {
+        assert_eq!(s.len(), n * dv, "state size != n*dv");
+        assert_eq!(z.len(), n, "z size != n");
+        Self { s, z, n, dv }
     }
 
     /// Process one chunk; see [`CausalState::forward_chunk`]. The state
@@ -435,6 +491,7 @@ pub fn prf_attention_chunked32(
 
 /// One attention head's inputs: query/key rows (length `bank.dim()`) and
 /// the value matrix (one row per position).
+#[derive(Clone)]
 pub struct Head {
     pub q: Vec<Vec<f64>>,
     pub k: Vec<Vec<f64>>,

@@ -107,6 +107,39 @@ impl FeatureBank {
         &self.omegas
     }
 
+    /// The per-draw importance weights `w_i` (all 1 when unweighted).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// The normalizer covariance Σ (`Some` only for data-aware banks,
+    /// where `a_x = ½·xᵀΣx`).
+    pub fn norm_sigma(&self) -> Option<&Matrix> {
+        self.norm_sigma.as_ref()
+    }
+
+    /// Rebuild a bank from snapshotted parts ([`Self::omegas`],
+    /// [`Self::weights`], [`Self::norm_sigma`]) — the restore half of the
+    /// `rfa::serve` snapshot surface. `√w_i` is recomputed; IEEE `sqrt`
+    /// is correctly rounded, so the rebuilt bank is bitwise identical to
+    /// the one snapshotted.
+    pub fn from_parts(
+        omegas: Matrix,
+        weights: Vec<f64>,
+        norm_sigma: Option<Matrix>,
+    ) -> Self {
+        assert_eq!(omegas.rows(), weights.len(), "one weight per draw");
+        if let Some(sigma) = &norm_sigma {
+            assert_eq!(
+                (sigma.rows(), sigma.cols()),
+                (omegas.cols(), omegas.cols()),
+                "norm sigma must be d×d"
+            );
+        }
+        let sqrt_weights = weights.iter().map(|w| w.sqrt()).collect();
+        Self { omegas, weights, sqrt_weights, norm_sigma }
+    }
+
     /// Row normalizer `a_x`: `½·xᵀΣx` for data-aware banks, `½‖x‖²`
     /// otherwise. O(d²) worst case — called once per vector, never per
     /// draw.

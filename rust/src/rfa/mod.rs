@@ -26,6 +26,12 @@
 //!   with a documented f64-accumulator policy, and multi-head fan-out
 //!   across `std::thread::scope` workers with deterministic per-head
 //!   bank seeding.
+//! * [`serve`] — the streaming inference-serving layer on top of
+//!   [`engine`]: per-user [`serve::Session`]s owning O(n·dv) causal
+//!   state, a budgeted [`serve::SessionPool`] with LRU
+//!   eviction-to-snapshot, a session-batched [`serve::BatchScheduler`]
+//!   fanning (session × head) work across workers, and bitwise-resumable
+//!   KV-state snapshots through the [`crate::checkpoint`] store.
 //! * [`proposal`] — the closed-form optimal proposal of Theorem 3.2,
 //!   `Sigma* = (I + 2L)(I - 2L)^{-1}`, plus its validity condition.
 //! * [`variance`] — scalar-reference Monte-Carlo and closed-form
@@ -40,8 +46,10 @@
 //! The estimator layer is f64 and validates the paper's *theory* claims;
 //! [`features`] + [`attention`] carry those statistics into an O(L·m·d)
 //! attention forward, [`engine`] runs that forward at serving scale
-//! (chunked, multi-head, f32 hot path), and the AOT/JAX stack (behind
-//! the `pjrt` feature) validates the *system* claims.
+//! (chunked, multi-head, f32 hot path), [`serve`] is the top of the
+//! stack — the multi-tenant streaming entry point (session pool, batch
+//! scheduler, resumable snapshots) — and the AOT/JAX stack (behind the
+//! `pjrt` feature) validates the *system* claims.
 
 pub mod attention;
 pub mod batch;
@@ -52,6 +60,7 @@ pub mod gaussian;
 pub mod mahalanobis;
 pub mod orthogonal;
 pub mod proposal;
+pub mod serve;
 pub mod variance;
 
 pub use attention::{
@@ -72,3 +81,7 @@ pub use estimators::{exact_softmax_kernel, PrfEstimator, Sampling};
 pub use features::FeatureBank;
 pub use gaussian::MultivariateGaussian;
 pub use proposal::{optimal_proposal, proposal_is_valid};
+pub use serve::{
+    BatchScheduler, Precision, ServeConfig, Session, SessionPool,
+    StepRequest, StepResponse,
+};

@@ -1,0 +1,83 @@
+//! Streaming inference-serving layer over the chunked attention engine.
+//!
+//! [`super::engine`] is a fast single-request forward; this module turns
+//! it into a multi-tenant streaming attention server. The O(n·dv)
+//! running state of causal linear attention is exactly what makes
+//! per-user streaming cheap: a [`session::Session`] owns one
+//! [`super::engine::CausalState`] (or `CausalState32`) per head plus the
+//! head's [`super::features::FeatureBank`], and each incoming chunk of
+//! (q, k, v) rows advances that state — no per-session KV cache growing
+//! with the stream length.
+//!
+//! Three pieces:
+//!
+//! * [`session`] — [`session::Session`] (per-head banks + states, a
+//!   monotone position counter, resident-byte accounting) and
+//!   [`session::SessionPool`] (id allocation, a configurable memory
+//!   budget, LRU eviction). Evicted sessions are **snapshotted, not
+//!   dropped**: the pool writes a DKFT snapshot and faults the session
+//!   back in on its next request, so a tight budget changes wall-clock,
+//!   never outputs.
+//! * [`scheduler`] — [`scheduler::BatchScheduler`]: accepts
+//!   [`scheduler::StepRequest`]s, coalesces the pending queue into one
+//!   batch per tick, and fans (session × head) work items across the
+//!   same job runner as the variance/engine fan-outs.
+//! * [`snapshot`] — serialize/restore a session through the
+//!   [`crate::checkpoint::Checkpoint`] tensor store.
+//!
+//! # Scheduler determinism contract
+//!
+//! Every session's output stream is a pure function of its seed and its
+//! own request sequence. Concretely:
+//!
+//! * per tick the scheduler takes **at most one** pending request per
+//!   session — the earliest — so same-session requests apply in arrival
+//!   order; different sessions are independent;
+//! * the tick's work items are ordered by (request arrival, head index)
+//!   and run through [`super::batch::run_jobs`], whose job-order
+//!   reduction makes results bitwise independent of the worker count;
+//! * states mutate only inside the owning work item, and eviction /
+//!   fault-in happens serially between ticks through exact-bits
+//!   snapshots.
+//!
+//! Consequently outputs are invariant under thread count, tick
+//! boundaries, arrival interleaving *across* sessions, and memory
+//! budget — the properties `rust/tests/rfa_serve.rs` pins. Chunk
+//! blocking is per segment: a request of `L` rows is evaluated in
+//! `chunk`-row blocks from the segment start, so feeding segments whose
+//! lengths are multiples of `chunk` is bitwise identical to one
+//! monolithic evaluation (the engine's streaming property).
+//!
+//! # Snapshot tensor naming scheme
+//!
+//! A session snapshot is a DKFT checkpoint with names:
+//!
+//! ```text
+//! session/version      u32[1]   snapshot schema version (1)
+//! session/id           u32[2]   u64 as [lo, hi]
+//! session/seed         u32[2]   bank-draw seed as [lo, hi]
+//! session/position     u32[2]   stream position as [lo, hi]
+//! session/precision    u32[1]   0 = f64, 1 = f32
+//! session/n_heads      u32[1]
+//! session/dv           u32[1]
+//! head{h}/bank/omegas  f64[n, d]
+//! head{h}/bank/weights f64[n]
+//! head{h}/bank/sigma   f64[d, d]  (data-aware banks only)
+//! head{h}/state        f64[n, dv] running S prefix
+//! head{h}/z            f64[n]     running normalizer prefix
+//! ```
+//!
+//! State tensors are F64 even for f32 sessions — the f32 engine's
+//! accumulators are f64 by policy (see [`super::engine`]) — so every
+//! round-trip is exact-bits and a restored session continues its stream
+//! bitwise identically to an uninterrupted one.
+
+pub mod scheduler;
+pub mod session;
+pub mod snapshot;
+
+pub use scheduler::{BatchScheduler, StepRequest, StepResponse};
+pub use session::{
+    Precision, ServeConfig, Session, SessionPool, StepOutput,
+};
+pub use snapshot::{load_session, save_session};

@@ -1,0 +1,271 @@
+//! Session-batched scheduling: coalesce pending step requests into one
+//! batch per tick and fan (session × head) work items across worker
+//! threads.
+//!
+//! The scheduling discipline (at most one request per session per tick,
+//! earliest first; work items ordered by (arrival, head index); job-order
+//! reduction via [`crate::rfa::batch::run_jobs`]) makes every session's
+//! output stream a pure function of its seed and its own request
+//! sequence — see the determinism contract in the [`super`] module docs.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::rfa::engine::Head;
+
+use super::session::{HeadSlot, SessionPool, StepOutput};
+
+/// One streaming step for one session: a segment of per-head (q, k, v)
+/// rows to append to the session's stream. All heads must cover the same
+/// positions (equal row counts).
+pub struct StepRequest {
+    pub session_id: u64,
+    pub heads: Vec<Head>,
+}
+
+impl StepRequest {
+    /// Convenience: the same (q, k, v) segment for every head (the heads
+    /// still produce distinct outputs — their banks differ). Note this
+    /// clones the segment once per head because requests own per-head
+    /// inputs; latency-sensitive callers with genuinely distinct per-head
+    /// projections should build `heads` directly (no redundant copies).
+    pub fn broadcast(
+        session_id: u64,
+        n_heads: usize,
+        q: Vec<Vec<f64>>,
+        k: Vec<Vec<f64>>,
+        v: crate::linalg::Matrix,
+    ) -> Self {
+        let heads = (0..n_heads)
+            .map(|_| Head { q: q.clone(), k: k.clone(), v: v.clone() })
+            .collect();
+        Self { session_id, heads }
+    }
+
+    fn rows(&self) -> usize {
+        self.heads.first().map_or(0, |h| h.v.rows())
+    }
+}
+
+/// Outputs for one completed [`StepRequest`].
+pub struct StepResponse {
+    pub session_id: u64,
+    /// Arrival sequence number assigned by [`BatchScheduler::submit`].
+    pub seq: u64,
+    /// Stream position of the first output row (the session's position
+    /// counter before this request applied).
+    pub start_position: u64,
+    /// One output per head, in head order, in the session's precision.
+    pub outputs: Vec<StepOutput>,
+}
+
+/// Work item of one scheduling tick: one head of one scheduled session.
+struct HeadJob<'a> {
+    slot: &'a mut HeadSlot,
+    input: &'a Head,
+}
+
+/// Coalescing batch scheduler over a [`SessionPool`].
+///
+/// `submit` enqueues; each `tick` drains at most one request per session
+/// (earliest first), faults their sessions in, runs all (session × head)
+/// items on the worker pool, and queues the responses; `poll_responses`
+/// drains completed responses. [`BatchScheduler::run_until_idle`] is the
+/// synchronous wall-clock-free drain used by tests and benches.
+pub struct BatchScheduler {
+    pool: SessionPool,
+    pending: VecDeque<(u64, StepRequest)>,
+    ready: VecDeque<StepResponse>,
+    next_seq: u64,
+}
+
+impl BatchScheduler {
+    pub fn new(pool: SessionPool) -> Self {
+        Self {
+            pool,
+            pending: VecDeque::new(),
+            ready: VecDeque::new(),
+            next_seq: 0,
+        }
+    }
+
+    pub fn pool(&self) -> &SessionPool {
+        &self.pool
+    }
+
+    pub fn pool_mut(&mut self) -> &mut SessionPool {
+        &mut self.pool
+    }
+
+    /// Recover the pool (e.g. to snapshot every session at shutdown).
+    pub fn into_pool(self) -> SessionPool {
+        self.pool
+    }
+
+    /// Number of requests waiting for a tick.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Validate and enqueue a request; returns its arrival sequence
+    /// number (echoed in the response).
+    pub fn submit(&mut self, req: StepRequest) -> Result<u64> {
+        ensure!(
+            self.pool.contains(req.session_id),
+            "no session with id {}",
+            req.session_id
+        );
+        let cfg = self.pool.cfg();
+        ensure!(
+            req.heads.len() == cfg.n_heads,
+            "request for session {} has {} heads, pool serves {}",
+            req.session_id,
+            req.heads.len(),
+            cfg.n_heads
+        );
+        let rows = req.rows();
+        let d = cfg.est.dim();
+        for (h, head) in req.heads.iter().enumerate() {
+            ensure!(
+                head.q.len() == rows
+                    && head.k.len() == rows
+                    && head.v.rows() == rows,
+                "head {h}: q/k/v row counts ({}, {}, {}) must all equal {rows}",
+                head.q.len(),
+                head.k.len(),
+                head.v.rows()
+            );
+            ensure!(
+                head.q.iter().chain(&head.k).all(|r| r.len() == d),
+                "head {h}: q/k rows must have dim {d}"
+            );
+            ensure!(
+                head.v.cols() == cfg.dv,
+                "head {h}: v has {} channels, pool serves {}",
+                head.v.cols(),
+                cfg.dv
+            );
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back((seq, req));
+        Ok(seq)
+    }
+
+    /// Run one scheduling tick; returns the number of requests completed
+    /// (0 when the queue is empty). On a snapshot-IO error (eviction or
+    /// fault-in) the batch is re-queued in arrival order and the error
+    /// propagated — no request is lost.
+    pub fn tick(&mut self) -> Result<usize> {
+        // Coalesce: earliest pending request per distinct session. This
+        // rescans the whole queue (one shallow move per deferred entry),
+        // so draining a B-deep single-session backlog costs O(B) moves
+        // per tick; per-session FIFO queues are the upgrade path if
+        // backlogs ever reach that scale (see the ROADMAP item).
+        let mut scheduled_ids = BTreeSet::new();
+        let mut batch: Vec<(u64, StepRequest)> = Vec::new();
+        let mut rest: VecDeque<(u64, StepRequest)> = VecDeque::new();
+        while let Some((seq, req)) = self.pending.pop_front() {
+            if scheduled_ids.insert(req.session_id) {
+                batch.push((seq, req));
+            } else {
+                rest.push_back((seq, req));
+            }
+        }
+        self.pending = rest;
+        if batch.is_empty() {
+            return Ok(0);
+        }
+        match self.run_batch(&batch) {
+            Ok(responses) => {
+                let completed = responses.len();
+                self.ready.extend(responses);
+                // A tick pins its whole batch, so a many-session batch
+                // can legitimately overshoot the budget while running;
+                // re-enforce it now that nothing is pinned. The batch is
+                // NOT requeued on failure here — every request already
+                // completed and its response is queued.
+                self.pool.ensure_budget(&[])?;
+                Ok(completed)
+            }
+            Err(e) => {
+                let mut all: Vec<(u64, StepRequest)> = batch
+                    .into_iter()
+                    .chain(self.pending.drain(..))
+                    .collect();
+                all.sort_by_key(|(seq, _)| *seq);
+                self.pending = all.into();
+                Err(e)
+            }
+        }
+    }
+
+    /// Fault the batch's sessions in and run every (session × head) item
+    /// on the worker pool. All fallible (IO) work happens before any
+    /// session state is touched, so an `Err` leaves every stream intact.
+    fn run_batch(
+        &mut self,
+        batch: &[(u64, StepRequest)],
+    ) -> Result<Vec<StepResponse>> {
+        // Fault every scheduled session in, serially, with the whole
+        // batch pinned so faulting one in never evicts another.
+        let ids: Vec<u64> = batch.iter().map(|(_, r)| r.session_id).collect();
+        for &id in &ids {
+            self.pool.ensure_resident(id, &ids)?;
+        }
+
+        // Fan out: jobs ordered by (request arrival, head index).
+        let chunk = self.pool.cfg().chunk;
+        let workers = self.pool.cfg().worker_count();
+        let sessions = self.pool.sessions_mut(&ids);
+        let mut starts = Vec::with_capacity(batch.len());
+        let mut jobs: Vec<HeadJob> = Vec::new();
+        for (session, (_, req)) in sessions.into_iter().zip(batch) {
+            let (start, slots) = session.begin_step(req.rows() as u64);
+            starts.push(start);
+            for (slot, input) in slots.iter_mut().zip(&req.heads) {
+                jobs.push(HeadJob { slot, input });
+            }
+        }
+        let outputs = crate::rfa::batch::run_jobs(
+            &mut jobs,
+            workers,
+            |job: &mut HeadJob| job.slot.step(job.input, chunk),
+        );
+
+        // Reassemble responses in batch order.
+        let mut outputs = outputs.into_iter();
+        let mut responses = Vec::with_capacity(batch.len());
+        for ((seq, req), start_position) in batch.iter().zip(starts) {
+            let head_outputs: Vec<StepOutput> =
+                (&mut outputs).take(req.heads.len()).collect();
+            responses.push(StepResponse {
+                session_id: req.session_id,
+                seq: *seq,
+                start_position,
+                outputs: head_outputs,
+            });
+        }
+        Ok(responses)
+    }
+
+    /// Drain completed responses (in completion order; `seq` identifies
+    /// the request).
+    pub fn poll_responses(&mut self) -> Vec<StepResponse> {
+        self.ready.drain(..).collect()
+    }
+
+    /// Tick until the pending queue is empty, then drain every response —
+    /// the synchronous, wall-clock-free way to run a workload to
+    /// completion.
+    pub fn run_until_idle(&mut self) -> Result<Vec<StepResponse>> {
+        while !self.pending.is_empty() {
+            let done = self.tick()?;
+            if done == 0 {
+                bail!("scheduler made no progress with non-empty queue");
+            }
+        }
+        Ok(self.poll_responses())
+    }
+}

@@ -1,0 +1,491 @@
+//! Sessions and the budgeted session pool.
+//!
+//! A [`Session`] is one user stream: per-head feature banks drawn from
+//! the session seed plus per-head running causal states, advanced one
+//! (q, k, v) segment at a time. The [`SessionPool`] owns every session,
+//! enforces a resident-memory budget, and evicts least-recently-used
+//! sessions to snapshots (never dropping state) so they fault back in
+//! transparently on their next request.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::linalg::{Matrix, Matrix32};
+use crate::rfa::engine::{
+    draw_head_banks, CausalState, CausalState32, Head,
+};
+use crate::rfa::estimators::PrfEstimator;
+use crate::rfa::features::FeatureBank;
+use crate::rng::Pcg64;
+
+use super::snapshot;
+
+/// Numeric precision of a session's forward path. The running state is
+/// f64 either way (the engine's accumulator policy); `F32` runs the
+/// chunk-local contractions on the f32 SIMD hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    F32,
+}
+
+/// Serving-layer configuration: model geometry, precision, scheduling
+/// knobs and the pool's memory policy.
+pub struct ServeConfig {
+    /// Estimator geometry the per-head banks are drawn from (input dim
+    /// `d`, features `m`, sampling law).
+    pub est: PrfEstimator,
+    /// Attention heads per session.
+    pub n_heads: usize,
+    /// Value channels per head.
+    pub dv: usize,
+    /// Forward-path precision for every session in the pool.
+    pub precision: Precision,
+    /// Causal chunk length `C` (see [`crate::rfa::engine::EngineConfig`]).
+    pub chunk: usize,
+    /// Worker threads for the scheduler's (session × head) fan-out;
+    /// `0` = all available cores.
+    pub threads: usize,
+    /// Resident-state budget in bytes; `0` = unlimited. The pool evicts
+    /// LRU sessions to snapshots to stay under it (a single session may
+    /// exceed the budget — it is then the only resident one).
+    pub memory_budget: usize,
+    /// Directory evicted-session snapshots are written to.
+    pub snapshot_dir: PathBuf,
+}
+
+impl ServeConfig {
+    pub(crate) fn worker_count(&self) -> usize {
+        if self.threads == 0 {
+            crate::rfa::batch::default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// One head's output rows for one request, in the session's precision.
+#[derive(Debug)]
+pub enum StepOutput {
+    F64(Matrix),
+    F32(Matrix32),
+}
+
+impl StepOutput {
+    /// Number of output rows (= request positions).
+    pub fn rows(&self) -> usize {
+        match self {
+            StepOutput::F64(m) => m.rows(),
+            StepOutput::F32(m) => m.rows(),
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<&Matrix> {
+        match self {
+            StepOutput::F64(m) => Some(m),
+            StepOutput::F32(_) => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Matrix32> {
+        match self {
+            StepOutput::F32(m) => Some(m),
+            StepOutput::F64(_) => None,
+        }
+    }
+
+    /// Widen to f64 (copy for f32 outputs) — convenience for checksums
+    /// and cross-precision comparisons.
+    pub fn to_f64(&self) -> Matrix {
+        match self {
+            StepOutput::F64(m) => m.clone(),
+            StepOutput::F32(m) => m.to_f64(),
+        }
+    }
+}
+
+/// Per-head running state in the session's precision.
+pub enum HeadState {
+    F64(CausalState),
+    F32(CausalState32),
+}
+
+/// One head of a session: its feature bank plus its running state. The
+/// scheduler's unit of parallel work.
+pub struct HeadSlot {
+    pub(crate) bank: FeatureBank,
+    pub(crate) state: HeadState,
+}
+
+impl HeadSlot {
+    pub fn bank(&self) -> &FeatureBank {
+        &self.bank
+    }
+
+    pub fn state(&self) -> &HeadState {
+        &self.state
+    }
+
+    /// Advance this head by one request segment and return its output
+    /// rows. Chunk blocking restarts at the segment start (the
+    /// determinism contract in the module docs).
+    pub(crate) fn step(&mut self, input: &Head, chunk: usize) -> StepOutput {
+        match &mut self.state {
+            HeadState::F64(st) => {
+                let phi_q = self.bank.feature_matrix(&input.q);
+                let phi_k = self.bank.feature_matrix(&input.k);
+                StepOutput::F64(st.forward(&phi_q, &phi_k, &input.v, chunk))
+            }
+            HeadState::F32(st) => {
+                let phi_q = self.bank.feature_matrix32(&input.q);
+                let phi_k = self.bank.feature_matrix32(&input.k);
+                let v32 = Matrix32::from_f64(&input.v);
+                StepOutput::F32(st.forward(&phi_q, &phi_k, &v32, chunk))
+            }
+        }
+    }
+}
+
+/// One streaming user: per-head banks + causal states, a monotone
+/// position counter, and byte accounting for the pool's budget.
+pub struct Session {
+    id: u64,
+    seed: u64,
+    position: u64,
+    precision: Precision,
+    dv: usize,
+    heads: Vec<HeadSlot>,
+}
+
+impl Session {
+    /// Fresh session: banks drawn via [`draw_head_banks`] from the
+    /// session seed (bank h is a pure function of (seed, h)), all states
+    /// zero.
+    pub(crate) fn new(id: u64, seed: u64, cfg: &ServeConfig) -> Self {
+        let banks =
+            draw_head_banks(&cfg.est, cfg.n_heads, &mut Pcg64::seed(seed));
+        let n = cfg.est.m;
+        let heads = banks
+            .into_iter()
+            .map(|bank| HeadSlot {
+                bank,
+                state: match cfg.precision {
+                    Precision::F64 => {
+                        HeadState::F64(CausalState::new(n, cfg.dv))
+                    }
+                    Precision::F32 => {
+                        HeadState::F32(CausalState32::new(n, cfg.dv))
+                    }
+                },
+            })
+            .collect();
+        Self { id, seed, position: 0, precision: cfg.precision, dv: cfg.dv, heads }
+    }
+
+    /// Reassemble a session from restored parts (the snapshot path).
+    pub(crate) fn from_parts(
+        id: u64,
+        seed: u64,
+        position: u64,
+        precision: Precision,
+        dv: usize,
+        heads: Vec<HeadSlot>,
+    ) -> Self {
+        Self { id, seed, position, precision, dv, heads }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Stream position: total rows processed so far.
+    pub fn position(&self) -> u64 {
+        self.position
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    pub fn heads(&self) -> &[HeadSlot] {
+        &self.heads
+    }
+
+    pub(crate) fn advance(&mut self, rows: u64) {
+        self.position += rows;
+    }
+
+    /// Start one request of `rows` positions: bumps the position counter
+    /// and hands out the head slots for the scheduler's fan-out. Returns
+    /// the stream position of the request's first row.
+    pub(crate) fn begin_step(&mut self, rows: u64) -> (u64, &mut [HeadSlot]) {
+        let start = self.position;
+        self.position += rows;
+        (start, &mut self.heads)
+    }
+
+    /// Resident bytes of this session: per-head bank (omegas, weights,
+    /// √weights, optional Σ) plus running state (f64 accumulators in
+    /// both precisions).
+    pub fn state_bytes(&self) -> usize {
+        const F64_BYTES: usize = std::mem::size_of::<f64>();
+        self.heads
+            .iter()
+            .map(|h| {
+                let (n, d) = (h.bank.n_features(), h.bank.dim());
+                let bank = n * d + 2 * n
+                    + h.bank.norm_sigma().map_or(0, |s| s.rows() * s.cols());
+                let state = n * self.dv + n;
+                (bank + state) * F64_BYTES
+            })
+            .sum()
+    }
+
+    /// Advance every head by one request segment, serially, heads in
+    /// order; returns one output per head and bumps the position
+    /// counter. The scheduler's threaded fan-out computes exactly this,
+    /// head by head, on workers — outputs are bitwise identical.
+    pub fn step(&mut self, inputs: &[Head], chunk: usize) -> Vec<StepOutput> {
+        assert_eq!(inputs.len(), self.heads.len(), "one input per head");
+        let rows = inputs.first().map_or(0, |h| h.v.rows());
+        assert!(
+            inputs.iter().all(|h| h.v.rows() == rows),
+            "all heads of a request must cover the same positions"
+        );
+        let out: Vec<StepOutput> = self
+            .heads
+            .iter_mut()
+            .zip(inputs)
+            .map(|(slot, input)| slot.step(input, chunk))
+            .collect();
+        self.advance(rows as u64);
+        out
+    }
+}
+
+/// Eviction/restore counters, exposed for observability and tests.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PoolStats {
+    /// Sessions written out to snapshots to stay under the budget.
+    pub evictions: u64,
+    /// Sessions faulted back in from snapshots.
+    pub restores: u64,
+}
+
+/// Owns every session, resident or evicted. Resident sessions live in
+/// memory; evicted ones live as DKFT snapshots under
+/// [`ServeConfig::snapshot_dir`] and are faulted back in on demand.
+pub struct SessionPool {
+    cfg: ServeConfig,
+    resident: BTreeMap<u64, Session>,
+    evicted: BTreeMap<u64, PathBuf>,
+    /// id → last-used stamp; victim choice is min (stamp, id), so LRU
+    /// order is deterministic.
+    last_used: BTreeMap<u64, u64>,
+    clock: u64,
+    next_id: u64,
+    /// Process-unique pool tag, part of every eviction-snapshot filename:
+    /// session ids restart at 0 per pool, so two pools sharing a
+    /// `snapshot_dir` must not overwrite each other's eviction files.
+    /// (Eviction snapshots are a pool-private cache; durable archival
+    /// goes through explicit [`super::save_session`] paths.)
+    pool_tag: u64,
+    stats: PoolStats,
+}
+
+impl SessionPool {
+    pub fn new(cfg: ServeConfig) -> Self {
+        static POOL_COUNTER: AtomicU64 = AtomicU64::new(0);
+        Self {
+            cfg,
+            resident: BTreeMap::new(),
+            evicted: BTreeMap::new(),
+            last_used: BTreeMap::new(),
+            clock: 0,
+            next_id: 0,
+            pool_tag: POOL_COUNTER.fetch_add(1, Ordering::Relaxed),
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Allocate an id and create a fresh session for `seed`, evicting
+    /// LRU sessions if the budget demands it.
+    pub fn create_session(&mut self, seed: u64) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let session = Session::new(id, seed, &self.cfg);
+        self.resident.insert(id, session);
+        self.touch(id);
+        if let Err(e) = self.ensure_budget(&[id]) {
+            // Roll the (still-fresh, stateless) session back so a failed
+            // eviction write cannot leak an unreachable resident session.
+            self.resident.remove(&id);
+            self.last_used.remove(&id);
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    /// Whether `id` names a live session (resident or evicted).
+    pub fn contains(&self, id: u64) -> bool {
+        self.resident.contains_key(&id) || self.evicted.contains_key(&id)
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn evicted_count(&self) -> usize {
+        self.evicted.len()
+    }
+
+    /// Total resident session bytes (the quantity the budget bounds).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.values().map(Session::state_bytes).sum()
+    }
+
+    /// Mutable access to a session, faulting it in from its snapshot if
+    /// it was evicted and re-balancing the budget around it.
+    pub fn session_mut(&mut self, id: u64) -> Result<&mut Session> {
+        self.ensure_resident(id, &[id])?;
+        Ok(self.resident.get_mut(&id).expect("just made resident"))
+    }
+
+    /// Make `id` resident (restoring from its snapshot if needed) and
+    /// stamp it used; sessions in `pinned` are exempt from the eviction
+    /// this may trigger.
+    pub(crate) fn ensure_resident(
+        &mut self,
+        id: u64,
+        pinned: &[u64],
+    ) -> Result<()> {
+        if self.resident.contains_key(&id) {
+            self.touch(id);
+            return Ok(());
+        }
+        // Leave the evicted entry in place until the load succeeds: a
+        // transient IO failure must not orphan the session.
+        let Some(path) = self.evicted.get(&id).cloned() else {
+            bail!("no session with id {id}");
+        };
+        let session = snapshot::load_session(&path)
+            .with_context(|| format!("faulting in session {id}"))?;
+        ensure!(
+            session.id() == id,
+            "snapshot {} holds session {}, expected {id}",
+            path.display(),
+            session.id()
+        );
+        ensure!(
+            session.n_heads() == self.cfg.n_heads
+                && session.dv() == self.cfg.dv
+                && session.precision() == self.cfg.precision,
+            "snapshot geometry (heads={}, dv={}, {:?}) does not match the \
+             pool config (heads={}, dv={}, {:?})",
+            session.n_heads(),
+            session.dv(),
+            session.precision(),
+            self.cfg.n_heads,
+            self.cfg.dv,
+            self.cfg.precision
+        );
+        // The snapshot is consumed: the resident session is now the only
+        // truth, so a stale file can never shadow newer state.
+        self.evicted.remove(&id);
+        let _ = std::fs::remove_file(&path);
+        self.resident.insert(id, session);
+        self.stats.restores += 1;
+        self.touch(id);
+        self.ensure_budget(pinned)?;
+        Ok(())
+    }
+
+    /// Evict one session now (snapshot + drop from memory). Exposed for
+    /// orderly shutdown; the budget path calls it internally.
+    pub fn evict(&mut self, id: u64) -> Result<()> {
+        // Snapshot first, drop from memory only once the bytes are on
+        // disk — a failed write must not lose the stream.
+        let Some(session) = self.resident.get(&id) else {
+            bail!("session {id} is not resident");
+        };
+        let path = self.snapshot_path(id);
+        snapshot::save_session(session, &path)
+            .with_context(|| format!("evicting session {id}"))?;
+        self.resident.remove(&id);
+        self.evicted.insert(id, path);
+        self.last_used.remove(&id);
+        self.stats.evictions += 1;
+        Ok(())
+    }
+
+    /// Evict LRU non-pinned sessions until the budget holds (or nothing
+    /// evictable remains).
+    pub(crate) fn ensure_budget(&mut self, pinned: &[u64]) -> Result<()> {
+        if self.cfg.memory_budget == 0 {
+            return Ok(());
+        }
+        while self.resident_bytes() > self.cfg.memory_budget {
+            let victim = self
+                .last_used
+                .iter()
+                .filter(|&(id, _)| !pinned.contains(id))
+                .min_by_key(|&(id, stamp)| (*stamp, *id))
+                .map(|(id, _)| *id);
+            let Some(victim) = victim else {
+                break; // only pinned sessions left — allow overshoot
+            };
+            self.evict(victim)?;
+        }
+        Ok(())
+    }
+
+    /// Disjoint mutable borrows of several resident sessions, in `ids`
+    /// order. Callers guarantee the ids are distinct and resident.
+    pub(crate) fn sessions_mut(&mut self, ids: &[u64]) -> Vec<&mut Session> {
+        let mut found: BTreeMap<u64, &mut Session> = self
+            .resident
+            .iter_mut()
+            .filter(|&(id, _)| ids.contains(id))
+            .map(|(id, s)| (*id, s))
+            .collect();
+        ids.iter()
+            .map(|id| found.remove(id).expect("scheduled session resident"))
+            .collect()
+    }
+
+    fn snapshot_path(&self, id: u64) -> PathBuf {
+        self.cfg.snapshot_dir.join(format!(
+            "pool{}-{}-session-{id}.dkft",
+            std::process::id(),
+            self.pool_tag
+        ))
+    }
+
+    fn touch(&mut self, id: u64) {
+        self.clock += 1;
+        self.last_used.insert(id, self.clock);
+    }
+}

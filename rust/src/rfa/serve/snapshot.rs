@@ -1,0 +1,174 @@
+//! Session snapshots over the DKFT tensor store.
+//!
+//! A snapshot is a self-contained [`Checkpoint`]: metadata (id, seed,
+//! position, precision, geometry) as `u32` tensors, bank matrices and
+//! running state as `f64` tensors — see the naming scheme in the
+//! [`super`] module docs. Everything numeric is stored at full f64
+//! width (the f32 engine's accumulators are f64 by policy), so
+//! save → load → continue is bitwise identical to never having
+//! snapshotted, the resumability property `rust/tests/rfa_serve.rs`
+//! pins.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{Checkpoint, Tensor};
+use crate::linalg::Matrix;
+use crate::rfa::engine::{CausalState, CausalState32};
+use crate::rfa::features::FeatureBank;
+
+use super::session::{HeadSlot, HeadState, Precision, Session};
+
+/// Schema version stored under `session/version`.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+fn u64_tensor(v: u64) -> Tensor {
+    Tensor::from_u32(vec![2], &[v as u32, (v >> 32) as u32])
+}
+
+fn read_u64(ck: &Checkpoint, name: &str) -> Result<u64> {
+    let parts = ck.require_u32(name, &[2])?;
+    Ok(parts[0] as u64 | (parts[1] as u64) << 32)
+}
+
+fn read_scalar_u32(ck: &Checkpoint, name: &str) -> Result<u32> {
+    Ok(ck.require_u32(name, &[1])?[0])
+}
+
+/// Serialize a session into a checkpoint.
+pub fn session_checkpoint(session: &Session) -> Checkpoint {
+    let mut ck = Checkpoint::new();
+    ck.insert(
+        "session/version",
+        Tensor::from_u32(vec![1], &[SNAPSHOT_VERSION]),
+    );
+    ck.insert("session/id", u64_tensor(session.id()));
+    ck.insert("session/seed", u64_tensor(session.seed()));
+    ck.insert("session/position", u64_tensor(session.position()));
+    let precision = match session.precision() {
+        Precision::F64 => 0u32,
+        Precision::F32 => 1u32,
+    };
+    ck.insert("session/precision", Tensor::from_u32(vec![1], &[precision]));
+    ck.insert(
+        "session/n_heads",
+        Tensor::from_u32(vec![1], &[session.n_heads() as u32]),
+    );
+    ck.insert(
+        "session/dv",
+        Tensor::from_u32(vec![1], &[session.dv() as u32]),
+    );
+    for (h, slot) in session.heads().iter().enumerate() {
+        let bank = slot.bank();
+        let (n, d) = (bank.n_features(), bank.dim());
+        ck.insert(
+            format!("head{h}/bank/omegas"),
+            Tensor::from_f64(vec![n, d], bank.omegas().data()),
+        );
+        ck.insert(
+            format!("head{h}/bank/weights"),
+            Tensor::from_f64(vec![n], bank.weights()),
+        );
+        if let Some(sigma) = bank.norm_sigma() {
+            ck.insert(
+                format!("head{h}/bank/sigma"),
+                Tensor::from_f64(vec![d, d], sigma.data()),
+            );
+        }
+        let (s, z) = match slot.state() {
+            HeadState::F64(st) => (st.state().data(), st.z()),
+            HeadState::F32(st) => (st.state(), st.z()),
+        };
+        ck.insert(
+            format!("head{h}/state"),
+            Tensor::from_f64(vec![n, session.dv()], s),
+        );
+        ck.insert(format!("head{h}/z"), Tensor::from_f64(vec![n], z));
+    }
+    ck
+}
+
+/// Rebuild a session from a checkpoint, validating every tensor's dtype
+/// and shape (descriptive errors, never panics, on malformed input).
+pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
+    let version = read_scalar_u32(ck, "session/version")?;
+    if version != SNAPSHOT_VERSION {
+        bail!("unsupported session snapshot version {version}");
+    }
+    let id = read_u64(ck, "session/id")?;
+    let seed = read_u64(ck, "session/seed")?;
+    let position = read_u64(ck, "session/position")?;
+    let precision = match read_scalar_u32(ck, "session/precision")? {
+        0 => Precision::F64,
+        1 => Precision::F32,
+        p => bail!("unknown precision tag {p} in session snapshot"),
+    };
+    let n_heads = read_scalar_u32(ck, "session/n_heads")? as usize;
+    let dv = read_scalar_u32(ck, "session/dv")? as usize;
+    // Sanity-bound the header before allocating anything sized by it: a
+    // malformed (but CRC-valid) file must surface as an error, not an
+    // abort inside a huge Vec::with_capacity.
+    if n_heads > 4096 {
+        bail!("implausible head count {n_heads} in session snapshot");
+    }
+
+    let mut heads = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let omegas_t = ck.require(&format!("head{h}/bank/omegas"))?;
+        if omegas_t.shape.len() != 2 {
+            bail!(
+                "head{h}/bank/omegas must be rank 2, got shape {:?}",
+                omegas_t.shape
+            );
+        }
+        let (n, d) = (omegas_t.shape[0], omegas_t.shape[1]);
+        let omegas = Matrix::from_vec(
+            n,
+            d,
+            ck.require_f64(&format!("head{h}/bank/omegas"), &[n, d])?,
+        );
+        let weights = ck.require_f64(&format!("head{h}/bank/weights"), &[n])?;
+        let sigma_name = format!("head{h}/bank/sigma");
+        let norm_sigma = if ck.get(&sigma_name).is_some() {
+            Some(Matrix::from_vec(
+                d,
+                d,
+                ck.require_f64(&sigma_name, &[d, d])?,
+            ))
+        } else {
+            None
+        };
+        let bank = FeatureBank::from_parts(omegas, weights, norm_sigma);
+
+        let s = ck.require_f64(&format!("head{h}/state"), &[n, dv])?;
+        let z = ck.require_f64(&format!("head{h}/z"), &[n])?;
+        let state = match precision {
+            Precision::F64 => HeadState::F64(CausalState::from_parts(
+                Matrix::from_vec(n, dv, s),
+                z,
+            )),
+            Precision::F32 => {
+                HeadState::F32(CausalState32::from_parts(n, dv, s, z))
+            }
+        };
+        heads.push(HeadSlot { bank, state });
+    }
+    Ok(Session::from_parts(id, seed, position, precision, dv, heads))
+}
+
+/// Snapshot a session to `path` (DKFT: magic, version, crc — see
+/// [`crate::checkpoint`]).
+pub fn save_session(session: &Session, path: &Path) -> Result<()> {
+    session_checkpoint(session)
+        .save(path)
+        .with_context(|| format!("saving session {} snapshot", session.id()))
+}
+
+/// Load a session snapshot from `path`.
+pub fn load_session(path: &Path) -> Result<Session> {
+    let ck = Checkpoint::load(path)
+        .with_context(|| format!("loading session snapshot {}", path.display()))?;
+    session_from_checkpoint(&ck)
+        .with_context(|| format!("restoring session from {}", path.display()))
+}

@@ -111,6 +111,10 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
                 .map_err(|e| anyhow::anyhow!("{e:?}"))?
         }
         DType::U32 => bail!("u32 tensors only appear as scalars; use Literal::scalar"),
+        DType::F64 => bail!(
+            "f64 tensors are host-side only (rfa::serve snapshots); the \
+             PJRT path is f32"
+        ),
     };
     Ok(lit)
 }

@@ -1,0 +1,554 @@
+//! Property tests for the `rfa::serve` subsystem — the three contracts
+//! the serving layer is built on:
+//!
+//! (a) the batch scheduler is a pure transport: per session, its outputs
+//!     are bitwise equal to a serial `multi_head_causal_attention` over
+//!     the concatenated stream, for every worker count and any arrival
+//!     interleaving across sessions;
+//! (b) resumability: snapshot → restore → continue produces outputs
+//!     bitwise identical (f64) / exact-bits (f32 state) to an
+//!     uninterrupted stream;
+//! (c) LRU eviction under a tight memory budget changes wall-clock
+//!     behavior only — never any session's outputs.
+
+use std::path::PathBuf;
+
+use darkformer::linalg::Matrix;
+use darkformer::rfa::engine::{
+    draw_head_banks, multi_head_causal_attention,
+    multi_head_causal_attention32, EngineConfig, Head,
+};
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::gaussian::{
+    anisotropic_covariance, MultivariateGaussian,
+};
+use darkformer::rfa::serve::{
+    load_session, save_session, BatchScheduler, Precision, ServeConfig,
+    SessionPool, StepRequest,
+};
+use darkformer::rfa::{FeatureBank, PrfEstimator};
+use darkformer::rng::{GaussianExt, Pcg64};
+
+const D: usize = 4;
+const M: usize = 16;
+const N_HEADS: usize = 2;
+const DV: usize = 3;
+const CHUNK: usize = 8;
+const N_REQUESTS: usize = 4;
+const L: usize = CHUNK * N_REQUESTS;
+
+fn iso_est() -> PrfEstimator {
+    PrfEstimator::new(D, M, Sampling::Isotropic)
+}
+
+fn aware_est() -> PrfEstimator {
+    let sigma = anisotropic_covariance(D, 0.7, 0.5, &mut Pcg64::seed(42));
+    PrfEstimator::new(
+        D,
+        M,
+        Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+    )
+}
+
+/// Fresh per-test snapshot directory (tests run concurrently in one
+/// process; stale files from an earlier run must not leak in).
+fn snapshot_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rfa_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg(
+    est: PrfEstimator,
+    precision: Precision,
+    threads: usize,
+    memory_budget: usize,
+    dir: PathBuf,
+) -> ServeConfig {
+    ServeConfig {
+        est,
+        n_heads: N_HEADS,
+        dv: DV,
+        precision,
+        chunk: CHUNK,
+        threads,
+        memory_budget,
+        snapshot_dir: dir,
+    }
+}
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+/// The full L-position stream for one simulated user, one entry per head.
+fn stream_inputs(input_seed: u64) -> Vec<Head> {
+    let mut rng = Pcg64::seed(input_seed);
+    (0..N_HEADS)
+        .map(|_| Head {
+            q: rows(L, D, 0.3, &mut rng),
+            k: rows(L, D, 0.3, &mut rng),
+            v: Matrix::from_rows(&rows(L, DV, 1.0, &mut rng)),
+        })
+        .collect()
+}
+
+/// Rows `[b, e)` of every head — one streaming request segment.
+fn slice_heads(heads: &[Head], b: usize, e: usize) -> Vec<Head> {
+    heads
+        .iter()
+        .map(|h| Head {
+            q: h.q[b..e].to_vec(),
+            k: h.k[b..e].to_vec(),
+            v: h.v.row_block(b, e),
+        })
+        .collect()
+}
+
+/// Serial single-tenant reference: same bank seeding as the pool, one
+/// monolithic multi-head forward over the whole stream.
+fn serial_reference(est: &PrfEstimator, bank_seed: u64, heads: &[Head]) -> Vec<Matrix> {
+    let banks = draw_head_banks(est, N_HEADS, &mut Pcg64::seed(bank_seed));
+    let cfg = EngineConfig { chunk: CHUNK, threads: 1 };
+    multi_head_causal_attention(&banks, heads, &cfg)
+}
+
+/// Drive `n_sessions` interleaved streams through a scheduler and return
+/// each session's per-head output rows reassembled in stream order.
+fn run_scheduled(
+    sched: &mut BatchScheduler,
+    ids: &[u64],
+    streams: &[Vec<Head>],
+    interleave_rounds: bool,
+) -> Vec<Vec<Matrix>> {
+    if interleave_rounds {
+        // Round-robin arrival: r0 of every session, then r1, ...
+        for r in 0..N_REQUESTS {
+            for (id, stream) in ids.iter().zip(streams) {
+                let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+                sched
+                    .submit(StepRequest { session_id: *id, heads })
+                    .unwrap();
+            }
+        }
+    } else {
+        // Blocked arrival: all of session 0's requests, then session 1's.
+        for (id, stream) in ids.iter().zip(streams) {
+            for r in 0..N_REQUESTS {
+                let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+                sched
+                    .submit(StepRequest { session_id: *id, heads })
+                    .unwrap();
+            }
+        }
+    }
+    let mut responses = sched.run_until_idle().unwrap();
+    responses.sort_by_key(|r| r.seq);
+    let mut per_session: Vec<Vec<Vec<f64>>> =
+        vec![vec![Vec::new(); N_HEADS]; ids.len()];
+    let mut next_pos: Vec<u64> = vec![0; ids.len()];
+    for resp in &responses {
+        let s = ids.iter().position(|id| *id == resp.session_id).unwrap();
+        // Same-session requests must have applied in arrival order.
+        assert_eq!(
+            resp.start_position, next_pos[s],
+            "session {} saw out-of-order application",
+            resp.session_id
+        );
+        next_pos[s] += resp.outputs[0].rows() as u64;
+        for (h, out) in resp.outputs.iter().enumerate() {
+            per_session[s][h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    per_session
+        .into_iter()
+        .map(|heads| {
+            heads
+                .into_iter()
+                .map(|data| Matrix::from_vec(L, DV, data))
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn scheduler_matches_serial_reference_across_threads() {
+    let bank_seeds = [11u64, 22, 33];
+    let streams: Vec<Vec<Head>> =
+        (0..3).map(|s| stream_inputs(5000 + s)).collect();
+    let expected: Vec<Vec<Matrix>> = bank_seeds
+        .iter()
+        .zip(&streams)
+        .map(|(seed, stream)| serial_reference(&iso_est(), *seed, stream))
+        .collect();
+
+    for threads in [1usize, 4] {
+        for interleave in [true, false] {
+            let dir = snapshot_dir("sched_serial");
+            let mut pool = SessionPool::new(cfg(
+                iso_est(),
+                Precision::F64,
+                threads,
+                0,
+                dir,
+            ));
+            let ids: Vec<u64> = bank_seeds
+                .iter()
+                .map(|s| pool.create_session(*s).unwrap())
+                .collect();
+            let mut sched = BatchScheduler::new(pool);
+            let got = run_scheduled(&mut sched, &ids, &streams, interleave);
+            for (s, (got_heads, want_heads)) in
+                got.iter().zip(&expected).enumerate()
+            {
+                for (h, (g, w)) in
+                    got_heads.iter().zip(want_heads).enumerate()
+                {
+                    assert_eq!(
+                        g, w,
+                        "threads={threads} interleave={interleave}: \
+                         session {s} head {h} diverged from the serial \
+                         reference"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduler_f32_is_thread_count_independent_and_matches_serial() {
+    let bank_seed = 77u64;
+    let stream = stream_inputs(6001);
+    // Serial f32 reference over the whole stream.
+    let banks =
+        draw_head_banks(&iso_est(), N_HEADS, &mut Pcg64::seed(bank_seed));
+    let ecfg = EngineConfig { chunk: CHUNK, threads: 1 };
+    let reference = multi_head_causal_attention32(&banks, &stream, &ecfg);
+
+    let mut per_thread_outputs = Vec::new();
+    for threads in [1usize, 4] {
+        let dir = snapshot_dir("sched_f32");
+        let mut pool = SessionPool::new(cfg(
+            iso_est(),
+            Precision::F32,
+            threads,
+            0,
+            dir,
+        ));
+        let id = pool.create_session(bank_seed).unwrap();
+        let mut sched = BatchScheduler::new(pool);
+        for r in 0..N_REQUESTS {
+            let heads = slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK);
+            sched.submit(StepRequest { session_id: id, heads }).unwrap();
+        }
+        let mut responses = sched.run_until_idle().unwrap();
+        responses.sort_by_key(|r| r.seq);
+        // Reassemble per-head f32 rows.
+        let mut heads_data: Vec<Vec<f32>> = vec![Vec::new(); N_HEADS];
+        for resp in &responses {
+            for (h, out) in resp.outputs.iter().enumerate() {
+                heads_data[h]
+                    .extend_from_slice(out.as_f32().unwrap().data());
+            }
+        }
+        per_thread_outputs.push(heads_data);
+    }
+    assert_eq!(
+        per_thread_outputs[0], per_thread_outputs[1],
+        "f32 scheduler output depends on worker count"
+    );
+    for (h, reference_head) in reference.iter().enumerate() {
+        assert_eq!(
+            per_thread_outputs[0][h],
+            reference_head.data(),
+            "f32 head {h} diverged from the serial engine"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn snapshot_restore_continue_is_bitwise_f64() {
+    // Data-aware estimator so the snapshot's Σ tensor path is exercised.
+    let stream = stream_inputs(7001);
+    let half = L / 2;
+
+    // Uninterrupted stream.
+    let dir = snapshot_dir("resume_f64_a");
+    let mut pool =
+        SessionPool::new(cfg(aware_est(), Precision::F64, 1, 0, dir));
+    let id = pool.create_session(99).unwrap();
+    let first = pool
+        .session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, 0, half), CHUNK);
+    let uninterrupted = pool
+        .session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, half, L), CHUNK);
+
+    // Same stream, evicted to a snapshot (and faulted back) in between.
+    let dir = snapshot_dir("resume_f64_b");
+    let mut pool =
+        SessionPool::new(cfg(aware_est(), Precision::F64, 1, 0, dir));
+    let id = pool.create_session(99).unwrap();
+    let first_b = pool
+        .session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, 0, half), CHUNK);
+    pool.evict(id).unwrap();
+    assert_eq!(pool.resident_count(), 0);
+    let resumed = pool
+        .session_mut(id) // faults in from the snapshot
+        .unwrap()
+        .step(&slice_heads(&stream, half, L), CHUNK);
+    assert_eq!(pool.stats().restores, 1);
+    assert_eq!(
+        pool.session_mut(id).unwrap().position(),
+        L as u64,
+        "restored session lost its position counter"
+    );
+
+    for h in 0..N_HEADS {
+        assert_eq!(
+            first[h].as_f64().unwrap(),
+            first_b[h].as_f64().unwrap(),
+            "head {h}: pre-snapshot outputs differ (rng leak?)"
+        );
+        assert_eq!(
+            uninterrupted[h].as_f64().unwrap(),
+            resumed[h].as_f64().unwrap(),
+            "head {h}: snapshot→restore→continue diverged from the \
+             uninterrupted stream"
+        );
+    }
+}
+
+#[test]
+fn snapshot_restore_continue_is_exact_bits_f32() {
+    let stream = stream_inputs(7002);
+    let half = L / 2;
+
+    let dir = snapshot_dir("resume_f32_a");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F32, 1, 0, dir));
+    let id = pool.create_session(55).unwrap();
+    pool.session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, 0, half), CHUNK);
+    let uninterrupted = pool
+        .session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, half, L), CHUNK);
+
+    let dir = snapshot_dir("resume_f32_b");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F32, 1, 0, dir));
+    let id = pool.create_session(55).unwrap();
+    pool.session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, 0, half), CHUNK);
+    pool.evict(id).unwrap();
+    let resumed = pool
+        .session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, half, L), CHUNK);
+
+    for h in 0..N_HEADS {
+        assert_eq!(
+            uninterrupted[h].as_f32().unwrap(),
+            resumed[h].as_f32().unwrap(),
+            "head {h}: f32 restore was not exact-bits"
+        );
+    }
+}
+
+#[test]
+fn snapshot_file_round_trips_metadata_and_rejects_corruption() {
+    let dir = snapshot_dir("file_meta");
+    let mut pool =
+        SessionPool::new(cfg(aware_est(), Precision::F64, 1, 0, dir.clone()));
+    let id = pool.create_session(1234).unwrap();
+    let stream = stream_inputs(7003);
+    pool.session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, 0, CHUNK), CHUNK);
+
+    let path = dir.join("manual.dkft");
+    save_session(pool.session_mut(id).unwrap(), &path).unwrap();
+    let restored = load_session(&path).unwrap();
+    assert_eq!(restored.id(), id);
+    assert_eq!(restored.seed(), 1234);
+    assert_eq!(restored.position(), CHUNK as u64);
+    assert_eq!(restored.precision(), Precision::F64);
+    assert_eq!(restored.n_heads(), N_HEADS);
+    // Restored banks carry the Σ geometry bit-for-bit.
+    let original = pool.session_mut(id).unwrap();
+    for (a, b) in original.heads().iter().zip(restored.heads()) {
+        assert_eq!(a.bank().omegas(), b.bank().omegas());
+        assert_eq!(a.bank().weights(), b.bank().weights());
+        assert_eq!(a.bank().norm_sigma(), b.bank().norm_sigma());
+    }
+
+    // Flip one byte: the load must fail with a described error.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = load_session(&path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("CRC"),
+        "unexpected error: {err:#}"
+    );
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn lru_eviction_never_changes_outputs() {
+    let bank_seeds = [301u64, 302, 303];
+    let streams: Vec<Vec<Head>> =
+        (0..3).map(|s| stream_inputs(8000 + s)).collect();
+
+    // Size the budget to exactly one session so every cross-session
+    // switch forces an eviction + restore.
+    let one_session_bytes = {
+        let dir = snapshot_dir("budget_probe");
+        let mut pool =
+            SessionPool::new(cfg(iso_est(), Precision::F64, 1, 0, dir));
+        let id = pool.create_session(1).unwrap();
+        pool.session_mut(id).unwrap().state_bytes()
+    };
+
+    let run = |budget: usize, tag: &str| -> Vec<Vec<Matrix>> {
+        let dir = snapshot_dir(tag);
+        let mut pool = SessionPool::new(cfg(
+            iso_est(),
+            Precision::F64,
+            2,
+            budget,
+            dir,
+        ));
+        let ids: Vec<u64> = bank_seeds
+            .iter()
+            .map(|s| pool.create_session(*s).unwrap())
+            .collect();
+        let mut sched = BatchScheduler::new(pool);
+        // Blocked per-tick schedule: drain each session's round before
+        // the next session arrives, so the pool keeps switching the
+        // resident session under the tight budget.
+        let mut outputs: Vec<Vec<Vec<f64>>> =
+            vec![vec![Vec::new(); N_HEADS]; ids.len()];
+        for r in 0..N_REQUESTS {
+            for (s, (id, stream)) in ids.iter().zip(&streams).enumerate() {
+                let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+                sched
+                    .submit(StepRequest { session_id: *id, heads })
+                    .unwrap();
+                for resp in sched.run_until_idle().unwrap() {
+                    for (h, out) in resp.outputs.iter().enumerate() {
+                        outputs[s][h].extend_from_slice(out.to_f64().data());
+                    }
+                }
+            }
+        }
+        let evictions = sched.pool().stats().evictions;
+        let restores = sched.pool().stats().restores;
+        if budget > 0 {
+            assert!(
+                evictions >= 3 && restores >= 3,
+                "tight budget exercised no churn \
+                 (evictions={evictions}, restores={restores})"
+            );
+        } else {
+            assert_eq!(evictions, 0, "unlimited budget must not evict");
+        }
+        outputs
+            .into_iter()
+            .map(|heads| {
+                heads
+                    .into_iter()
+                    .map(|data| Matrix::from_vec(L, DV, data))
+                    .collect()
+            })
+            .collect()
+    };
+
+    let generous = run(0, "lru_generous");
+    let tight = run(one_session_bytes, "lru_tight");
+    for s in 0..3 {
+        for h in 0..N_HEADS {
+            assert_eq!(
+                generous[s][h], tight[s][h],
+                "session {s} head {h}: eviction churn changed outputs"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- errors
+
+#[test]
+fn submit_validates_session_and_shapes() {
+    let dir = snapshot_dir("validate");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F64, 1, 0, dir));
+    let id = pool.create_session(9).unwrap();
+    let mut sched = BatchScheduler::new(pool);
+    let stream = stream_inputs(9001);
+
+    // Unknown session id.
+    let err = sched
+        .submit(StepRequest {
+            session_id: id + 1000,
+            heads: slice_heads(&stream, 0, CHUNK),
+        })
+        .unwrap_err();
+    assert!(format!("{err}").contains("no session"), "got: {err}");
+
+    // Wrong head count.
+    let err = sched
+        .submit(StepRequest {
+            session_id: id,
+            heads: slice_heads(&stream, 0, CHUNK)[..1].to_vec(),
+        })
+        .unwrap_err();
+    assert!(format!("{err}").contains("heads"), "got: {err}");
+
+    // Mismatched q/k/v row counts.
+    let mut heads = slice_heads(&stream, 0, CHUNK);
+    heads[0].q.pop();
+    let err = sched
+        .submit(StepRequest { session_id: id, heads })
+        .unwrap_err();
+    assert!(format!("{err}").contains("row counts"), "got: {err}");
+}
+
+// ----------------------------------------------- restored-bank physics
+
+#[test]
+fn restored_bank_reproduces_feature_maps() {
+    // FeatureBank::from_parts must give back the same feature physics —
+    // the foundation the snapshot path stands on.
+    let est = aware_est();
+    let bank = FeatureBank::draw(&est, &mut Pcg64::seed(31337));
+    let rebuilt = FeatureBank::from_parts(
+        bank.omegas().clone(),
+        bank.weights().to_vec(),
+        bank.norm_sigma().cloned(),
+    );
+    let xs = rows(9, D, 0.4, &mut Pcg64::seed(5));
+    assert_eq!(bank.feature_matrix(&xs), rebuilt.feature_matrix(&xs));
+    assert_eq!(
+        bank.feature_matrix32(&xs).data(),
+        rebuilt.feature_matrix32(&xs).data()
+    );
+}
