@@ -12,9 +12,11 @@
 //! same env var the bench targets write through) falling back to `.`.
 //! For every
 //! `BENCH_*.json` in the baseline dir the tool prints the change in each
-//! timing case's `mean_ms` (positive = slower than baseline) and in each
-//! scalar metric. With `--fail-over PCT` the exit code is 1 if any
-//! timing case regressed by more than PCT percent — usable as a CI gate.
+//! timing case's `mean_ms` (positive = slower than baseline), the change
+//! in each scalar metric, and a per-suite `summary: n better / n worse /
+//! n missing` line so CI logs are scannable at a glance. With
+//! `--fail-over PCT` the exit code is 1 if any timing case regressed by
+//! more than PCT percent — usable as a CI gate.
 //!
 //! Regenerate the baseline on a machine with a Rust toolchain via
 //! `make bench-baseline` (runs the offline benches with
@@ -169,6 +171,7 @@ fn main() -> ExitCode {
                 continue;
             }
         };
+        let (mut better, mut worse, mut missing) = (0usize, 0usize, 0usize);
         for (case, &base_ms) in &base.cases {
             match cur.cases.get(case) {
                 Some(&cur_ms) => {
@@ -177,6 +180,11 @@ fn main() -> ExitCode {
                         "  {case:<44} {base_ms:>10.4} -> {cur_ms:>10.4} ms  \
                          {pct:>+7.1}%"
                     );
+                    if cur_ms < base_ms {
+                        better += 1;
+                    } else if cur_ms > base_ms {
+                        worse += 1;
+                    }
                     let is_worse = match &worst_regression {
                         Some((_, worst)) => pct > *worst,
                         None => true,
@@ -185,7 +193,10 @@ fn main() -> ExitCode {
                         worst_regression = Some((case.clone(), pct));
                     }
                 }
-                None => println!("  {case:<44} missing from current run"),
+                None => {
+                    missing += 1;
+                    println!("  {case:<44} missing from current run");
+                }
             }
         }
         for case in cur.cases.keys() {
@@ -211,6 +222,11 @@ fn main() -> ExitCode {
                 );
             }
         }
+        // One scannable line per suite for CI logs: timing cases only
+        // (equal-time cases count as neither better nor worse).
+        println!(
+            "  summary: {better} better / {worse} worse / {missing} missing"
+        );
         println!();
     }
 

@@ -1,19 +1,46 @@
-//! Row-major dense matrix with the decompositions the RFA analysis needs.
+//! Row-major dense matrix, generic over the storage [`Scalar`].
+//!
+//! One kernel structure serves every precision: the tiled
+//! [`Mat::matmul`], the transpose-free [`Mat::matmul_transb`] /
+//! [`Mat::matmul_transa`] contractions, and the [`Scalar::dot`]-based
+//! row kernels are written once against the trait and compile to the
+//! same autovectorized loops the hand-split f64/f32 types used to carry.
+//! Length-L reductions ([`Mat::col_sums`], [`Mat::matvec_accum`]) land
+//! in [`Scalar::Accum`] per the accumulation-policy contract.
+//!
+//! Decompositions (Cholesky, eigen, inverses) stay f64-only in
+//! `impl Mat<f64>` — they are setup-time operations where precision
+//! matters and throughput does not; [`Matrix32`] deliberately carries
+//! only the multiply/contract surface the attention hot path needs.
 
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
-/// Dense `rows x cols` matrix of `f64`, row-major.
+use super::scalar::Scalar;
+
+/// Dense `rows x cols` matrix of `T`, row-major.
+///
+/// [`Matrix`] (= `Mat<f64>`) is the default precision and carries every
+/// decomposition; [`Matrix32`] (= `Mat<f32>`) is the attention engine's
+/// SIMD hot path — half the memory traffic, twice the lanes per register.
 #[derive(Clone, PartialEq)]
-pub struct Matrix {
+pub struct Mat<T: Scalar> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<T>,
 }
 
-impl fmt::Debug for Matrix {
+/// f64 matrix — the default precision, with the full decomposition
+/// surface the RFA analysis needs.
+pub type Matrix = Mat<f64>;
+
+/// f32 matrix — the SIMD hot-path storage (multiply/contract surface
+/// only).
+pub type Matrix32 = Mat<f32>;
+
+impl<T: Scalar> fmt::Debug for Mat<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        writeln!(f, "Mat<{}> {}x{} [", T::NAME, self.rows, self.cols)?;
         for r in 0..self.rows.min(8) {
             write!(f, "  [")?;
             for c in 0..self.cols.min(8) {
@@ -28,39 +55,14 @@ impl fmt::Debug for Matrix {
     }
 }
 
-impl Matrix {
+impl<T: Scalar> Mat<T> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, data: vec![0.0; rows * cols] }
+        Self { rows, cols, data: vec![T::ZERO; rows * cols] }
     }
 
-    pub fn identity(n: usize) -> Self {
-        let mut m = Self::zeros(n, n);
-        for i in 0..n {
-            m[(i, i)] = 1.0;
-        }
-        m
-    }
-
-    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
-        let r = rows.len();
-        let c = rows.first().map_or(0, |row| row.len());
-        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
-        let data = rows.iter().flatten().copied().collect();
-        Self { rows: r, cols: c, data }
-    }
-
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Self { rows, cols, data }
-    }
-
-    pub fn diag(values: &[f64]) -> Self {
-        let n = values.len();
-        let mut m = Self::zeros(n, n);
-        for (i, &v) in values.iter().enumerate() {
-            m[(i, i)] = v;
-        }
-        m
     }
 
     pub fn rows(&self) -> usize {
@@ -71,28 +73,28 @@ impl Matrix {
         self.cols
     }
 
-    pub fn data(&self) -> &[f64] {
+    pub fn data(&self) -> &[T] {
         &self.data
     }
 
-    pub fn data_mut(&mut self) -> &mut [f64] {
+    pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
-    pub fn row(&self, r: usize) -> &[f64] {
+    pub fn row(&self, r: usize) -> &[T] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     /// Copy of rows `[r0, r1)` as a standalone matrix. Rows are contiguous
     /// in the row-major layout, so this is one memcpy — the chunked
     /// attention engine uses it to slice sequences into blocks.
-    pub fn row_block(&self, r0: usize, r1: usize) -> Matrix {
+    pub fn row_block(&self, r0: usize, r1: usize) -> Mat<T> {
         assert!(r0 <= r1 && r1 <= self.rows, "row_block out of range");
-        Matrix {
+        Mat {
             rows: r1 - r0,
             cols: self.cols,
             data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
@@ -100,25 +102,17 @@ impl Matrix {
     }
 
     /// Column sums `out[j] = Σ_r self[r, j]` — the `Φ(K)ᵀ·1` normalizer
-    /// summary, streamed over contiguous rows.
-    pub fn col_sums(&self) -> Vec<f64> {
-        let mut out = vec![0.0; self.cols];
+    /// summary, streamed over contiguous rows and accumulated in
+    /// [`Scalar::Accum`]: a monotone sum of positives whose storage-width
+    /// roundoff would grow linearly with the row count.
+    pub fn col_sums(&self) -> Vec<T::Accum> {
+        let mut out = vec![<T::Accum as Scalar>::ZERO; self.cols];
         for r in 0..self.rows {
             for (o, &x) in out.iter_mut().zip(self.row(r)) {
-                *o += x;
+                *o += x.to_accum();
             }
         }
         out
-    }
-
-    pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[(c, r)] = self[(r, c)];
-            }
-        }
-        t
     }
 
     /// `self · other`, tiled for cache reuse.
@@ -128,13 +122,14 @@ impl Matrix {
     /// `other` that stays resident in cache across the whole `i` sweep.
     /// Per output element the `k` accumulation still runs in ascending
     /// order, so results are bitwise-identical to the naive ikj kernel.
-    pub fn matmul(&self, other: &Matrix) -> Matrix {
+    pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kk, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        // Tile sizes: a KT×JT f64 panel of `other` is 128 KiB — L2-resident
-        // on anything this runs on, while the JT-wide output row chunk
-        // stays in L1 across the k loop.
+        let mut out = Mat::zeros(m, n);
+        // Tile sizes shared across precisions: a KT×JT panel of `other`
+        // is 128 KiB in f64 (L2-resident on anything this runs on) and
+        // 64 KiB in f32, while the JT-wide output row chunk stays in L1
+        // across the k loop either way.
         const KT: usize = 64;
         const JT: usize = 256;
         let mut jb = 0;
@@ -164,19 +159,19 @@ impl Matrix {
     /// `self · otherᵀ` without materializing the transpose.
     ///
     /// `other` is `n×k` with `self` `m×k`; the result is `m×n`. Both
-    /// operands are walked along contiguous rows, so this is the preferred
-    /// kernel for feature-map contractions `Φ(Q)·Φ(K)ᵀ` and projection
-    /// products `X·Ωᵀ` where the transposed operand is naturally stored
-    /// row-major.
-    pub fn matmul_transb(&self, other: &Matrix) -> Matrix {
+    /// operands are walked along contiguous rows through the unrolled
+    /// [`Scalar::dot`] kernel, so this is the preferred kernel for
+    /// feature-map contractions `Φ(Q)·Φ(K)ᵀ` and projection products
+    /// `X·Ωᵀ` where the transposed operand is naturally stored row-major.
+    pub fn matmul_transb(&self, other: &Mat<T>) -> Mat<T> {
         assert_eq!(self.cols, other.cols, "matmul_transb shape mismatch");
         let (m, n) = (self.rows, other.rows);
-        let mut out = Matrix::zeros(m, n);
+        let mut out = Mat::zeros(m, n);
         for i in 0..m {
             let arow = self.row(i);
             let orow = &mut out.data[i * n..(i + 1) * n];
             for (o, j) in orow.iter_mut().zip(0..n) {
-                *o = dot_unrolled(arow, other.row(j));
+                *o = T::dot(arow, other.row(j));
             }
         }
         out
@@ -189,10 +184,10 @@ impl Matrix {
     /// every output row is walked contiguously, which is exactly the
     /// access pattern of the summary contractions `Φ(K)ᵀ·V` where both
     /// factors are naturally stored row-major with `k = L` long.
-    pub fn matmul_transa(&self, other: &Matrix) -> Matrix {
+    pub fn matmul_transa(&self, other: &Mat<T>) -> Mat<T> {
         assert_eq!(self.rows, other.rows, "matmul_transa shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
+        let mut out = Mat::zeros(m, n);
         for r in 0..k {
             let arow = self.row(r);
             let brow = other.row(r);
@@ -206,11 +201,112 @@ impl Matrix {
         out
     }
 
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    /// `self · x` with each row reduced sequentially in
+    /// [`Scalar::Accum`] — the denominator kernel `Φ(Q)·z` of the causal
+    /// readout, where numerator/denominator share correlated error and
+    /// the division must happen in the accumulator domain.
+    pub fn matvec_accum(&self, x: &[T]) -> Vec<T::Accum> {
         assert_eq!(self.cols, x.len());
         (0..self.rows)
-            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(x)
+                    .map(|(&a, &b)| a.to_accum() * b.to_accum())
+                    .fold(<T::Accum as Scalar>::ZERO, |acc, t| acc + t)
+            })
             .collect()
+    }
+
+    pub fn scale(&self, s: T) -> Mat<T> {
+        let data = self.data.iter().map(|&a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Maximum absolute entrywise difference (in f64 so the comparison
+    /// itself never rounds).
+    pub fn max_abs_diff(&self, other: &Mat<T>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 compatibility surface (the old `Matrix32` names)
+// ---------------------------------------------------------------------
+
+impl Mat<f32> {
+    /// Downcast an f64 matrix (round-to-nearest per entry).
+    pub fn from_f64(m: &Matrix) -> Self {
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// Upcast to f64 (exact: every f32 is representable).
+    pub fn to_f64(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&x| x as f64).collect(),
+        )
+    }
+
+    /// Column sums accumulated in f64 — alias of the generic
+    /// [`Mat::col_sums`] under the name the f32 stack has always used.
+    pub fn col_sums_f64(&self) -> Vec<f64> {
+        self.col_sums()
+    }
+}
+
+// ---------------------------------------------------------------------
+// f64-only surface: constructors and decompositions
+// ---------------------------------------------------------------------
+
+impl Matrix {
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        let data = rows.iter().flatten().copied().collect();
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn diag(values: &[f64]) -> Self {
+        let n = values.len();
+        let mut m = Self::zeros(n, n);
+        for (i, &v) in values.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_accum(x)
     }
 
     pub fn add(&self, other: &Matrix) -> Matrix {
@@ -227,23 +323,8 @@ impl Matrix {
         Matrix { rows: self.rows, cols: self.cols, data }
     }
 
-    pub fn scale(&self, s: f64) -> Matrix {
-        let data = self.data.iter().map(|a| a * s).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
-    }
-
     pub fn frobenius_norm(&self) -> f64 {
         self.data.iter().map(|a| a * a).sum::<f64>().sqrt()
-    }
-
-    /// Maximum absolute entrywise difference.
-    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        self.data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f64::max)
     }
 
     /// Cholesky factorization `A = L L^T` for symmetric positive definite
@@ -424,40 +505,16 @@ impl Matrix {
     }
 }
 
-/// Dot product with four independent accumulators: breaks the add-latency
-/// dependency chain so the compiler can keep multiple FMAs in flight.
-/// Summation order differs from a sequential fold, which is fine for the
-/// fresh entries [`Matrix::matmul_transb`] produces. Public as
-/// [`crate::linalg::dot`]: the attention engines use it for masked
-/// row-wise score computation where a full gram would waste work.
-pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        acc[0] += xa[0] * xb[0];
-        acc[1] += xa[1] * xb[1];
-        acc[2] += xa[2] * xb[2];
-        acc[3] += xa[3] * xb[3];
-    }
-    let mut tail = 0.0;
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        tail += x * y;
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
-}
+impl<T: Scalar> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
 
-impl Index<(usize, usize)> for Matrix {
-    type Output = f64;
-
-    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+    fn index(&self, (r, c): (usize, usize)) -> &T {
         &self.data[r * self.cols + c]
     }
 }
 
-impl IndexMut<(usize, usize)> for Matrix {
-    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+impl<T: Scalar> IndexMut<(usize, usize)> for Mat<T> {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut T {
         &mut self.data[r * self.cols + c]
     }
 }
@@ -497,6 +554,10 @@ mod tests {
         use crate::rng::{GaussianExt, Pcg64};
         let mut rng = Pcg64::seed(seed);
         Matrix::from_vec(rows, cols, rng.gaussian_vec(rows * cols))
+    }
+
+    fn random32(rows: usize, cols: usize, seed: u64) -> Matrix32 {
+        Matrix32::from_f64(&random_matrix(rows, cols, seed))
     }
 
     #[test]
@@ -560,6 +621,70 @@ mod tests {
                 fast.max_abs_diff(&reference)
             );
         }
+    }
+
+    /// All three f32 contraction kernels vs the f64 instantiation of the
+    /// same generic code on the exact same (f32-representable) entries:
+    /// agreement to f32 accumulation noise across tile/unroll boundaries.
+    #[test]
+    fn f32_kernels_match_f64_reference() {
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 64, 63),
+            (8, 65, 257),
+            (33, 130, 12),
+        ] {
+            let a = random32(m, k, 11 + m as u64);
+            let b = random32(k, n, 22 + n as u64);
+            let bt = random32(n, k, 33 + n as u64);
+            let a64 = a.to_f64();
+
+            let mm = a.matmul(&b).to_f64();
+            let mm_ref = a64.matmul(&b.to_f64());
+            assert!(mm.max_abs_diff(&mm_ref) < 1e-4 * k as f64);
+
+            let tb = a.matmul_transb(&bt).to_f64();
+            let tb_ref = a64.matmul_transb(&bt.to_f64());
+            assert!(tb.max_abs_diff(&tb_ref) < 1e-4 * k as f64);
+
+            let bt2 = random32(m, n, 44 + n as u64);
+            let ta = a.matmul_transa(&bt2).to_f64();
+            let ta_ref = a64.matmul_transa(&bt2.to_f64());
+            assert!(ta.max_abs_diff(&ta_ref) < 1e-4 * m as f64);
+        }
+    }
+
+    #[test]
+    fn col_sums_accumulate_in_f64() {
+        // 2^24 + 1 is not representable in f32; the Accum=f64 policy over
+        // f32 entries must still resolve the +1.
+        let l = 1 << 12;
+        let mut data = vec![4096.0f32; l];
+        data[0] = 4097.0;
+        let m = Matrix32::from_vec(l, 1, data);
+        let s = m.col_sums_f64();
+        assert_eq!(s[0], 4096.0 * (l as f64) + 1.0);
+    }
+
+    #[test]
+    fn round_trip_and_row_block_f32() {
+        let m = random32(7, 5, 99);
+        assert_eq!(Matrix32::from_f64(&m.to_f64()), m);
+        let block = m.row_block(2, 5);
+        assert_eq!(block.rows(), 3);
+        assert_eq!(block.row(0), m.row(2));
+        assert_eq!(block.row(2), m.row(4));
+    }
+
+    #[test]
+    fn matvec_accum_is_the_matvec_kernel() {
+        // matvec (f64 compat name) and the generic Accum kernel agree,
+        // and the f32 instantiation widens products before summing.
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[5.0, 6.0]), vec![17.0, 39.0]);
+        let a32 = Matrix32::from_f64(&a);
+        assert_eq!(a32.matvec_accum(&[5.0f32, 6.0]), vec![17.0f64, 39.0]);
     }
 
     #[test]
@@ -668,12 +793,5 @@ mod tests {
         let (vals, _) = a.jacobi_eigen();
         assert_close(vals[0], 3.0, 1e-12);
         assert_close(vals[1], 1.0, 1e-12);
-    }
-
-    #[test]
-    fn matvec_matches_matmul() {
-        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
-        let y = a.matvec(&[5.0, 6.0]);
-        assert_eq!(y, vec![17.0, 39.0]);
     }
 }

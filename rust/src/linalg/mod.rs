@@ -6,16 +6,20 @@
 //! `(I + 2L)(I - 2L)^{-1}` and eigen-decompositions. Deliberately small —
 //! just what the reproduction needs, tested against hand-computable cases.
 //!
-//! Two storage precisions share the kernel structure: [`Matrix`] (f64) is
-//! the default and carries every decomposition; [`Matrix32`] (f32) carries
-//! only the multiply/contract surface and is the attention engine's SIMD
-//! hot path — half the memory traffic, twice the lanes per register.
+//! Storage precisions live behind the sealed [`Scalar`] backend trait:
+//! one generic [`Mat<T>`] carries the SIMD-tiled multiply/contract
+//! kernels for every precision, with [`Matrix`] (= `Mat<f64>`) the
+//! default that additionally carries every decomposition, and
+//! [`Matrix32`] (= `Mat<f32>`) the attention engine's hot path — half
+//! the memory traffic, twice the lanes per register. Long reductions
+//! always accumulate in [`Scalar::Accum`] (f64); see `scalar.rs` for the
+//! policy contract.
 
-mod matrix;
-mod matrix32;
+mod mat;
+mod scalar;
 
-pub use matrix::{dot_unrolled as dot, Matrix};
-pub use matrix32::{dot32, Matrix32};
+pub use mat::{Mat, Matrix, Matrix32};
+pub use scalar::{dot32, dot_unrolled as dot, Scalar};
 
 /// Machine tolerance used by the iterative routines.
 pub const TOL: f64 = 1e-12;

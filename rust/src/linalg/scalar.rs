@@ -1,0 +1,298 @@
+//! The sealed [`Scalar`] backend trait: one element type per storage
+//! precision, one shared set of kernels, one accumulation policy.
+//!
+//! Before this trait the crate carried two hand-maintained copies of the
+//! whole attention stack (`Matrix`/`Matrix32`, `feature_matrix{,32}`,
+//! `CausalState{,32}`, …). The estimator mathematics is precision-agnostic
+//! — the FAVOR+ lineage changes *storage* width, never the algebra — and
+//! the only real degree of freedom is where long accumulations happen.
+//! [`Scalar`] encodes exactly that:
+//!
+//! * the element type and its conversions to/from `f64`;
+//! * the precision-tuned unrolled [`Scalar::dot`] kernel (four f64
+//!   accumulators, eight f32 lanes — see [`dot_unrolled`] / [`dot32`]);
+//! * the **accumulation policy** as the associated type
+//!   [`Scalar::Accum`]: every sum whose length grows with the sequence —
+//!   the running `S`/`z` prefixes, per-row denominators, and the
+//!   feature-map exponent — accumulates in `Accum`, which is **`f64` for
+//!   every precision in the sealed set**. Storage width is a throughput
+//!   choice; the accumulator width is a correctness contract
+//!   (an f32 running sum over L positive terms would accumulate
+//!   O(L·ε₃₂) relative error — ≈1% at L=10⁵).
+//!
+//! The trait is sealed: adding a precision (e.g. a bf16 emulation) means
+//! adding one impl here — with `Accum = f64` — and the whole pipeline
+//! (`Mat<T>` → `FeatureBank::feature_matrix_t` → `CausalState<T>` →
+//! `rfa::serve`) exists for it immediately.
+
+use std::borrow::Cow;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Sub, SubAssign};
+
+use super::mat::Mat;
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// Element type of a [`Mat`]: the storage precision of one attention
+/// stack, with its kernels and its accumulation policy. Sealed — the set
+/// of precisions is closed over the impls in this module.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + fmt::Debug
+    + fmt::Display
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + 'static
+{
+    /// The accumulator element for sequence-length reductions: running
+    /// `S = Σ φ(k_j)·v_jᵀ` / `z = Σ φ(k_j)` prefixes, per-row
+    /// denominators, and the feature-map exponent. **`f64` for every
+    /// impl** — this is the documented accumulation-policy contract, not
+    /// a per-precision tuning knob (see the module docs and
+    /// [`crate::rfa::engine`]).
+    type Accum: Scalar;
+
+    /// Human-readable precision name (`"f64"` / `"f32"`), used by
+    /// [`Mat`]'s `Debug` header.
+    const NAME: &'static str;
+    const ZERO: Self;
+    const ONE: Self;
+
+    /// Round an `f64` value to this precision (identity for `f64`).
+    fn from_f64(x: f64) -> Self;
+
+    /// Widen to `f64` (exact: every storage precision embeds in f64).
+    fn to_f64(self) -> f64;
+
+    /// Widen into the accumulator domain (exact).
+    fn to_accum(self) -> Self::Accum;
+
+    /// Round an accumulated value back to storage precision — the single
+    /// point where the policy's one-rounding-per-output happens.
+    fn from_accum(a: Self::Accum) -> Self;
+
+    /// `e^self`. The pipeline only exponentiates in the accumulator
+    /// domain (the exponent is a cancellation-sensitive difference); this
+    /// exists on the trait so `T::Accum` carries it.
+    fn exp(self) -> Self;
+
+    /// Unrolled dot kernel with precision-tuned accumulator count:
+    /// [`dot_unrolled`] (4 independent f64 accumulators) for `f64`,
+    /// [`dot32`] (8 f32 lanes) for `f32`. Summation order differs from a
+    /// sequential fold — fine for fresh gram entries, the contract both
+    /// kernels have always had.
+    fn dot(a: &[Self], b: &[Self]) -> Self;
+
+    /// Borrow-or-round an f64 matrix into this precision: a borrow when
+    /// `Self` *is* f64, one rounded copy otherwise. This is how f64-side
+    /// inputs (values, drawn banks) enter a `T`-precision forward without
+    /// taxing the f64 path with copies.
+    fn mat_from_f64(m: &Mat<f64>) -> Cow<'_, Mat<Self>>;
+
+    /// Borrow-or-round an accumulator-precision matrix (the running
+    /// state) into storage precision — the once-per-chunk state rounding
+    /// of the engine policy. A borrow when storage == accumulator.
+    fn mat_from_accum(m: &Mat<Self::Accum>) -> Cow<'_, Mat<Self>>;
+
+    /// Slice counterpart of [`Scalar::mat_from_accum`] (the running `z`).
+    fn slice_from_accum(z: &[Self::Accum]) -> Cow<'_, [Self]>;
+}
+
+impl Scalar for f64 {
+    type Accum = f64;
+
+    const NAME: &'static str = "f64";
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn to_accum(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn from_accum(a: f64) -> Self {
+        a
+    }
+
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+
+    #[inline(always)]
+    fn dot(a: &[Self], b: &[Self]) -> Self {
+        dot_unrolled(a, b)
+    }
+
+    fn mat_from_f64(m: &Mat<f64>) -> Cow<'_, Mat<f64>> {
+        Cow::Borrowed(m)
+    }
+
+    fn mat_from_accum(m: &Mat<f64>) -> Cow<'_, Mat<f64>> {
+        Cow::Borrowed(m)
+    }
+
+    fn slice_from_accum(z: &[f64]) -> Cow<'_, [f64]> {
+        Cow::Borrowed(z)
+    }
+}
+
+impl Scalar for f32 {
+    type Accum = f64;
+
+    const NAME: &'static str = "f32";
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn to_accum(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn from_accum(a: f64) -> Self {
+        a as f32
+    }
+
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+
+    #[inline(always)]
+    fn dot(a: &[Self], b: &[Self]) -> Self {
+        dot32(a, b)
+    }
+
+    fn mat_from_f64(m: &Mat<f64>) -> Cow<'_, Mat<f32>> {
+        Cow::Owned(Mat::<f32>::from_f64(m))
+    }
+
+    fn mat_from_accum(m: &Mat<f64>) -> Cow<'_, Mat<f32>> {
+        Self::mat_from_f64(m)
+    }
+
+    fn slice_from_accum(z: &[f64]) -> Cow<'_, [f32]> {
+        Cow::Owned(z.iter().map(|&x| x as f32).collect())
+    }
+}
+
+/// f64 dot product with four independent accumulators: breaks the
+/// add-latency dependency chain so the compiler can keep multiple FMAs in
+/// flight. Summation order differs from a sequential fold, which is fine
+/// for the fresh entries [`Mat::matmul_transb`] produces. Public as
+/// [`crate::linalg::dot`]: the attention engines use it for masked
+/// row-wise score computation where a full gram would waste work.
+pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// f32 dot with eight independent accumulators: at 8 f32 lanes per
+/// 256-bit register this keeps a full vector of FMAs in flight per
+/// accumulator. Summation order differs from a sequential fold (fine for
+/// fresh gram entries, same contract as the f64 [`dot_unrolled`]).
+pub fn dot32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for (a, (&x, &y)) in acc.iter_mut().zip(xa.iter().zip(xb)) {
+            *a += x * y;
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+        + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot32_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32) * 0.25 - 4.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| 1.5 - (i as f32) * 0.125).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot32(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn conversions_are_exact_where_promised() {
+        // Widening is exact; f64 conversions are all identities.
+        assert_eq!(<f32 as Scalar>::to_f64(0.1f32), 0.1f32 as f64);
+        assert_eq!(<f64 as Scalar>::from_f64(0.1), 0.1);
+        assert_eq!(<f64 as Scalar>::to_accum(0.1), 0.1);
+        assert_eq!(<f32 as Scalar>::from_accum(1.0 + 1e-12), 1.0f32);
+    }
+
+    #[test]
+    fn f64_state_conversions_borrow() {
+        // The f64 path must not pay copies at the precision boundary.
+        let m = Mat::<f64>::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(matches!(
+            <f64 as Scalar>::mat_from_accum(&m),
+            Cow::Borrowed(_)
+        ));
+        let z = [1.0f64, 2.0];
+        assert!(matches!(
+            <f64 as Scalar>::slice_from_accum(&z),
+            Cow::Borrowed(_)
+        ));
+    }
+}

@@ -1,5 +1,6 @@
 //! Multi-head, chunk-blocked linear-attention engine — the serving-scale
-//! forward on top of [`super::features::FeatureBank`].
+//! forward on top of [`super::features::FeatureBank`], written once,
+//! generically, over the [`Scalar`] storage precision.
 //!
 //! # Chunked causal evaluation
 //!
@@ -18,38 +19,49 @@
 //! ```
 //!
 //! Everything left of the `tril` is a dense contraction (`matmul`,
-//! [`Matrix::matmul_transa`]); the masked intra-chunk gram is `C(C+1)/2`
+//! [`Mat::matmul_transa`]); the masked intra-chunk gram is `C(C+1)/2`
 //! unrolled dots per chunk. The causal path therefore costs
 //! O(L·(C·n + n·dv)) of dense, autovectorized work instead of O(L) scalar
 //! iterations, while the state stays O(n·dv) — a [`CausalState`] can
 //! stream L ≫ 10⁵ chunk by chunk without ever materializing the sequence.
 //!
-//! # f32 accumulation policy
+//! # The `Scalar::Accum` contract
 //!
-//! The f32 path ([`CausalState32`], [`chunked_causal_linear_attention32`])
-//! keeps every O(L·C·n) contraction — intra-chunk grams, inter-chunk
-//! readouts, chunk summaries — in f32, where SIMD width and memory
-//! bandwidth pay. f64 is kept exactly where roundoff compounds with
-//! sequence length:
+//! There is exactly one [`CausalState::forward_chunk`] body, generic over
+//! the storage precision `T`. Chunk-local compute — intra-chunk grams,
+//! inter-chunk readouts, chunk summaries, every O(L·C·n) contraction —
+//! runs at storage width `T`, where SIMD width and memory bandwidth pay.
+//! Everything whose roundoff compounds with sequence length accumulates
+//! in [`Scalar::Accum`] (**f64 for every precision** — the contract
+//! documented on the trait):
 //!
-//! * the running state `S = Σ φ(k_j)·v_jᵀ` and `z = Σ φ(k_j)` are f64
-//!   accumulators, folded once per chunk from the f32 chunk summaries —
-//!   they are monotone sums of L positive terms, and an f32 running sum
-//!   would accumulate O(L·ε₃₂) relative error (≈1% at L=10⁵); folding
-//!   per chunk bounds each f32 partial sum to C terms;
-//! * per-row denominators accumulate in f64 for the same reason, and the
-//!   final normalization divides in f64 before rounding the output to
-//!   f32 (the numerator/denominator are correlated sums — dividing in
-//!   f32 would forfeit the cancellation of their shared error);
-//! * the state is rounded to f32 once per chunk for the readout matmul,
-//!   so the rounding enters each output once instead of drifting
+//! * the running state `S = Σ φ(k_j)·v_jᵀ` and `z = Σ φ(k_j)` are
+//!   `Accum` accumulators, folded once per chunk from the storage-width
+//!   chunk summaries — they are monotone sums of L positive terms, and a
+//!   storage-width running sum would accumulate O(L·ε) relative error
+//!   (≈1% at L=10⁵ for f32); folding per chunk bounds each storage-width
+//!   partial sum to C terms;
+//! * per-row denominators accumulate in `Accum` for the same reason, and
+//!   the final normalization divides in `Accum` before rounding the
+//!   output to `T` exactly once (the numerator/denominator are
+//!   correlated sums — dividing at storage width would forfeit the
+//!   cancellation of their shared error);
+//! * the state is rounded to `T` once per chunk for the readout matmul
+//!   ([`Scalar::mat_from_accum`] — a borrow, not a copy, on the f64
+//!   path), so the rounding enters each output once instead of drifting
 //!   per-position;
 //! * feature values themselves come from
-//!   [`FeatureBank::feature_matrix32`], which exponentiates in f64 (the
-//!   exponent is a cancellation-sensitive difference) and stores f32.
+//!   [`FeatureBank::feature_matrix_t`], which exponentiates in `Accum`
+//!   (the exponent is a cancellation-sensitive difference) and stores
+//!   `T`.
 //!
-//! `rust/tests/rfa_engine.rs` pins the f32 path to the f64 reference at
-//! L=512 under this policy.
+//! On the f64 path every `Accum` conversion is the identity, so the
+//! generic body *is* the f64 algorithm; on the f32 path it reproduces the
+//! historical `CausalState32` semantics (including the once-per-chunk
+//! state rounding) bit for bit. `rust/tests/rfa_generic.rs` pins both
+//! against frozen transliterations of the pre-generic implementations,
+//! and `rust/tests/rfa_engine.rs` pins the f32 path to the f64 reference
+//! at L=512.
 //!
 //! # Multi-head batching
 //!
@@ -60,7 +72,7 @@
 //! thread is spawned — outputs are a pure function of the seed,
 //! independent of worker count.
 
-use crate::linalg::{dot, dot32, Matrix, Matrix32};
+use crate::linalg::{Mat, Matrix, Matrix32, Scalar};
 use crate::rng::Pcg64;
 
 use super::batch::{default_threads, run_jobs};
@@ -95,22 +107,30 @@ impl EngineConfig {
 }
 
 // ---------------------------------------------------------------------
-// f64 chunked causal state
+// Chunked causal state, generic over the storage precision
 // ---------------------------------------------------------------------
 
 /// Streaming causal-attention state: the O(n·dv) running prefix summaries
 /// `S = Σ_{j<t} φ(k_j)·v_jᵀ` and `z = Σ_{j<t} φ(k_j)`, advanced one chunk
 /// at a time. Feeding chunks of any sizes produces the same output rows
 /// as one monolithic call — only fp reassociation differs.
-pub struct CausalState {
-    s: Matrix,
-    z: Vec<f64>,
+///
+/// The state lives in [`Scalar::Accum`] precision (f64) regardless of
+/// the storage precision `T` — the module's accumulation contract — so
+/// snapshots of it are exact-bits by construction for every `T`.
+pub struct CausalState<T: Scalar> {
+    s: Mat<T::Accum>,
+    z: Vec<T::Accum>,
 }
 
-impl CausalState {
+/// The f32 storage-precision state — one instantiation of the generic
+/// [`CausalState`], kept as an alias for the historical name.
+pub type CausalState32 = CausalState<f32>;
+
+impl<T: Scalar> CausalState<T> {
     /// Fresh (all-zero) state for `n` features and `dv` value channels.
     pub fn new(n: usize, dv: usize) -> Self {
-        Self { s: Matrix::zeros(n, dv), z: vec![0.0; n] }
+        Self { s: Mat::zeros(n, dv), z: vec![<T::Accum as Scalar>::ZERO; n] }
     }
 
     /// Number of feature channels `n`.
@@ -123,15 +143,16 @@ impl CausalState {
         self.s.cols()
     }
 
-    /// The running prefix `S = Σ φ(k_j)·v_jᵀ` (`n×dv`). Read access for
-    /// state snapshots ([`crate::rfa::serve`]); the recursion itself only
-    /// advances through [`Self::forward_chunk`].
-    pub fn state(&self) -> &Matrix {
+    /// The running prefix `S = Σ φ(k_j)·v_jᵀ` (`n×dv`, accumulator
+    /// precision). Read access for state snapshots ([`crate::rfa::serve`]);
+    /// the recursion itself only advances through [`Self::forward_chunk`].
+    pub fn state(&self) -> &Mat<T::Accum> {
         &self.s
     }
 
-    /// The running normalizer prefix `z = Σ φ(k_j)` (length `n`).
-    pub fn z(&self) -> &[f64] {
+    /// The running normalizer prefix `z = Σ φ(k_j)` (length `n`,
+    /// accumulator precision).
+    pub fn z(&self) -> &[T::Accum] {
         &self.z
     }
 
@@ -139,20 +160,21 @@ impl CausalState {
     /// snapshot surface. `s` is the `n×dv` prefix, `z` its length-`n`
     /// normalizer; a state restored from [`Self::state`]/[`Self::z`]
     /// continues the stream bitwise identically.
-    pub fn from_parts(s: Matrix, z: Vec<f64>) -> Self {
+    pub fn from_parts(s: Mat<T::Accum>, z: Vec<T::Accum>) -> Self {
         assert_eq!(s.rows(), z.len(), "state/z feature dims differ");
         Self { s, z }
     }
 
     /// Process one chunk: returns the normalized attention rows for the
     /// chunk's positions and folds the chunk's key/value summaries into
-    /// the running state.
+    /// the running state. The single forward body of the whole stack —
+    /// see the module docs for the `Scalar::Accum` contract it encodes.
     pub fn forward_chunk(
         &mut self,
-        phi_q: &Matrix,
-        phi_k: &Matrix,
-        v: &Matrix,
-    ) -> Matrix {
+        phi_q: &Mat<T>,
+        phi_k: &Mat<T>,
+        v: &Mat<T>,
+    ) -> Mat<T> {
         let (n, dv) = (self.s.rows(), self.s.cols());
         assert_eq!(phi_q.cols(), n, "phi_q feature dim mismatch");
         assert_eq!(phi_k.cols(), n, "phi_k feature dim mismatch");
@@ -161,18 +183,26 @@ impl CausalState {
         assert_eq!(phi_k.rows(), v.rows(), "chunk k/v length mismatch");
         let c = phi_q.rows();
 
-        // Inter-chunk: everything before this chunk, two dense contractions.
-        let mut out = phi_q.matmul(&self.s);
-        let mut denom = phi_q.matvec(&self.z);
+        // One rounding of the running state to storage precision per
+        // chunk (a borrow — no copy, no rounding — on the f64 path),
+        // scoped so the borrows end before the state fold below mutates
+        // the running prefixes. Inter-chunk readout at storage width;
+        // denominators accumulate in Accum.
+        let (mut out, mut denom) = {
+            let s_t = T::mat_from_accum(&self.s);
+            let z_t = T::slice_from_accum(&self.z);
+            (phi_q.matmul(&s_t), phi_q.matvec_accum(&z_t))
+        };
 
-        // Intra-chunk: masked gram rows — position t sees keys j ≤ t.
+        // Intra-chunk masked gram at storage width — position t sees
+        // keys j ≤ t.
         for t in 0..c {
             let qrow = phi_q.row(t);
             let orow = out.row_mut(t);
-            let mut acc = 0.0;
+            let mut acc = <T::Accum as Scalar>::ZERO;
             for j in 0..=t {
-                let g = dot(qrow, phi_k.row(j));
-                acc += g;
+                let g = T::dot(qrow, phi_k.row(j));
+                acc += g.to_accum();
                 for (o, &vc) in orow.iter_mut().zip(v.row(j)) {
                     *o += g * vc;
                 }
@@ -180,19 +210,21 @@ impl CausalState {
             denom[t] += acc;
         }
 
-        // State fold: single contractions over the whole chunk.
+        // Chunk summaries at storage width (≤ C terms each), folded into
+        // the Accum state with single contractions over the whole chunk.
         let summary = phi_k.matmul_transa(v);
         for (s, &x) in self.s.data_mut().iter_mut().zip(summary.data()) {
-            *s += x;
+            *s += x.to_accum();
         }
         for (z, x) in self.z.iter_mut().zip(phi_k.col_sums()) {
             *z += x;
         }
 
+        // Normalize in Accum, store T — one output rounding.
         for t in 0..c {
             let d = denom[t];
             for o in out.row_mut(t) {
-                *o /= d;
+                *o = T::from_accum(o.to_accum() / d);
             }
         }
         out
@@ -204,14 +236,14 @@ impl CausalState {
     /// streaming API: feed consecutive segments of any sizes.
     pub fn forward(
         &mut self,
-        phi_q: &Matrix,
-        phi_k: &Matrix,
-        v: &Matrix,
+        phi_q: &Mat<T>,
+        phi_k: &Mat<T>,
+        v: &Mat<T>,
         chunk: usize,
-    ) -> Matrix {
+    ) -> Mat<T> {
         let (l, dv) = (phi_q.rows(), self.s.cols());
         let chunk = chunk.max(1);
-        let mut out = Matrix::zeros(l, dv);
+        let mut out = Mat::zeros(l, dv);
         let mut b = 0;
         while b < l {
             let e = (b + chunk).min(l);
@@ -227,185 +259,31 @@ impl CausalState {
     }
 }
 
-/// Chunk-blocked causal linear attention: same estimator as
-/// [`super::attention::causal_linear_attention`], evaluated block-wise.
-/// `chunk` is the block length C (clamped to ≥ 1); C = 1 degenerates to
-/// per-position processing.
-pub fn chunked_causal_linear_attention(
-    phi_q: &Matrix,
-    phi_k: &Matrix,
-    v: &Matrix,
+/// Chunk-blocked causal linear attention at storage precision `T`: same
+/// estimator as [`super::attention::causal_linear_attention`], evaluated
+/// block-wise. `chunk` is the block length C (clamped to ≥ 1); C = 1
+/// degenerates to per-position processing.
+pub fn chunked_causal_linear_attention<T: Scalar>(
+    phi_q: &Mat<T>,
+    phi_k: &Mat<T>,
+    v: &Mat<T>,
     chunk: usize,
-) -> Matrix {
+) -> Mat<T> {
     assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
     assert_eq!(phi_q.rows(), phi_k.rows(), "causal attention needs lq == lk");
     assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
     CausalState::new(phi_q.cols(), v.cols()).forward(phi_q, phi_k, v, chunk)
 }
 
-// ---------------------------------------------------------------------
-// f32 chunked causal state (f64 accumulators per the module policy)
-// ---------------------------------------------------------------------
-
-/// f32 streaming causal state. Chunk-local compute is f32; the running
-/// `S`/`z` prefixes and per-row denominators are f64 accumulators (see
-/// the module docs for the full policy).
-pub struct CausalState32 {
-    /// Running `Φ(K)ᵀ·V` prefix, row-major `n×dv`, f64 accumulator.
-    s: Vec<f64>,
-    /// Running `Φ(K)ᵀ·1` prefix, f64 accumulator.
-    z: Vec<f64>,
-    n: usize,
-    dv: usize,
-}
-
-impl CausalState32 {
-    /// Fresh (all-zero) state for `n` features and `dv` value channels.
-    pub fn new(n: usize, dv: usize) -> Self {
-        Self { s: vec![0.0; n * dv], z: vec![0.0; n], n, dv }
-    }
-
-    /// Number of feature channels `n`.
-    pub fn n_features(&self) -> usize {
-        self.n
-    }
-
-    /// Number of value channels `dv`.
-    pub fn dv(&self) -> usize {
-        self.dv
-    }
-
-    /// The running `n×dv` prefix `S`, row-major. Per the module policy
-    /// this is an **f64** accumulator even on the f32 path, so snapshots
-    /// of it are exact-bits by construction.
-    pub fn state(&self) -> &[f64] {
-        &self.s
-    }
-
-    /// The running normalizer prefix `z` (length `n`, f64 accumulator).
-    pub fn z(&self) -> &[f64] {
-        &self.z
-    }
-
-    /// Rebuild a state from snapshotted parts; see
-    /// [`CausalState::from_parts`]. `s` is row-major `n×dv`.
-    pub fn from_parts(n: usize, dv: usize, s: Vec<f64>, z: Vec<f64>) -> Self {
-        assert_eq!(s.len(), n * dv, "state size != n*dv");
-        assert_eq!(z.len(), n, "z size != n");
-        Self { s, z, n, dv }
-    }
-
-    /// Process one chunk; see [`CausalState::forward_chunk`]. The state
-    /// snapshot is rounded to f32 once per chunk for the readout matmul.
-    pub fn forward_chunk(
-        &mut self,
-        phi_q: &Matrix32,
-        phi_k: &Matrix32,
-        v: &Matrix32,
-    ) -> Matrix32 {
-        let (n, dv) = (self.n, self.dv);
-        assert_eq!(phi_q.cols(), n, "phi_q feature dim mismatch");
-        assert_eq!(phi_k.cols(), n, "phi_k feature dim mismatch");
-        assert_eq!(v.cols(), dv, "v channel dim mismatch");
-        assert_eq!(phi_q.rows(), phi_k.rows(), "chunk q/k length mismatch");
-        assert_eq!(phi_k.rows(), v.rows(), "chunk k/v length mismatch");
-        let c = phi_q.rows();
-
-        // One rounding of the running state per chunk.
-        let s32 = Matrix32::from_vec(
-            n,
-            dv,
-            self.s.iter().map(|&x| x as f32).collect(),
-        );
-        let z32: Vec<f32> = self.z.iter().map(|&x| x as f32).collect();
-
-        // Inter-chunk readout in f32; denominators accumulate in f64.
-        let mut out = phi_q.matmul(&s32);
-        let mut denom: Vec<f64> = (0..c)
-            .map(|t| {
-                phi_q
-                    .row(t)
-                    .iter()
-                    .zip(&z32)
-                    .map(|(&a, &b)| a as f64 * b as f64)
-                    .sum()
-            })
-            .collect();
-
-        // Intra-chunk masked gram in f32.
-        for t in 0..c {
-            let qrow = phi_q.row(t);
-            let orow = out.row_mut(t);
-            let mut acc = 0.0f64;
-            for j in 0..=t {
-                let g = dot32(qrow, phi_k.row(j));
-                acc += g as f64;
-                for (o, &vc) in orow.iter_mut().zip(v.row(j)) {
-                    *o += g * vc;
-                }
-            }
-            denom[t] += acc;
-        }
-
-        // Chunk summaries in f32 (≤ C terms each), folded into f64 state.
-        let summary = phi_k.matmul_transa(v);
-        for (s, &x) in self.s.iter_mut().zip(summary.data()) {
-            *s += x as f64;
-        }
-        for (z, x) in self.z.iter_mut().zip(phi_k.col_sums_f64()) {
-            *z += x;
-        }
-
-        // Normalize in f64, store f32.
-        for t in 0..c {
-            let d = denom[t];
-            for o in out.row_mut(t) {
-                *o = (*o as f64 / d) as f32;
-            }
-        }
-        out
-    }
-
-    /// Segment-streaming wrapper over [`Self::forward_chunk`]; see
-    /// [`CausalState::forward`].
-    pub fn forward(
-        &mut self,
-        phi_q: &Matrix32,
-        phi_k: &Matrix32,
-        v: &Matrix32,
-        chunk: usize,
-    ) -> Matrix32 {
-        let (l, dv) = (phi_q.rows(), self.dv);
-        let chunk = chunk.max(1);
-        let mut out = Matrix32::zeros(l, dv);
-        let mut b = 0;
-        while b < l {
-            let e = (b + chunk).min(l);
-            let block = self.forward_chunk(
-                &phi_q.row_block(b, e),
-                &phi_k.row_block(b, e),
-                &v.row_block(b, e),
-            );
-            out.data_mut()[b * dv..e * dv].copy_from_slice(block.data());
-            b = e;
-        }
-        out
-    }
-}
-
-/// f32 chunk-blocked causal linear attention; see
-/// [`chunked_causal_linear_attention`] and the module's f32 policy.
+/// [`chunked_causal_linear_attention`] instantiated on the f32 hot path —
+/// kept under the historical name.
 pub fn chunked_causal_linear_attention32(
     phi_q: &Matrix32,
     phi_k: &Matrix32,
     v: &Matrix32,
     chunk: usize,
 ) -> Matrix32 {
-    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
-    assert_eq!(phi_q.rows(), phi_k.rows(), "causal attention needs lq == lk");
-    assert_eq!(phi_k.rows(), v.rows(), "k/v length mismatch");
-    CausalState32::new(phi_q.cols(), v.cols())
-        .forward(phi_q, phi_k, v, chunk)
+    chunked_causal_linear_attention(phi_q, phi_k, v, chunk)
 }
 
 /// f32 non-causal linear attention: `diag(Φq·z)⁻¹·Φq·(Φkᵀ·V)`. The key
@@ -458,21 +336,23 @@ pub fn linear_attention32(
 // End-to-end single-head wrappers
 // ---------------------------------------------------------------------
 
-/// End-to-end chunked causal PRF attention (f64): feature maps from the
-/// bank, then the blocked forward.
-pub fn prf_attention_chunked(
+/// End-to-end chunked causal PRF attention at storage precision `T`:
+/// feature maps from the bank ([`FeatureBank::feature_matrix_t`]), then
+/// the blocked forward.
+pub fn prf_attention_chunked<T: Scalar>(
     bank: &FeatureBank,
     q: &[Vec<f64>],
     k: &[Vec<f64>],
-    v: &Matrix,
+    v: &Mat<T>,
     cfg: &EngineConfig,
-) -> Matrix {
-    let phi_q = bank.feature_matrix(q);
-    let phi_k = bank.feature_matrix(k);
+) -> Mat<T> {
+    let phi_q = bank.feature_matrix_t::<T>(q);
+    let phi_k = bank.feature_matrix_t::<T>(k);
     chunked_causal_linear_attention(&phi_q, &phi_k, v, cfg.chunk)
 }
 
-/// End-to-end chunked causal PRF attention on the f32 hot path.
+/// [`prf_attention_chunked`] instantiated on the f32 hot path — kept
+/// under the historical name.
 pub fn prf_attention_chunked32(
     bank: &FeatureBank,
     q: &[Vec<f64>],
@@ -480,9 +360,7 @@ pub fn prf_attention_chunked32(
     v: &Matrix32,
     cfg: &EngineConfig,
 ) -> Matrix32 {
-    let phi_q = bank.feature_matrix32(q);
-    let phi_k = bank.feature_matrix32(k);
-    chunked_causal_linear_attention32(&phi_q, &phi_k, v, cfg.chunk)
+    prf_attention_chunked(bank, q, k, v, cfg)
 }
 
 // ---------------------------------------------------------------------
@@ -490,7 +368,10 @@ pub fn prf_attention_chunked32(
 // ---------------------------------------------------------------------
 
 /// One attention head's inputs: query/key rows (length `bank.dim()`) and
-/// the value matrix (one row per position).
+/// the value matrix (one row per position). Inputs always arrive in f64;
+/// the storage precision is a property of the compute path, which rounds
+/// values at the head boundary ([`Scalar::mat_from_f64`] — a borrow on
+/// the f64 path).
 #[derive(Clone)]
 pub struct Head {
     pub q: Vec<Vec<f64>>,
@@ -515,36 +396,41 @@ pub fn draw_head_banks(
         .collect()
 }
 
-/// Multi-head chunked causal attention (f64): head h runs the blocked
-/// forward under `banks[h]`, heads fan across `cfg` worker threads, and
-/// outputs come back in head order. Thread-count independent.
+/// Multi-head chunked causal attention at storage precision `T`: head h
+/// runs the blocked forward under `banks[h]`, heads fan across `cfg`
+/// worker threads, and outputs come back in head order. Thread-count
+/// independent.
+pub fn multi_head_causal_attention_t<T: Scalar>(
+    banks: &[FeatureBank],
+    heads: &[Head],
+    cfg: &EngineConfig,
+) -> Vec<Mat<T>> {
+    assert_eq!(banks.len(), heads.len(), "one bank per head");
+    let mut jobs: Vec<(&FeatureBank, &Head)> =
+        banks.iter().zip(heads).collect();
+    run_jobs(&mut jobs, cfg.worker_count(), |&mut (bank, head)| {
+        let v = T::mat_from_f64(&head.v);
+        prf_attention_chunked(bank, &head.q, &head.k, &v, cfg)
+    })
+}
+
+/// [`multi_head_causal_attention_t`] at the default f64 precision.
 pub fn multi_head_causal_attention(
     banks: &[FeatureBank],
     heads: &[Head],
     cfg: &EngineConfig,
 ) -> Vec<Matrix> {
-    assert_eq!(banks.len(), heads.len(), "one bank per head");
-    let mut jobs: Vec<(&FeatureBank, &Head)> =
-        banks.iter().zip(heads).collect();
-    run_jobs(&mut jobs, cfg.worker_count(), |&mut (bank, head)| {
-        prf_attention_chunked(bank, &head.q, &head.k, &head.v, cfg)
-    })
+    multi_head_causal_attention_t::<f64>(banks, heads, cfg)
 }
 
-/// Multi-head chunked causal attention on the f32 hot path; values are
+/// [`multi_head_causal_attention_t`] on the f32 hot path; values are
 /// rounded to f32 at the head boundary.
 pub fn multi_head_causal_attention32(
     banks: &[FeatureBank],
     heads: &[Head],
     cfg: &EngineConfig,
 ) -> Vec<Matrix32> {
-    assert_eq!(banks.len(), heads.len(), "one bank per head");
-    let mut jobs: Vec<(&FeatureBank, &Head)> =
-        banks.iter().zip(heads).collect();
-    run_jobs(&mut jobs, cfg.worker_count(), |&mut (bank, head)| {
-        let v32 = Matrix32::from_f64(&head.v);
-        prf_attention_chunked32(bank, &head.q, &head.k, &v32, cfg)
-    })
+    multi_head_causal_attention_t::<f32>(banks, heads, cfg)
 }
 
 #[cfg(test)]
@@ -673,5 +559,30 @@ mod tests {
         }
         // Distinct heads get distinct draws.
         assert_ne!(a[0].omegas(), a[1].omegas());
+    }
+
+    #[test]
+    fn generic_f64_instantiation_borrows_inputs() {
+        // multi_head at T=f64 must match the direct f64 path bitwise (the
+        // head-boundary conversion is a borrow, not a round-trip).
+        let mut rng = Pcg64::seed(3105);
+        let (l, d, dv, m) = (19, 3, 2, 8);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let banks = draw_head_banks(&est, 2, &mut Pcg64::seed(5));
+        let heads: Vec<Head> = (0..2)
+            .map(|_| Head {
+                q: rows(l, d, 0.3, &mut rng),
+                k: rows(l, d, 0.3, &mut rng),
+                v: Matrix::from_rows(&rows(l, dv, 1.0, &mut rng)),
+            })
+            .collect();
+        let cfg = EngineConfig { chunk: 4, threads: 1 };
+        let multi = multi_head_causal_attention(&banks, &heads, &cfg);
+        for (h, head) in heads.iter().enumerate() {
+            let solo = prf_attention_chunked(
+                &banks[h], &head.q, &head.k, &head.v, &cfg,
+            );
+            assert_eq!(multi[h], solo);
+        }
     }
 }

@@ -16,14 +16,19 @@
 //!   (O(d²)) rather than once per draw (O(n·d²));
 //! * positive feature matrices `Φ(X) ∈ R^{L×n}` come out of one `X·Ωᵀ`
 //!   contraction plus a row-wise exp, and kernel grams
-//!   `K̂ = Φ(Q)·Φ(K)ᵀ / n` are a single [`Matrix::matmul_transb`].
+//!   `K̂ = Φ(Q)·Φ(K)ᵀ / n` are a single [`Matrix::matmul_transb`];
+//! * both are generic over the storage precision
+//!   ([`FeatureBank::feature_matrix_t`] / [`FeatureBank::gram_t`] on any
+//!   [`Scalar`]): the contraction runs at storage width, the exponent in
+//!   [`Scalar::Accum`] (f64). `feature_matrix`/`feature_matrix32` and
+//!   `gram`/`gram32` are the f64/f32 instantiations.
 //!
 //! With a bank drawn from the same seed, [`FeatureBank::estimate`]
 //! reproduces the scalar oracle to floating-point noise for all three
 //! [`Sampling`] modes — the equivalence property `rust/tests/rfa_batch.rs`
 //! pins down.
 
-use crate::linalg::{Matrix, Matrix32};
+use crate::linalg::{Mat, Matrix, Matrix32, Scalar};
 use crate::rng::{GaussianExt, Pcg64};
 
 use super::estimators::{PrfEstimator, Sampling};
@@ -153,81 +158,73 @@ impl FeatureBank {
         }
     }
 
-    /// Positive feature matrix `Φ(X) ∈ R^{L×n}` for rows `xs`:
-    /// `Φ[l,i] = √w_i · exp(ω_i·x_l − a_{x_l})`.
+    /// Positive feature matrix `Φ(X) ∈ R^{L×n}` for rows `xs` at storage
+    /// precision `T`: `Φ[l,i] = √w_i · exp(ω_i·x_l − a_{x_l})`.
     ///
-    /// One `X·Ωᵀ` contraction materializes every projection; the per-row
-    /// normalizers are computed once each.
-    pub fn feature_matrix(&self, xs: &[Vec<f64>]) -> Matrix {
+    /// One `X·Ωᵀ` contraction in `T` materializes every projection (the
+    /// O(L·n·d) bulk, where SIMD width and memory bandwidth pay); the
+    /// per-row normalizers are computed once each, in f64, and the
+    /// exponent is evaluated in [`Scalar::Accum`] — it is a
+    /// cancellation-sensitive difference, and getting it wrong costs
+    /// *relative* error `≈ |Δ|` in every feature. Only the final feature
+    /// value is rounded to `T`. On the f64 path every conversion is the
+    /// identity (the bank's Ω is *borrowed*, not copied).
+    pub fn feature_matrix_t<T: Scalar>(&self, xs: &[Vec<f64>]) -> Mat<T> {
         let l = xs.len();
         let d = self.dim();
         let n = self.n_features();
         let mut flat = Vec::with_capacity(l * d);
         for x in xs {
             assert_eq!(x.len(), d, "feature_matrix: row dim mismatch");
-            flat.extend_from_slice(x);
+            flat.extend(x.iter().map(|&v| T::from_f64(v)));
         }
-        let x_mat = Matrix::from_vec(l, d, flat);
+        let x_mat = Mat::from_vec(l, d, flat);
+        let omegas_t = T::mat_from_f64(&self.omegas);
         // proj[l, i] = ω_i · x_l
-        let mut proj = x_mat.matmul_transb(&self.omegas);
+        let mut proj = x_mat.matmul_transb(&omegas_t);
         for (li, x) in xs.iter().enumerate() {
-            let a = self.normalizer(x);
-            for i in 0..n {
-                let v = (proj[(li, i)] - a).exp() * self.sqrt_weights[i];
-                proj[(li, i)] = v;
+            let a = <T::Accum as Scalar>::from_f64(self.normalizer(x));
+            let row = &mut proj.data_mut()[li * n..(li + 1) * n];
+            for (p, &sw) in row.iter_mut().zip(&self.sqrt_weights) {
+                let sw = <T::Accum as Scalar>::from_f64(sw);
+                *p = T::from_accum((p.to_accum() - a).exp() * sw);
             }
         }
         proj
     }
 
     /// Estimated kernel gram `K̂[i,j] ≈ κ(q_i, k_j)` for every (q, k)
-    /// pair at once: `Φ(Q)·Φ(K)ᵀ / n`, a single contraction.
+    /// pair at once: `Φ(Q)·Φ(K)ᵀ / n`, a single contraction at storage
+    /// precision `T`.
+    pub fn gram_t<T: Scalar>(
+        &self,
+        qs: &[Vec<f64>],
+        ks: &[Vec<f64>],
+    ) -> Mat<T> {
+        let phi_q = self.feature_matrix_t::<T>(qs);
+        let phi_k = self.feature_matrix_t::<T>(ks);
+        let inv_n = T::ONE / T::from_f64(self.n_features() as f64);
+        phi_q.matmul_transb(&phi_k).scale(inv_n)
+    }
+
+    /// [`Self::feature_matrix_t`] at the default f64 precision.
+    pub fn feature_matrix(&self, xs: &[Vec<f64>]) -> Matrix {
+        self.feature_matrix_t::<f64>(xs)
+    }
+
+    /// [`Self::gram_t`] at the default f64 precision.
     pub fn gram(&self, qs: &[Vec<f64>], ks: &[Vec<f64>]) -> Matrix {
-        let phi_q = self.feature_matrix(qs);
-        let phi_k = self.feature_matrix(ks);
-        phi_q.matmul_transb(&phi_k).scale(1.0 / self.n_features() as f64)
+        self.gram_t::<f64>(qs, ks)
     }
 
-    /// f32 positive feature matrix — the SIMD hot-path variant of
-    /// [`Self::feature_matrix`].
-    ///
-    /// Precision policy: the projections `ω_i·x_l` run as one f32
-    /// [`Matrix32::matmul_transb`] contraction (the O(L·n·d) bulk), but
-    /// each per-row normalizer `a_x` is computed in f64 ([`Self::
-    /// normalizer`]) and subtracted from the f64-upcast projection before
-    /// a single f64 `exp` — the exponent is a cancellation-sensitive
-    /// difference, and getting it wrong costs *relative* error `≈ |Δ|` in
-    /// every feature. Only the final feature value is rounded to f32.
+    /// [`Self::feature_matrix_t`] on the f32 SIMD hot path.
     pub fn feature_matrix32(&self, xs: &[Vec<f64>]) -> Matrix32 {
-        let l = xs.len();
-        let d = self.dim();
-        let n = self.n_features();
-        let mut flat = Vec::with_capacity(l * d);
-        for x in xs {
-            assert_eq!(x.len(), d, "feature_matrix32: row dim mismatch");
-            flat.extend(x.iter().map(|&v| v as f32));
-        }
-        let x_mat = Matrix32::from_vec(l, d, flat);
-        let omegas32 = Matrix32::from_f64(&self.omegas);
-        let mut proj = x_mat.matmul_transb(&omegas32);
-        for (li, x) in xs.iter().enumerate() {
-            let a = self.normalizer(x);
-            let row = &mut proj.data_mut()[li * n..(li + 1) * n];
-            for (p, &sw) in row.iter_mut().zip(&self.sqrt_weights) {
-                *p = ((*p as f64 - a).exp() * sw) as f32;
-            }
-        }
-        proj
+        self.feature_matrix_t::<f32>(xs)
     }
 
-    /// f32 kernel gram `Φ(Q)·Φ(K)ᵀ / n` — the hot-path variant of
-    /// [`Self::gram`]; the contraction runs entirely in f32.
+    /// [`Self::gram_t`] on the f32 SIMD hot path.
     pub fn gram32(&self, qs: &[Vec<f64>], ks: &[Vec<f64>]) -> Matrix32 {
-        let phi_q = self.feature_matrix32(qs);
-        let phi_k = self.feature_matrix32(ks);
-        phi_q
-            .matmul_transb(&phi_k)
-            .scale(1.0 / self.n_features() as f32)
+        self.gram_t::<f32>(qs, ks)
     }
 
     /// Per-draw integrand values `Z_i(q, k)` — the variance engine's

@@ -14,7 +14,10 @@
 //!   draw bank per estimator ([`features::FeatureBank`], optionally
 //!   block-orthogonal), positive feature matrices `Φ(X) ∈ R^{L×n}` with
 //!   per-row normalizers computed once per vector, and kernel grams as a
-//!   single `Φ(Q)·Φ(K)ᵀ` contraction.
+//!   single `Φ(Q)·Φ(K)ᵀ` contraction — generic over the
+//!   [`crate::linalg::Scalar`] storage precision
+//!   (`feature_matrix_t`/`gram_t`; the exponent always runs in
+//!   `Scalar::Accum`).
 //! * [`attention`] — pure-Rust linear-attention forwards over the
 //!   feature maps: non-causal and causal (FAVOR+-style running
 //!   prefix-sum state), plus an exact masked-softmax reference (the
@@ -22,10 +25,12 @@
 //!   scores).
 //! * [`engine`] — the serving-scale forward: chunk-blocked causal
 //!   evaluation (dense intra-chunk grams + per-chunk state folds,
-//!   streamable to L ≫ 10⁵ with O(n·dv) state), an f32 SIMD hot path
-//!   with a documented f64-accumulator policy, and multi-head fan-out
-//!   across `std::thread::scope` workers with deterministic per-head
-//!   bank seeding.
+//!   streamable to L ≫ 10⁵ with O(n·dv) state), written **once** as a
+//!   generic `CausalState<T: Scalar>` — the f64 path and the f32 SIMD
+//!   hot path are two instantiations of the same `forward_chunk` body
+//!   under the `Scalar::Accum` accumulation contract — plus multi-head
+//!   fan-out across `std::thread::scope` workers with deterministic
+//!   per-head bank seeding.
 //! * [`serve`] — the streaming inference-serving layer on top of
 //!   [`engine`]: per-user [`serve::Session`]s owning O(n·dv) causal
 //!   state, a budgeted [`serve::SessionPool`] with LRU
@@ -46,10 +51,14 @@
 //! The estimator layer is f64 and validates the paper's *theory* claims;
 //! [`features`] + [`attention`] carry those statistics into an O(L·m·d)
 //! attention forward, [`engine`] runs that forward at serving scale
-//! (chunked, multi-head, f32 hot path), [`serve`] is the top of the
-//! stack — the multi-tenant streaming entry point (session pool, batch
-//! scheduler, resumable snapshots) — and the AOT/JAX stack (behind the
-//! `pjrt` feature) validates the *system* claims.
+//! (chunked, multi-head, generic over the [`crate::linalg::Scalar`]
+//! storage precision), [`serve`] is the top of the stack — the
+//! multi-tenant streaming entry point (session pool, batch scheduler,
+//! resumable snapshots), dispatching the runtime `Precision` choice once
+//! at the session boundary — and the AOT/JAX stack (behind the `pjrt`
+//! feature) validates the *system* claims. Adding a storage precision
+//! (e.g. a bf16 emulation) means adding one `Scalar` impl in
+//! [`crate::linalg`]; the whole pipeline exists for it immediately.
 
 pub mod attention;
 pub mod batch;
@@ -74,8 +83,9 @@ pub use batch::{
 pub use engine::{
     chunked_causal_linear_attention, chunked_causal_linear_attention32,
     draw_head_banks, linear_attention32, multi_head_causal_attention,
-    multi_head_causal_attention32, prf_attention_chunked,
-    prf_attention_chunked32, CausalState, CausalState32, EngineConfig, Head,
+    multi_head_causal_attention32, multi_head_causal_attention_t,
+    prf_attention_chunked, prf_attention_chunked32, CausalState,
+    CausalState32, EngineConfig, Head,
 };
 pub use estimators::{exact_softmax_kernel, PrfEstimator, Sampling};
 pub use features::FeatureBank;

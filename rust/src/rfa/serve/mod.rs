@@ -19,11 +19,23 @@
 //!   back in on its next request, so a tight budget changes wall-clock,
 //!   never outputs.
 //! * [`scheduler`] — [`scheduler::BatchScheduler`]: accepts
-//!   [`scheduler::StepRequest`]s, coalesces the pending queue into one
-//!   batch per tick, and fans (session × head) work items across the
-//!   same job runner as the variance/engine fan-outs.
+//!   [`scheduler::StepRequest`]s into per-session FIFO queues, drains
+//!   the head of every non-empty queue per tick (a ready-list keeps
+//!   that O(batch), not O(backlog)), and fans (session × head) work
+//!   items across the same job runner as the variance/engine fan-outs.
 //! * [`snapshot`] — serialize/restore a session through the
 //!   [`crate::checkpoint::Checkpoint`] tensor store.
+//!
+//! # Precision dispatch: once, at the session boundary
+//!
+//! The forward stack below this module is generic over the
+//! [`crate::linalg::Scalar`] storage precision; the runtime
+//! [`session::Precision`] choice in [`session::ServeConfig`] is resolved
+//! to a compile-time scalar exactly once per code path — when a session
+//! is created, when a tick's fan-out unwraps [`session::SessionHeads`],
+//! when a snapshot is restored. Everything per-head (feature maps,
+//! chunked forwards, tensor ser/de) runs through single generic bodies;
+//! no precision `match` exists below the session boundary.
 //!
 //! # Scheduler determinism contract
 //!
@@ -67,10 +79,11 @@
 //! head{h}/z            f64[n]     running normalizer prefix
 //! ```
 //!
-//! State tensors are F64 even for f32 sessions — the f32 engine's
-//! accumulators are f64 by policy (see [`super::engine`]) — so every
-//! round-trip is exact-bits and a restored session continues its stream
-//! bitwise identically to an uninterrupted one.
+//! State tensors are F64 even for f32 sessions — the running state
+//! lives in `Scalar::Accum` (f64) for every storage precision (see
+//! [`super::engine`]) — so every round-trip is exact-bits and a restored
+//! session continues its stream bitwise identically to an uninterrupted
+//! one.
 
 pub mod scheduler;
 pub mod session;
@@ -78,6 +91,7 @@ pub mod snapshot;
 
 pub use scheduler::{BatchScheduler, StepRequest, StepResponse};
 pub use session::{
-    Precision, ServeConfig, Session, SessionPool, StepOutput,
+    HeadSlot, Precision, ServeConfig, Session, SessionHeads, SessionPool,
+    StepOutput,
 };
 pub use snapshot::{load_session, save_session};

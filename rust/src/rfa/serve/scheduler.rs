@@ -2,19 +2,31 @@
 //! batch per tick and fan (session × head) work items across worker
 //! threads.
 //!
-//! The scheduling discipline (at most one request per session per tick,
-//! earliest first; work items ordered by (arrival, head index); job-order
-//! reduction via [`crate::rfa::batch::run_jobs`]) makes every session's
-//! output stream a pure function of its seed and its own request
-//! sequence — see the determinism contract in the [`super`] module docs.
+//! Requests are held in **per-session FIFO queues** with a ready-list of
+//! `(head-of-queue seq, session id)` pairs: a tick drains the head of
+//! every non-empty queue (earliest arrival first) in O(batch) work,
+//! instead of rescanning a single global backlog — a B-deep
+//! single-session backlog no longer costs O(B) queue moves per tick.
+//! The scheduling discipline is unchanged: at most one request per
+//! session per tick, earliest first; work items ordered by (arrival,
+//! head index); job-order reduction via [`crate::rfa::batch::run_jobs`].
+//! Together these make every session's output stream a pure function of
+//! its seed and its own request sequence — see the determinism contract
+//! in the [`super`] module docs.
+//!
+//! Precision dispatch follows the session-boundary rule: the fan-out
+//! unwraps each scheduled session's [`SessionHeads`] once, collects
+//! generic [`HeadJob`]s at the pool's storage precision, and runs one
+//! generic job loop — no per-head-step precision matching.
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use anyhow::{bail, ensure, Result};
 
+use crate::linalg::{Mat, Scalar};
 use crate::rfa::engine::Head;
 
-use super::session::{HeadSlot, SessionPool, StepOutput};
+use super::session::{HeadSlot, SessionHeads, SessionPool, StepOutput};
 
 /// One streaming step for one session: a segment of per-head (q, k, v)
 /// rows to append to the session's stream. All heads must cover the same
@@ -60,23 +72,49 @@ pub struct StepResponse {
     pub outputs: Vec<StepOutput>,
 }
 
-/// Work item of one scheduling tick: one head of one scheduled session.
-struct HeadJob<'a> {
-    slot: &'a mut HeadSlot,
+/// Work item of one scheduling tick: one head of one scheduled session,
+/// at the pool's storage precision.
+struct HeadJob<'a, T: Scalar> {
+    slot: &'a mut HeadSlot<T>,
     input: &'a Head,
+}
+
+/// Run one precision's job list on the worker pool and wrap the outputs.
+fn fan_out<T: Scalar>(
+    mut jobs: Vec<HeadJob<'_, T>>,
+    workers: usize,
+    chunk: usize,
+    wrap: fn(Mat<T>) -> StepOutput,
+) -> Vec<StepOutput> {
+    crate::rfa::batch::run_jobs(&mut jobs, workers, |job: &mut HeadJob<T>| {
+        job.slot.step(job.input, chunk)
+    })
+    .into_iter()
+    .map(wrap)
+    .collect()
 }
 
 /// Coalescing batch scheduler over a [`SessionPool`].
 ///
-/// `submit` enqueues; each `tick` drains at most one request per session
-/// (earliest first), faults their sessions in, runs all (session × head)
-/// items on the worker pool, and queues the responses; `poll_responses`
-/// drains completed responses. [`BatchScheduler::run_until_idle`] is the
-/// synchronous wall-clock-free drain used by tests and benches.
+/// `submit` enqueues onto the request's per-session FIFO; each `tick`
+/// drains the head of every non-empty queue (earliest first), faults
+/// their sessions in, runs all (session × head) items on the worker
+/// pool, and queues the responses; `poll_responses` drains completed
+/// responses. [`BatchScheduler::run_until_idle`] is the synchronous
+/// wall-clock-free drain used by tests and benches.
 pub struct BatchScheduler {
     pool: SessionPool,
-    pending: VecDeque<(u64, StepRequest)>,
-    ready: VecDeque<StepResponse>,
+    /// Per-session FIFO queues of `(seq, request)` in arrival order.
+    /// Empty queues are pruned after each tick, so the map stays bounded
+    /// by the number of sessions with outstanding work.
+    queues: BTreeMap<u64, VecDeque<(u64, StepRequest)>>,
+    /// Ready-list: one `(head seq, session id)` entry per non-empty
+    /// queue. BTreeSet iteration order *is* the tick's batch order —
+    /// earliest head request first.
+    ready: BTreeSet<(u64, u64)>,
+    /// Total queued requests across all sessions.
+    pending: usize,
+    responses: VecDeque<StepResponse>,
     next_seq: u64,
 }
 
@@ -84,8 +122,10 @@ impl BatchScheduler {
     pub fn new(pool: SessionPool) -> Self {
         Self {
             pool,
-            pending: VecDeque::new(),
-            ready: VecDeque::new(),
+            queues: BTreeMap::new(),
+            ready: BTreeSet::new(),
+            pending: 0,
+            responses: VecDeque::new(),
             next_seq: 0,
         }
     }
@@ -105,7 +145,7 @@ impl BatchScheduler {
 
     /// Number of requests waiting for a tick.
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending
     }
 
     /// Validate and enqueue a request; returns its arrival sequence
@@ -149,38 +189,54 @@ impl BatchScheduler {
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.pending.push_back((seq, req));
+        let queue = self.queues.entry(req.session_id).or_default();
+        if queue.is_empty() {
+            self.ready.insert((seq, req.session_id));
+        }
+        queue.push_back((seq, req));
+        self.pending += 1;
         Ok(seq)
     }
 
     /// Run one scheduling tick; returns the number of requests completed
     /// (0 when the queue is empty). On a snapshot-IO error (eviction or
-    /// fault-in) the batch is re-queued in arrival order and the error
-    /// propagated — no request is lost.
+    /// fault-in) the batch goes back to the front of its sessions'
+    /// queues in arrival order and the error propagates — no request is
+    /// lost.
     pub fn tick(&mut self) -> Result<usize> {
-        // Coalesce: earliest pending request per distinct session. This
-        // rescans the whole queue (one shallow move per deferred entry),
-        // so draining a B-deep single-session backlog costs O(B) moves
-        // per tick; per-session FIFO queues are the upgrade path if
-        // backlogs ever reach that scale (see the ROADMAP item).
-        let mut scheduled_ids = BTreeSet::new();
-        let mut batch: Vec<(u64, StepRequest)> = Vec::new();
-        let mut rest: VecDeque<(u64, StepRequest)> = VecDeque::new();
-        while let Some((seq, req)) = self.pending.pop_front() {
-            if scheduled_ids.insert(req.session_id) {
-                batch.push((seq, req));
-            } else {
-                rest.push_back((seq, req));
-            }
+        // Batch: pop the head request of every ready session. The
+        // ready-list is ordered by head seq, so the batch comes out in
+        // arrival order without touching any deferred request.
+        let picked: Vec<(u64, u64)> =
+            std::mem::take(&mut self.ready).into_iter().collect();
+        let mut batch: Vec<(u64, StepRequest)> =
+            Vec::with_capacity(picked.len());
+        for &(seq, sid) in &picked {
+            let queue =
+                self.queues.get_mut(&sid).expect("ready session has a queue");
+            let (head_seq, req) =
+                queue.pop_front().expect("ready queue is non-empty");
+            debug_assert_eq!(head_seq, seq, "ready-list out of sync");
+            batch.push((seq, req));
         }
-        self.pending = rest;
         if batch.is_empty() {
             return Ok(0);
         }
         match self.run_batch(&batch) {
             Ok(responses) => {
                 let completed = responses.len();
-                self.ready.extend(responses);
+                self.pending -= completed;
+                self.responses.extend(responses);
+                // Re-arm the ready-list with each session's next queued
+                // request and prune emptied queues.
+                for (_, sid) in picked {
+                    if let Some(&(seq, _)) =
+                        self.queues.get(&sid).and_then(VecDeque::front)
+                    {
+                        self.ready.insert((seq, sid));
+                    }
+                }
+                self.queues.retain(|_, q| !q.is_empty());
                 // A tick pins its whole batch, so a many-session batch
                 // can legitimately overshoot the budget while running;
                 // re-enforce it now that nothing is pinned. The batch is
@@ -190,12 +246,22 @@ impl BatchScheduler {
                 Ok(completed)
             }
             Err(e) => {
-                let mut all: Vec<(u64, StepRequest)> = batch
-                    .into_iter()
-                    .chain(self.pending.drain(..))
+                // Each batch entry was its session's queue head; put it
+                // back in front and rebuild the ready-list from the
+                // (unchanged) queue heads.
+                for (seq, req) in batch {
+                    self.queues
+                        .entry(req.session_id)
+                        .or_default()
+                        .push_front((seq, req));
+                }
+                self.ready = self
+                    .queues
+                    .iter()
+                    .filter_map(|(sid, q)| {
+                        q.front().map(|&(seq, _)| (seq, *sid))
+                    })
                     .collect();
-                all.sort_by_key(|(seq, _)| *seq);
-                self.pending = all.into();
                 Err(e)
             }
         }
@@ -215,24 +281,38 @@ impl BatchScheduler {
             self.pool.ensure_resident(id, &ids)?;
         }
 
-        // Fan out: jobs ordered by (request arrival, head index).
+        // Fan out: jobs ordered by (request arrival, head index). The
+        // pool is single-precision, so every session's heads land in the
+        // same per-precision job list — the SessionHeads match below is
+        // the once-per-session dispatch of the serve contract.
         let chunk = self.pool.cfg().chunk;
         let workers = self.pool.cfg().worker_count();
         let sessions = self.pool.sessions_mut(&ids);
         let mut starts = Vec::with_capacity(batch.len());
-        let mut jobs: Vec<HeadJob> = Vec::new();
+        let mut jobs64: Vec<HeadJob<'_, f64>> = Vec::new();
+        let mut jobs32: Vec<HeadJob<'_, f32>> = Vec::new();
         for (session, (_, req)) in sessions.into_iter().zip(batch) {
-            let (start, slots) = session.begin_step(req.rows() as u64);
+            let (start, heads) = session.begin_step(req.rows() as u64);
             starts.push(start);
-            for (slot, input) in slots.iter_mut().zip(&req.heads) {
-                jobs.push(HeadJob { slot, input });
+            match heads {
+                SessionHeads::F64(slots) => {
+                    for (slot, input) in slots.iter_mut().zip(&req.heads) {
+                        jobs64.push(HeadJob { slot, input });
+                    }
+                }
+                SessionHeads::F32(slots) => {
+                    for (slot, input) in slots.iter_mut().zip(&req.heads) {
+                        jobs32.push(HeadJob { slot, input });
+                    }
+                }
             }
         }
-        let outputs = crate::rfa::batch::run_jobs(
-            &mut jobs,
-            workers,
-            |job: &mut HeadJob| job.slot.step(job.input, chunk),
-        );
+        let outputs: Vec<StepOutput> = if jobs32.is_empty() {
+            fan_out(jobs64, workers, chunk, StepOutput::F64)
+        } else {
+            debug_assert!(jobs64.is_empty(), "pool precision is uniform");
+            fan_out(jobs32, workers, chunk, StepOutput::F32)
+        };
 
         // Reassemble responses in batch order.
         let mut outputs = outputs.into_iter();
@@ -253,14 +333,14 @@ impl BatchScheduler {
     /// Drain completed responses (in completion order; `seq` identifies
     /// the request).
     pub fn poll_responses(&mut self) -> Vec<StepResponse> {
-        self.ready.drain(..).collect()
+        self.responses.drain(..).collect()
     }
 
-    /// Tick until the pending queue is empty, then drain every response —
-    /// the synchronous, wall-clock-free way to run a workload to
-    /// completion.
+    /// Tick until the pending queues are empty, then drain every
+    /// response — the synchronous, wall-clock-free way to run a workload
+    /// to completion.
     pub fn run_until_idle(&mut self) -> Result<Vec<StepResponse>> {
-        while !self.pending.is_empty() {
+        while self.pending > 0 {
             let done = self.tick()?;
             if done == 0 {
                 bail!("scheduler made no progress with non-empty queue");

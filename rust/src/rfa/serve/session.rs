@@ -6,6 +6,13 @@
 //! enforces a resident-memory budget, and evicts least-recently-used
 //! sessions to snapshots (never dropping state) so they fault back in
 //! transparently on their next request.
+//!
+//! Precision dispatch happens **once, at the session boundary**: a
+//! session's heads are a [`SessionHeads`] — one enum over the generic
+//! per-precision [`HeadSlot<T>`] vectors — and every entry point
+//! (`step`, the scheduler's fan-out, snapshots) matches on it exactly
+//! once before running generic [`crate::linalg::Scalar`] code. Nothing
+//! below the session matches on [`Precision`] again.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -13,10 +20,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::linalg::{Matrix, Matrix32};
-use crate::rfa::engine::{
-    draw_head_banks, CausalState, CausalState32, Head,
-};
+use crate::linalg::{Mat, Matrix, Matrix32, Scalar};
+use crate::rfa::engine::{draw_head_banks, CausalState, Head};
 use crate::rfa::estimators::PrfEstimator;
 use crate::rfa::features::FeatureBank;
 use crate::rng::Pcg64;
@@ -24,8 +29,8 @@ use crate::rng::Pcg64;
 use super::snapshot;
 
 /// Numeric precision of a session's forward path. The running state is
-/// f64 either way (the engine's accumulator policy); `F32` runs the
-/// chunk-local contractions on the f32 SIMD hot path.
+/// f64 either way (the engine's `Scalar::Accum` contract); `F32` runs
+/// the chunk-local contractions on the f32 SIMD hot path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     F64,
@@ -68,6 +73,10 @@ impl ServeConfig {
 }
 
 /// One head's output rows for one request, in the session's precision.
+///
+/// The accessor pair is symmetric: exactly one of [`Self::as_f64`] /
+/// [`Self::as_f32`] returns `Some` for any given output, so callers
+/// never need to pattern-match the enum directly.
 #[derive(Debug)]
 pub enum StepOutput {
     F64(Matrix),
@@ -83,14 +92,18 @@ impl StepOutput {
         }
     }
 
-    pub fn as_f64(&self) -> Option<&Matrix> {
+    /// Borrow the f64 output rows; `None` for an f32 session's output.
+    /// Symmetric counterpart of [`Self::as_f32`].
+    pub fn as_f64(&self) -> Option<&Mat<f64>> {
         match self {
             StepOutput::F64(m) => Some(m),
             StepOutput::F32(_) => None,
         }
     }
 
-    pub fn as_f32(&self) -> Option<&Matrix32> {
+    /// Borrow the f32 output rows; `None` for an f64 session's output.
+    /// Symmetric counterpart of [`Self::as_f64`].
+    pub fn as_f32(&self) -> Option<&Mat<f32>> {
         match self {
             StepOutput::F32(m) => Some(m),
             StepOutput::F64(_) => None,
@@ -107,46 +120,112 @@ impl StepOutput {
     }
 }
 
-/// Per-head running state in the session's precision.
-pub enum HeadState {
-    F64(CausalState),
-    F32(CausalState32),
-}
-
-/// One head of a session: its feature bank plus its running state. The
-/// scheduler's unit of parallel work.
-pub struct HeadSlot {
+/// One head of a session: its feature bank plus its running state at the
+/// session's storage precision. The scheduler's unit of parallel work.
+pub struct HeadSlot<T: Scalar> {
     pub(crate) bank: FeatureBank,
-    pub(crate) state: HeadState,
+    pub(crate) state: CausalState<T>,
 }
 
-impl HeadSlot {
+impl<T: Scalar> HeadSlot<T> {
     pub fn bank(&self) -> &FeatureBank {
         &self.bank
     }
 
-    pub fn state(&self) -> &HeadState {
+    pub fn state(&self) -> &CausalState<T> {
         &self.state
     }
 
     /// Advance this head by one request segment and return its output
     /// rows. Chunk blocking restarts at the segment start (the
-    /// determinism contract in the module docs).
-    pub(crate) fn step(&mut self, input: &Head, chunk: usize) -> StepOutput {
-        match &mut self.state {
-            HeadState::F64(st) => {
-                let phi_q = self.bank.feature_matrix(&input.q);
-                let phi_k = self.bank.feature_matrix(&input.k);
-                StepOutput::F64(st.forward(&phi_q, &phi_k, &input.v, chunk))
-            }
-            HeadState::F32(st) => {
-                let phi_q = self.bank.feature_matrix32(&input.q);
-                let phi_k = self.bank.feature_matrix32(&input.k);
-                let v32 = Matrix32::from_f64(&input.v);
-                StepOutput::F32(st.forward(&phi_q, &phi_k, &v32, chunk))
-            }
+    /// determinism contract in the module docs). The f64-side input
+    /// values are rounded to `T` at this boundary (a borrow on the f64
+    /// path).
+    pub(crate) fn step(&mut self, input: &Head, chunk: usize) -> Mat<T> {
+        let phi_q = self.bank.feature_matrix_t::<T>(&input.q);
+        let phi_k = self.bank.feature_matrix_t::<T>(&input.k);
+        let v = T::mat_from_f64(&input.v);
+        self.state.forward(&phi_q, &phi_k, &v, chunk)
+    }
+}
+
+/// The per-precision half of a session: every head at one compile-time
+/// storage precision. The single place the runtime [`Precision`] choice
+/// meets the generic engine — constructed once per session, matched once
+/// per entry point.
+pub enum SessionHeads {
+    F64(Vec<HeadSlot<f64>>),
+    F32(Vec<HeadSlot<f32>>),
+}
+
+impl SessionHeads {
+    pub fn len(&self) -> usize {
+        match self {
+            SessionHeads::F64(slots) => slots.len(),
+            SessionHeads::F32(slots) => slots.len(),
         }
     }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            SessionHeads::F64(_) => Precision::F64,
+            SessionHeads::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Per-head banks, precision-erased (banks are always f64 objects).
+    pub fn banks(&self) -> Vec<&FeatureBank> {
+        match self {
+            SessionHeads::F64(slots) => slots.iter().map(|s| &s.bank).collect(),
+            SessionHeads::F32(slots) => slots.iter().map(|s| &s.bank).collect(),
+        }
+    }
+}
+
+/// Build the per-precision head slots from freshly drawn banks.
+fn fresh_slots<T: Scalar>(
+    banks: Vec<FeatureBank>,
+    n: usize,
+    dv: usize,
+) -> Vec<HeadSlot<T>> {
+    banks
+        .into_iter()
+        .map(|bank| HeadSlot { bank, state: CausalState::new(n, dv) })
+        .collect()
+}
+
+/// Advance every slot by one request segment, serially, heads in order.
+fn step_slots<T: Scalar>(
+    slots: &mut [HeadSlot<T>],
+    inputs: &[Head],
+    chunk: usize,
+) -> Vec<Mat<T>> {
+    slots
+        .iter_mut()
+        .zip(inputs)
+        .map(|(slot, input)| slot.step(input, chunk))
+        .collect()
+}
+
+/// Resident bytes of a slot vector: per-head bank (omegas, weights,
+/// √weights, optional Σ) plus running state (`Scalar::Accum` = f64
+/// accumulators in every precision).
+fn slots_bytes<T: Scalar>(slots: &[HeadSlot<T>], dv: usize) -> usize {
+    const F64_BYTES: usize = std::mem::size_of::<f64>();
+    slots
+        .iter()
+        .map(|h| {
+            let (n, d) = (h.bank.n_features(), h.bank.dim());
+            let bank = n * d + 2 * n
+                + h.bank.norm_sigma().map_or(0, |s| s.rows() * s.cols());
+            let state = n * dv + n;
+            (bank + state) * F64_BYTES
+        })
+        .sum()
 }
 
 /// One streaming user: per-head banks + causal states, a monotone
@@ -155,34 +234,28 @@ pub struct Session {
     id: u64,
     seed: u64,
     position: u64,
-    precision: Precision,
     dv: usize,
-    heads: Vec<HeadSlot>,
+    heads: SessionHeads,
 }
 
 impl Session {
     /// Fresh session: banks drawn via [`draw_head_banks`] from the
     /// session seed (bank h is a pure function of (seed, h)), all states
-    /// zero.
+    /// zero. The one precision dispatch of the session's lifetime
+    /// happens here.
     pub(crate) fn new(id: u64, seed: u64, cfg: &ServeConfig) -> Self {
         let banks =
             draw_head_banks(&cfg.est, cfg.n_heads, &mut Pcg64::seed(seed));
         let n = cfg.est.m;
-        let heads = banks
-            .into_iter()
-            .map(|bank| HeadSlot {
-                bank,
-                state: match cfg.precision {
-                    Precision::F64 => {
-                        HeadState::F64(CausalState::new(n, cfg.dv))
-                    }
-                    Precision::F32 => {
-                        HeadState::F32(CausalState32::new(n, cfg.dv))
-                    }
-                },
-            })
-            .collect();
-        Self { id, seed, position: 0, precision: cfg.precision, dv: cfg.dv, heads }
+        let heads = match cfg.precision {
+            Precision::F64 => {
+                SessionHeads::F64(fresh_slots(banks, n, cfg.dv))
+            }
+            Precision::F32 => {
+                SessionHeads::F32(fresh_slots(banks, n, cfg.dv))
+            }
+        };
+        Self { id, seed, position: 0, dv: cfg.dv, heads }
     }
 
     /// Reassemble a session from restored parts (the snapshot path).
@@ -190,11 +263,10 @@ impl Session {
         id: u64,
         seed: u64,
         position: u64,
-        precision: Precision,
         dv: usize,
-        heads: Vec<HeadSlot>,
+        heads: SessionHeads,
     ) -> Self {
-        Self { id, seed, position, precision, dv, heads }
+        Self { id, seed, position, dv, heads }
     }
 
     pub fn id(&self) -> u64 {
@@ -210,8 +282,9 @@ impl Session {
         self.position
     }
 
+    /// The session's storage precision (a property of its head slots).
     pub fn precision(&self) -> Precision {
-        self.precision
+        self.heads.precision()
     }
 
     pub fn n_heads(&self) -> usize {
@@ -222,7 +295,7 @@ impl Session {
         self.dv
     }
 
-    pub fn heads(&self) -> &[HeadSlot] {
+    pub fn heads(&self) -> &SessionHeads {
         &self.heads
     }
 
@@ -233,27 +306,21 @@ impl Session {
     /// Start one request of `rows` positions: bumps the position counter
     /// and hands out the head slots for the scheduler's fan-out. Returns
     /// the stream position of the request's first row.
-    pub(crate) fn begin_step(&mut self, rows: u64) -> (u64, &mut [HeadSlot]) {
+    pub(crate) fn begin_step(
+        &mut self,
+        rows: u64,
+    ) -> (u64, &mut SessionHeads) {
         let start = self.position;
         self.position += rows;
         (start, &mut self.heads)
     }
 
-    /// Resident bytes of this session: per-head bank (omegas, weights,
-    /// √weights, optional Σ) plus running state (f64 accumulators in
-    /// both precisions).
+    /// Resident bytes of this session (banks + running state).
     pub fn state_bytes(&self) -> usize {
-        const F64_BYTES: usize = std::mem::size_of::<f64>();
-        self.heads
-            .iter()
-            .map(|h| {
-                let (n, d) = (h.bank.n_features(), h.bank.dim());
-                let bank = n * d + 2 * n
-                    + h.bank.norm_sigma().map_or(0, |s| s.rows() * s.cols());
-                let state = n * self.dv + n;
-                (bank + state) * F64_BYTES
-            })
-            .sum()
+        match &self.heads {
+            SessionHeads::F64(slots) => slots_bytes(slots, self.dv),
+            SessionHeads::F32(slots) => slots_bytes(slots, self.dv),
+        }
     }
 
     /// Advance every head by one request segment, serially, heads in
@@ -267,12 +334,16 @@ impl Session {
             inputs.iter().all(|h| h.v.rows() == rows),
             "all heads of a request must cover the same positions"
         );
-        let out: Vec<StepOutput> = self
-            .heads
-            .iter_mut()
-            .zip(inputs)
-            .map(|(slot, input)| slot.step(input, chunk))
-            .collect();
+        let out: Vec<StepOutput> = match &mut self.heads {
+            SessionHeads::F64(slots) => step_slots(slots, inputs, chunk)
+                .into_iter()
+                .map(StepOutput::F64)
+                .collect(),
+            SessionHeads::F32(slots) => step_slots(slots, inputs, chunk)
+                .into_iter()
+                .map(StepOutput::F32)
+                .collect(),
+        };
         self.advance(rows as u64);
         out
     }

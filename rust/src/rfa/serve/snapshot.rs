@@ -4,21 +4,27 @@
 //! position, precision, geometry) as `u32` tensors, bank matrices and
 //! running state as `f64` tensors — see the naming scheme in the
 //! [`super`] module docs. Everything numeric is stored at full f64
-//! width (the f32 engine's accumulators are f64 by policy), so
-//! save → load → continue is bitwise identical to never having
-//! snapshotted, the resumability property `rust/tests/rfa_serve.rs`
-//! pins.
+//! width: the engine's `Scalar::Accum` contract keeps the running state
+//! in f64 accumulators for *every* storage precision, so every
+//! round-trip is exact-bits and a restored session continues its stream
+//! bitwise identically — the resumability property
+//! `rust/tests/rfa_serve.rs` pins.
+//!
+//! Precision dispatch follows the session-boundary rule: serialization
+//! reads the session's [`SessionHeads`] once, restoration matches the
+//! stored precision tag once, and everything per-head runs through the
+//! generic [`insert_heads`]/[`read_heads`] bodies.
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{Checkpoint, Tensor};
-use crate::linalg::Matrix;
-use crate::rfa::engine::{CausalState, CausalState32};
+use crate::linalg::{Matrix, Scalar};
+use crate::rfa::engine::CausalState;
 use crate::rfa::features::FeatureBank;
 
-use super::session::{HeadSlot, HeadState, Precision, Session};
+use super::session::{HeadSlot, Precision, Session, SessionHeads};
 
 /// Schema version stored under `session/version`.
 pub const SNAPSHOT_VERSION: u32 = 1;
@@ -36,30 +42,15 @@ fn read_scalar_u32(ck: &Checkpoint, name: &str) -> Result<u32> {
     Ok(ck.require_u32(name, &[1])?[0])
 }
 
-/// Serialize a session into a checkpoint.
-pub fn session_checkpoint(session: &Session) -> Checkpoint {
-    let mut ck = Checkpoint::new();
-    ck.insert(
-        "session/version",
-        Tensor::from_u32(vec![1], &[SNAPSHOT_VERSION]),
-    );
-    ck.insert("session/id", u64_tensor(session.id()));
-    ck.insert("session/seed", u64_tensor(session.seed()));
-    ck.insert("session/position", u64_tensor(session.position()));
-    let precision = match session.precision() {
-        Precision::F64 => 0u32,
-        Precision::F32 => 1u32,
-    };
-    ck.insert("session/precision", Tensor::from_u32(vec![1], &[precision]));
-    ck.insert(
-        "session/n_heads",
-        Tensor::from_u32(vec![1], &[session.n_heads() as u32]),
-    );
-    ck.insert(
-        "session/dv",
-        Tensor::from_u32(vec![1], &[session.dv() as u32]),
-    );
-    for (h, slot) in session.heads().iter().enumerate() {
+/// Write one precision's head slots into the checkpoint — the generic
+/// half of serialization. The `Accum = f64` bound *is* the format
+/// guarantee: state tensors are f64 for every storage precision.
+fn insert_heads<T: Scalar<Accum = f64>>(
+    ck: &mut Checkpoint,
+    slots: &[HeadSlot<T>],
+    dv: usize,
+) {
+    for (h, slot) in slots.iter().enumerate() {
         let bank = slot.bank();
         let (n, d) = (bank.n_features(), bank.dim());
         ck.insert(
@@ -76,43 +67,22 @@ pub fn session_checkpoint(session: &Session) -> Checkpoint {
                 Tensor::from_f64(vec![d, d], sigma.data()),
             );
         }
-        let (s, z) = match slot.state() {
-            HeadState::F64(st) => (st.state().data(), st.z()),
-            HeadState::F32(st) => (st.state(), st.z()),
-        };
+        let state = slot.state();
         ck.insert(
             format!("head{h}/state"),
-            Tensor::from_f64(vec![n, session.dv()], s),
+            Tensor::from_f64(vec![n, dv], state.state().data()),
         );
-        ck.insert(format!("head{h}/z"), Tensor::from_f64(vec![n], z));
+        ck.insert(format!("head{h}/z"), Tensor::from_f64(vec![n], state.z()));
     }
-    ck
 }
 
-/// Rebuild a session from a checkpoint, validating every tensor's dtype
-/// and shape (descriptive errors, never panics, on malformed input).
-pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
-    let version = read_scalar_u32(ck, "session/version")?;
-    if version != SNAPSHOT_VERSION {
-        bail!("unsupported session snapshot version {version}");
-    }
-    let id = read_u64(ck, "session/id")?;
-    let seed = read_u64(ck, "session/seed")?;
-    let position = read_u64(ck, "session/position")?;
-    let precision = match read_scalar_u32(ck, "session/precision")? {
-        0 => Precision::F64,
-        1 => Precision::F32,
-        p => bail!("unknown precision tag {p} in session snapshot"),
-    };
-    let n_heads = read_scalar_u32(ck, "session/n_heads")? as usize;
-    let dv = read_scalar_u32(ck, "session/dv")? as usize;
-    // Sanity-bound the header before allocating anything sized by it: a
-    // malformed (but CRC-valid) file must surface as an error, not an
-    // abort inside a huge Vec::with_capacity.
-    if n_heads > 4096 {
-        bail!("implausible head count {n_heads} in session snapshot");
-    }
-
+/// Read `n_heads` head slots back at storage precision `T` — the generic
+/// half of restoration, validating every tensor's dtype and shape.
+fn read_heads<T: Scalar<Accum = f64>>(
+    ck: &Checkpoint,
+    n_heads: usize,
+    dv: usize,
+) -> Result<Vec<HeadSlot<T>>> {
     let mut heads = Vec::with_capacity(n_heads);
     for h in 0..n_heads {
         let omegas_t = ck.require(&format!("head{h}/bank/omegas"))?;
@@ -143,18 +113,77 @@ pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
 
         let s = ck.require_f64(&format!("head{h}/state"), &[n, dv])?;
         let z = ck.require_f64(&format!("head{h}/z"), &[n])?;
-        let state = match precision {
-            Precision::F64 => HeadState::F64(CausalState::from_parts(
-                Matrix::from_vec(n, dv, s),
-                z,
-            )),
-            Precision::F32 => {
-                HeadState::F32(CausalState32::from_parts(n, dv, s, z))
-            }
-        };
+        let state = CausalState::from_parts(Matrix::from_vec(n, dv, s), z);
         heads.push(HeadSlot { bank, state });
     }
-    Ok(Session::from_parts(id, seed, position, precision, dv, heads))
+    Ok(heads)
+}
+
+/// Serialize a session into a checkpoint.
+pub fn session_checkpoint(session: &Session) -> Checkpoint {
+    let mut ck = Checkpoint::new();
+    ck.insert(
+        "session/version",
+        Tensor::from_u32(vec![1], &[SNAPSHOT_VERSION]),
+    );
+    ck.insert("session/id", u64_tensor(session.id()));
+    ck.insert("session/seed", u64_tensor(session.seed()));
+    ck.insert("session/position", u64_tensor(session.position()));
+    let precision = match session.precision() {
+        Precision::F64 => 0u32,
+        Precision::F32 => 1u32,
+    };
+    ck.insert("session/precision", Tensor::from_u32(vec![1], &[precision]));
+    ck.insert(
+        "session/n_heads",
+        Tensor::from_u32(vec![1], &[session.n_heads() as u32]),
+    );
+    ck.insert(
+        "session/dv",
+        Tensor::from_u32(vec![1], &[session.dv() as u32]),
+    );
+    match session.heads() {
+        SessionHeads::F64(slots) => insert_heads(&mut ck, slots, session.dv()),
+        SessionHeads::F32(slots) => insert_heads(&mut ck, slots, session.dv()),
+    }
+    ck
+}
+
+/// Rebuild a session from a checkpoint, validating every tensor's dtype
+/// and shape (descriptive errors, never panics, on malformed input).
+pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
+    let version = read_scalar_u32(ck, "session/version")?;
+    if version != SNAPSHOT_VERSION {
+        bail!("unsupported session snapshot version {version}");
+    }
+    let id = read_u64(ck, "session/id")?;
+    let seed = read_u64(ck, "session/seed")?;
+    let position = read_u64(ck, "session/position")?;
+    let precision = match read_scalar_u32(ck, "session/precision")? {
+        0 => Precision::F64,
+        1 => Precision::F32,
+        p => bail!("unknown precision tag {p} in session snapshot"),
+    };
+    let n_heads = read_scalar_u32(ck, "session/n_heads")? as usize;
+    let dv = read_scalar_u32(ck, "session/dv")? as usize;
+    // Sanity-bound the header before allocating anything sized by it: a
+    // malformed (but CRC-valid) file must surface as an error, not an
+    // abort inside a huge Vec::with_capacity.
+    if n_heads > 4096 {
+        bail!("implausible head count {n_heads} in session snapshot");
+    }
+
+    // The stored precision tag resolves to a compile-time Scalar exactly
+    // once, here; everything per-head below is generic.
+    let heads = match precision {
+        Precision::F64 => {
+            SessionHeads::F64(read_heads::<f64>(ck, n_heads, dv)?)
+        }
+        Precision::F32 => {
+            SessionHeads::F32(read_heads::<f32>(ck, n_heads, dv)?)
+        }
+    };
+    Ok(Session::from_parts(id, seed, position, dv, heads))
 }
 
 /// Snapshot a session to `path` (DKFT: magic, version, crc — see

@@ -1,0 +1,448 @@
+//! Golden-value regression suite for the generic `Scalar` refactor: the
+//! generic `Mat<f64>` path must reproduce the pre-refactor f64 stack
+//! bitwise, and the generic `Mat<f32>` path must reproduce the
+//! pre-refactor `CausalState32` semantics bitwise (including the
+//! once-per-chunk f32 state rounding).
+//!
+//! The golden values are **frozen transliterations of the pre-refactor
+//! implementations**, carried verbatim in this file rather than as
+//! captured literals (the refactoring environment had no Rust toolchain
+//! to execute the pre-refactor build; a transliterated reference is the
+//! same pin, and it stays meaningful for every future input). The frozen
+//! code deliberately avoids the crate's linalg kernels:
+//!
+//! * `dot4`/`dot8` are byte-for-byte copies of the pre-refactor
+//!   `dot_unrolled`/`dot32` unrolled kernels (their accumulator split is
+//!   part of the bit pattern);
+//! * dense contractions use naive ascending-index loops, which the
+//!   pre-refactor tiled kernels documented (and tested) as
+//!   bitwise-identical — per output element the accumulation order is
+//!   the same ascending `k`;
+//! * the f64 and f32 forward bodies below are line-by-line
+//!   transliterations of the two (now deleted) duplicated
+//!   `forward_chunk` bodies and the two `feature_matrix{,32}` bodies,
+//!   association order included (e.g. the `z` fold adds the *completed*
+//!   chunk column-sum, never per-row increments).
+//!
+//! Pinned at L=512 for chunk ∈ {1, 7, 64} and heads ∈ {1, 4}, exactly
+//! the acceptance grid of the refactor issue, for isotropic and
+//! data-aware banks.
+
+use darkformer::rfa::engine::{
+    draw_head_banks, multi_head_causal_attention,
+    multi_head_causal_attention32, EngineConfig, Head,
+};
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
+use darkformer::rfa::{FeatureBank, PrfEstimator};
+use darkformer::rng::{GaussianExt, Pcg64};
+
+const L: usize = 512;
+const D: usize = 8;
+const DV: usize = 4;
+const M: usize = 32;
+const BANK_SEED: u64 = 0x601d;
+const INPUT_SEED: u64 = 0x5eed;
+
+// ---------------------------------------------------------------------
+// Frozen kernels (pre-refactor `dot_unrolled` / `dot32`, verbatim)
+// ---------------------------------------------------------------------
+
+fn dot4(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for (a, (&x, &y)) in acc.iter_mut().zip(xa.iter().zip(xb)) {
+            *a += x * y;
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+        + tail
+}
+
+// ---------------------------------------------------------------------
+// Frozen pre-refactor feature maps
+// ---------------------------------------------------------------------
+
+/// Pre-refactor `FeatureBank::normalizer` (unchanged by the refactor but
+/// transliterated anyway so the frozen path shares nothing with the
+/// crate's compute code).
+fn frozen_normalizer(bank: &FeatureBank, x: &[f64]) -> f64 {
+    match bank.norm_sigma() {
+        Some(sigma) => {
+            let sx: Vec<f64> = (0..sigma.rows())
+                .map(|r| {
+                    sigma.row(r).iter().zip(x).map(|(a, b)| a * b).sum()
+                })
+                .collect();
+            0.5 * x.iter().zip(&sx).map(|(a, b)| a * b).sum::<f64>()
+        }
+        None => 0.5 * x.iter().map(|a| a * a).sum::<f64>(),
+    }
+}
+
+/// Pre-refactor `feature_matrix`: `X·Ωᵀ` row dots (dot4), f64 exp, √w
+/// scaling. Returns a flat row-major `l×n` buffer.
+fn frozen_feature_matrix64(bank: &FeatureBank, xs: &[Vec<f64>]) -> Vec<f64> {
+    let n = bank.n_features();
+    let sqrt_w: Vec<f64> = bank.weights().iter().map(|w| w.sqrt()).collect();
+    let mut phi = vec![0.0f64; xs.len() * n];
+    for (li, x) in xs.iter().enumerate() {
+        let a = frozen_normalizer(bank, x);
+        for i in 0..n {
+            let p = dot4(x, bank.omegas().row(i));
+            phi[li * n + i] = (p - a).exp() * sqrt_w[i];
+        }
+    }
+    phi
+}
+
+/// Pre-refactor `feature_matrix32`: f32 projection (dot8 over rounded
+/// inputs and omegas), f64 normalizer/exp, f32 store.
+fn frozen_feature_matrix32(bank: &FeatureBank, xs: &[Vec<f64>]) -> Vec<f32> {
+    let (n, d) = (bank.n_features(), bank.dim());
+    let sqrt_w: Vec<f64> = bank.weights().iter().map(|w| w.sqrt()).collect();
+    let omegas32: Vec<f32> =
+        bank.omegas().data().iter().map(|&x| x as f32).collect();
+    let mut phi = vec![0.0f32; xs.len() * n];
+    for (li, x) in xs.iter().enumerate() {
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let a = frozen_normalizer(bank, x);
+        for i in 0..n {
+            let p = dot8(&x32, &omegas32[i * d..(i + 1) * d]);
+            phi[li * n + i] = ((p as f64 - a).exp() * sqrt_w[i]) as f32;
+        }
+    }
+    phi
+}
+
+// ---------------------------------------------------------------------
+// Frozen pre-refactor chunked causal forwards
+// ---------------------------------------------------------------------
+
+/// Pre-refactor f64 `CausalState::forward`: chunk blocking over an f64
+/// state, tiled contractions replaced by their documented
+/// bitwise-identical ascending-index forms. `phi_q`/`phi_k` are `l×n`
+/// and `v` is `l×dv`, all flat row-major.
+fn frozen_forward64(
+    phi_q: &[f64],
+    phi_k: &[f64],
+    v: &[f64],
+    l: usize,
+    n: usize,
+    dv: usize,
+    chunk: usize,
+) -> Vec<f64> {
+    let chunk = chunk.max(1);
+    let mut s = vec![0.0f64; n * dv];
+    let mut z = vec![0.0f64; n];
+    let mut out = vec![0.0f64; l * dv];
+    let mut b = 0;
+    while b < l {
+        let e = (b + chunk).min(l);
+        // Inter-chunk: out_c = Φ(Q_c)·S (ascending k per element, as the
+        // tiled matmul accumulated), denom = Φ(Q_c)·z (sequential, as
+        // `matvec` computed it).
+        let mut denom = vec![0.0f64; e - b];
+        for t in b..e {
+            let qrow = &phi_q[t * n..(t + 1) * n];
+            for c in 0..dv {
+                let mut acc = 0.0f64;
+                for (k, &q) in qrow.iter().enumerate() {
+                    acc += q * s[k * dv + c];
+                }
+                out[t * dv + c] = acc;
+            }
+            denom[t - b] = qrow.iter().zip(&z).map(|(a, bb)| a * bb).sum();
+        }
+        // Intra-chunk masked gram: position t sees keys j ≤ t.
+        for t in b..e {
+            let qrow = &phi_q[t * n..(t + 1) * n];
+            let mut acc = 0.0f64;
+            for j in b..=t {
+                let g = dot4(qrow, &phi_k[j * n..(j + 1) * n]);
+                acc += g;
+                for c in 0..dv {
+                    out[t * dv + c] += g * v[j * dv + c];
+                }
+            }
+            denom[t - b] += acc;
+        }
+        // State fold: the chunk summaries are completed first (ascending
+        // row, from zero), then folded into the running state with one
+        // addition each — `s += matmul_transa(...)`, `z += col_sums()`.
+        let mut summary = vec![0.0f64; n * dv];
+        let mut col_sums = vec![0.0f64; n];
+        for r in b..e {
+            let krow = &phi_k[r * n..(r + 1) * n];
+            for (i, &a) in krow.iter().enumerate() {
+                for c in 0..dv {
+                    summary[i * dv + c] += a * v[r * dv + c];
+                }
+            }
+            for (cs, &a) in col_sums.iter_mut().zip(krow) {
+                *cs += a;
+            }
+        }
+        for (si, &x) in s.iter_mut().zip(&summary) {
+            *si += x;
+        }
+        for (zi, &x) in z.iter_mut().zip(&col_sums) {
+            *zi += x;
+        }
+        // Normalize the chunk's rows.
+        for t in b..e {
+            let d = denom[t - b];
+            for c in 0..dv {
+                out[t * dv + c] /= d;
+            }
+        }
+        b = e;
+    }
+    out
+}
+
+/// Pre-refactor f32 `CausalState32::forward`: f32 chunk-local compute,
+/// f64 running `S`/`z` and denominators, state rounded to f32 once per
+/// chunk, outputs normalized in f64 and stored f32.
+fn frozen_forward32(
+    phi_q: &[f32],
+    phi_k: &[f32],
+    v: &[f32],
+    l: usize,
+    n: usize,
+    dv: usize,
+    chunk: usize,
+) -> Vec<f32> {
+    let chunk = chunk.max(1);
+    let mut s = vec![0.0f64; n * dv];
+    let mut z = vec![0.0f64; n];
+    let mut out = vec![0.0f32; l * dv];
+    let mut b = 0;
+    while b < l {
+        let e = (b + chunk).min(l);
+        // One rounding of the running state per chunk.
+        let s32: Vec<f32> = s.iter().map(|&x| x as f32).collect();
+        let z32: Vec<f32> = z.iter().map(|&x| x as f32).collect();
+        // Inter-chunk readout in f32 (ascending k, as the f32 tiled
+        // matmul accumulated); denominators accumulate in f64 over the
+        // rounded z.
+        let mut denom = vec![0.0f64; e - b];
+        for t in b..e {
+            let qrow = &phi_q[t * n..(t + 1) * n];
+            for c in 0..dv {
+                let mut acc = 0.0f32;
+                for (k, &q) in qrow.iter().enumerate() {
+                    acc += q * s32[k * dv + c];
+                }
+                out[t * dv + c] = acc;
+            }
+            denom[t - b] = qrow
+                .iter()
+                .zip(&z32)
+                .map(|(&a, &bb)| a as f64 * bb as f64)
+                .sum();
+        }
+        // Intra-chunk masked gram in f32; per-row totals in f64.
+        for t in b..e {
+            let qrow = &phi_q[t * n..(t + 1) * n];
+            let mut acc = 0.0f64;
+            for j in b..=t {
+                let g = dot8(qrow, &phi_k[j * n..(j + 1) * n]);
+                acc += g as f64;
+                for c in 0..dv {
+                    out[t * dv + c] += g * v[j * dv + c];
+                }
+            }
+            denom[t - b] += acc;
+        }
+        // Chunk summaries in f32 / col sums in f64 (both completed
+        // first, ascending row), folded into the f64 state once.
+        let mut summary = vec![0.0f32; n * dv];
+        let mut col_sums = vec![0.0f64; n];
+        for r in b..e {
+            let krow = &phi_k[r * n..(r + 1) * n];
+            for (i, &a) in krow.iter().enumerate() {
+                for c in 0..dv {
+                    summary[i * dv + c] += a * v[r * dv + c];
+                }
+            }
+            for (cs, &a) in col_sums.iter_mut().zip(krow) {
+                *cs += a as f64;
+            }
+        }
+        for (si, &x) in s.iter_mut().zip(&summary) {
+            *si += x as f64;
+        }
+        for (zi, &x) in z.iter_mut().zip(&col_sums) {
+            *zi += x;
+        }
+        // Normalize in f64, store f32.
+        for t in b..e {
+            let d = denom[t - b];
+            for c in 0..dv {
+                out[t * dv + c] = (out[t * dv + c] as f64 / d) as f32;
+            }
+        }
+        b = e;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+fn estimators() -> Vec<(&'static str, PrfEstimator)> {
+    let sigma = anisotropic_covariance(D, 0.7, 0.5, &mut Pcg64::seed(17));
+    vec![
+        ("isotropic", PrfEstimator::new(D, M, Sampling::Isotropic)),
+        (
+            "data_aware",
+            PrfEstimator::new(
+                D,
+                M,
+                Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+            ),
+        ),
+    ]
+}
+
+fn head_inputs(n_heads: usize) -> Vec<Head> {
+    let mut rng = Pcg64::seed(INPUT_SEED + n_heads as u64);
+    (0..n_heads)
+        .map(|_| Head {
+            q: rows(L, D, 0.2, &mut rng),
+            k: rows(L, D, 0.2, &mut rng),
+            v: darkformer::linalg::Matrix::from_rows(&rows(
+                L, DV, 1.0, &mut rng,
+            )),
+        })
+        .collect()
+}
+
+#[test]
+fn generic_f64_path_matches_frozen_pre_refactor_bitwise() {
+    for (mode, est) in estimators() {
+        for n_heads in [1usize, 4] {
+            let banks =
+                draw_head_banks(&est, n_heads, &mut Pcg64::seed(BANK_SEED));
+            let heads = head_inputs(n_heads);
+            for chunk in [1usize, 7, 64] {
+                let cfg = EngineConfig { chunk, threads: 1 };
+                let got = multi_head_causal_attention(&banks, &heads, &cfg);
+                for (h, (bank, head)) in
+                    banks.iter().zip(&heads).enumerate()
+                {
+                    let phi_q = frozen_feature_matrix64(bank, &head.q);
+                    let phi_k = frozen_feature_matrix64(bank, &head.k);
+                    let want = frozen_forward64(
+                        &phi_q,
+                        &phi_k,
+                        head.v.data(),
+                        L,
+                        M,
+                        DV,
+                        chunk,
+                    );
+                    assert_eq!(
+                        got[h].data(),
+                        &want[..],
+                        "{mode} heads={n_heads} chunk={chunk} head={h}: \
+                         generic f64 path is not bitwise the pre-refactor \
+                         f64 path"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn generic_f32_path_matches_frozen_pre_refactor_bitwise() {
+    for (mode, est) in estimators() {
+        for n_heads in [1usize, 4] {
+            let banks =
+                draw_head_banks(&est, n_heads, &mut Pcg64::seed(BANK_SEED));
+            let heads = head_inputs(n_heads);
+            for chunk in [1usize, 7, 64] {
+                let cfg = EngineConfig { chunk, threads: 1 };
+                let got = multi_head_causal_attention32(&banks, &heads, &cfg);
+                for (h, (bank, head)) in
+                    banks.iter().zip(&heads).enumerate()
+                {
+                    let phi_q = frozen_feature_matrix32(bank, &head.q);
+                    let phi_k = frozen_feature_matrix32(bank, &head.k);
+                    // Pre-refactor head boundary: v rounded to f32.
+                    let v32: Vec<f32> = head
+                        .v
+                        .data()
+                        .iter()
+                        .map(|&x| x as f32)
+                        .collect();
+                    let want = frozen_forward32(
+                        &phi_q, &phi_k, &v32, L, M, DV, chunk,
+                    );
+                    assert_eq!(
+                        got[h].data(),
+                        &want[..],
+                        "{mode} heads={n_heads} chunk={chunk} head={h}: \
+                         generic f32 path is not bitwise the pre-refactor \
+                         CausalState32 semantics"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn generic_feature_maps_match_frozen_pre_refactor_bitwise() {
+    // The feature-map layer alone, both precisions: Mat<T> instantiations
+    // vs the frozen `feature_matrix{,32}` bodies.
+    for (mode, est) in estimators() {
+        let bank = FeatureBank::draw(&est, &mut Pcg64::seed(BANK_SEED));
+        let xs = rows(33, D, 0.3, &mut Pcg64::seed(0xfea7));
+        let phi64 = bank.feature_matrix(&xs);
+        assert_eq!(
+            phi64.data(),
+            &frozen_feature_matrix64(&bank, &xs)[..],
+            "{mode}: generic f64 feature map drifted"
+        );
+        let phi32 = bank.feature_matrix32(&xs);
+        assert_eq!(
+            phi32.data(),
+            &frozen_feature_matrix32(&bank, &xs)[..],
+            "{mode}: generic f32 feature map drifted"
+        );
+    }
+}

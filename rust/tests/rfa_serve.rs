@@ -10,6 +10,12 @@
 //!     uninterrupted stream;
 //! (c) LRU eviction under a tight memory budget changes wall-clock
 //!     behavior only — never any session's outputs.
+//!
+//! Every scheduler property runs under **both** `Precision` variants
+//! through shared precision-parameterized helpers
+//! ([`check_scheduler_matches_serial`], [`check_lru_eviction_transparent`])
+//! — comparisons go through exact f64 widening, which is injective, so
+//! equality of widened outputs is bitwise equality of the raw outputs.
 
 use std::path::PathBuf;
 
@@ -110,11 +116,26 @@ fn slice_heads(heads: &[Head], b: usize, e: usize) -> Vec<Head> {
 }
 
 /// Serial single-tenant reference: same bank seeding as the pool, one
-/// monolithic multi-head forward over the whole stream.
-fn serial_reference(est: &PrfEstimator, bank_seed: u64, heads: &[Head]) -> Vec<Matrix> {
+/// monolithic multi-head forward over the whole stream at the requested
+/// precision, widened to f64 for comparison (widening is exact, so
+/// equality in f64 is bitwise equality of the raw outputs).
+fn serial_reference(
+    est: &PrfEstimator,
+    bank_seed: u64,
+    heads: &[Head],
+    precision: Precision,
+) -> Vec<Matrix> {
     let banks = draw_head_banks(est, N_HEADS, &mut Pcg64::seed(bank_seed));
     let cfg = EngineConfig { chunk: CHUNK, threads: 1 };
-    multi_head_causal_attention(&banks, heads, &cfg)
+    match precision {
+        Precision::F64 => multi_head_causal_attention(&banks, heads, &cfg),
+        Precision::F32 => {
+            multi_head_causal_attention32(&banks, heads, &cfg)
+                .into_iter()
+                .map(|m| m.to_f64())
+                .collect()
+        }
+    }
 }
 
 /// Drive `n_sessions` interleaved streams through a scheduler and return
@@ -177,23 +198,29 @@ fn run_scheduled(
 
 // ---------------------------------------------------------------- (a)
 
-#[test]
-fn scheduler_matches_serial_reference_across_threads() {
+/// Shared scheduler property at one precision: scheduled outputs are
+/// bitwise the serial single-tenant forward, per session, for every
+/// worker count × arrival interleaving. Doubles as the thread-count
+/// independence check (both worker counts must match the same
+/// reference).
+fn check_scheduler_matches_serial(precision: Precision, tag: &str) {
     let bank_seeds = [11u64, 22, 33];
     let streams: Vec<Vec<Head>> =
         (0..3).map(|s| stream_inputs(5000 + s)).collect();
     let expected: Vec<Vec<Matrix>> = bank_seeds
         .iter()
         .zip(&streams)
-        .map(|(seed, stream)| serial_reference(&iso_est(), *seed, stream))
+        .map(|(seed, stream)| {
+            serial_reference(&iso_est(), *seed, stream, precision)
+        })
         .collect();
 
     for threads in [1usize, 4] {
         for interleave in [true, false] {
-            let dir = snapshot_dir("sched_serial");
+            let dir = snapshot_dir(tag);
             let mut pool = SessionPool::new(cfg(
                 iso_est(),
-                Precision::F64,
+                precision,
                 threads,
                 0,
                 dir,
@@ -212,9 +239,9 @@ fn scheduler_matches_serial_reference_across_threads() {
                 {
                     assert_eq!(
                         g, w,
-                        "threads={threads} interleave={interleave}: \
-                         session {s} head {h} diverged from the serial \
-                         reference"
+                        "{precision:?} threads={threads} \
+                         interleave={interleave}: session {s} head {h} \
+                         diverged from the serial reference"
                     );
                 }
             }
@@ -223,52 +250,53 @@ fn scheduler_matches_serial_reference_across_threads() {
 }
 
 #[test]
-fn scheduler_f32_is_thread_count_independent_and_matches_serial() {
-    let bank_seed = 77u64;
-    let stream = stream_inputs(6001);
-    // Serial f32 reference over the whole stream.
-    let banks =
-        draw_head_banks(&iso_est(), N_HEADS, &mut Pcg64::seed(bank_seed));
-    let ecfg = EngineConfig { chunk: CHUNK, threads: 1 };
-    let reference = multi_head_causal_attention32(&banks, &stream, &ecfg);
+fn scheduler_matches_serial_reference_f64() {
+    check_scheduler_matches_serial(Precision::F64, "sched_serial_f64");
+}
 
-    let mut per_thread_outputs = Vec::new();
-    for threads in [1usize, 4] {
-        let dir = snapshot_dir("sched_f32");
-        let mut pool = SessionPool::new(cfg(
-            iso_est(),
-            Precision::F32,
-            threads,
-            0,
-            dir,
-        ));
-        let id = pool.create_session(bank_seed).unwrap();
-        let mut sched = BatchScheduler::new(pool);
-        for r in 0..N_REQUESTS {
-            let heads = slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK);
-            sched.submit(StepRequest { session_id: id, heads }).unwrap();
-        }
-        let mut responses = sched.run_until_idle().unwrap();
-        responses.sort_by_key(|r| r.seq);
-        // Reassemble per-head f32 rows.
-        let mut heads_data: Vec<Vec<f32>> = vec![Vec::new(); N_HEADS];
-        for resp in &responses {
-            for (h, out) in resp.outputs.iter().enumerate() {
-                heads_data[h]
-                    .extend_from_slice(out.as_f32().unwrap().data());
-            }
-        }
-        per_thread_outputs.push(heads_data);
+#[test]
+fn scheduler_matches_serial_reference_f32() {
+    check_scheduler_matches_serial(Precision::F32, "sched_serial_f32");
+}
+
+#[test]
+fn deep_single_session_backlog_drains_in_arrival_order() {
+    // The per-session FIFO scheduler: a B-deep backlog for one session
+    // completes exactly one request per tick, in arrival order, and the
+    // reassembled stream still equals the serial reference.
+    let stream = stream_inputs(6001);
+    let dir = snapshot_dir("fifo_backlog");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F64, 1, 0, dir));
+    let id = pool.create_session(77).unwrap();
+    let mut sched = BatchScheduler::new(pool);
+    let mut seqs = Vec::new();
+    for r in 0..N_REQUESTS {
+        let heads = slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK);
+        seqs.push(sched.submit(StepRequest { session_id: id, heads }).unwrap());
     }
-    assert_eq!(
-        per_thread_outputs[0], per_thread_outputs[1],
-        "f32 scheduler output depends on worker count"
-    );
-    for (h, reference_head) in reference.iter().enumerate() {
+    assert_eq!(sched.pending_len(), N_REQUESTS);
+    let mut responses = Vec::new();
+    for done in 0..N_REQUESTS {
+        assert_eq!(sched.tick().unwrap(), 1, "one request per tick");
+        assert_eq!(sched.pending_len(), N_REQUESTS - done - 1);
+        responses.extend(sched.poll_responses());
+    }
+    assert_eq!(sched.tick().unwrap(), 0, "idle scheduler completes nothing");
+    let got_seqs: Vec<u64> = responses.iter().map(|r| r.seq).collect();
+    assert_eq!(got_seqs, seqs, "backlog must drain in arrival order");
+    let expected = serial_reference(&iso_est(), 77, &stream, Precision::F64);
+    let mut heads_data: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for resp in &responses {
+        for (h, out) in resp.outputs.iter().enumerate() {
+            heads_data[h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    for (h, want) in expected.iter().enumerate() {
         assert_eq!(
-            per_thread_outputs[0][h],
-            reference_head.data(),
-            "f32 head {h} diverged from the serial engine"
+            heads_data[h],
+            want.data(),
+            "head {h}: FIFO-drained stream diverged from serial"
         );
     }
 }
@@ -392,10 +420,12 @@ fn snapshot_file_round_trips_metadata_and_rejects_corruption() {
     assert_eq!(restored.n_heads(), N_HEADS);
     // Restored banks carry the Σ geometry bit-for-bit.
     let original = pool.session_mut(id).unwrap();
-    for (a, b) in original.heads().iter().zip(restored.heads()) {
-        assert_eq!(a.bank().omegas(), b.bank().omegas());
-        assert_eq!(a.bank().weights(), b.bank().weights());
-        assert_eq!(a.bank().norm_sigma(), b.bank().norm_sigma());
+    for (a, b) in
+        original.heads().banks().into_iter().zip(restored.heads().banks())
+    {
+        assert_eq!(a.omegas(), b.omegas());
+        assert_eq!(a.weights(), b.weights());
+        assert_eq!(a.norm_sigma(), b.norm_sigma());
     }
 
     // Flip one byte: the load must fail with a described error.
@@ -412,8 +442,10 @@ fn snapshot_file_round_trips_metadata_and_rejects_corruption() {
 
 // ---------------------------------------------------------------- (c)
 
-#[test]
-fn lru_eviction_never_changes_outputs() {
+/// Shared eviction property at one precision: a budget of exactly one
+/// session (forcing churn on every cross-session switch) changes no
+/// session's outputs.
+fn check_lru_eviction_transparent(precision: Precision, tag: &str) {
     let bank_seeds = [301u64, 302, 303];
     let streams: Vec<Vec<Head>> =
         (0..3).map(|s| stream_inputs(8000 + s)).collect();
@@ -421,9 +453,9 @@ fn lru_eviction_never_changes_outputs() {
     // Size the budget to exactly one session so every cross-session
     // switch forces an eviction + restore.
     let one_session_bytes = {
-        let dir = snapshot_dir("budget_probe");
+        let dir = snapshot_dir(&format!("{tag}_probe"));
         let mut pool =
-            SessionPool::new(cfg(iso_est(), Precision::F64, 1, 0, dir));
+            SessionPool::new(cfg(iso_est(), precision, 1, 0, dir));
         let id = pool.create_session(1).unwrap();
         pool.session_mut(id).unwrap().state_bytes()
     };
@@ -432,7 +464,7 @@ fn lru_eviction_never_changes_outputs() {
         let dir = snapshot_dir(tag);
         let mut pool = SessionPool::new(cfg(
             iso_est(),
-            Precision::F64,
+            precision,
             2,
             budget,
             dir,
@@ -482,16 +514,27 @@ fn lru_eviction_never_changes_outputs() {
             .collect()
     };
 
-    let generous = run(0, "lru_generous");
-    let tight = run(one_session_bytes, "lru_tight");
+    let generous = run(0, &format!("{tag}_generous"));
+    let tight = run(one_session_bytes, &format!("{tag}_tight"));
     for s in 0..3 {
         for h in 0..N_HEADS {
             assert_eq!(
                 generous[s][h], tight[s][h],
-                "session {s} head {h}: eviction churn changed outputs"
+                "{precision:?} session {s} head {h}: eviction churn \
+                 changed outputs"
             );
         }
     }
+}
+
+#[test]
+fn lru_eviction_never_changes_outputs_f64() {
+    check_lru_eviction_transparent(Precision::F64, "lru_f64");
+}
+
+#[test]
+fn lru_eviction_never_changes_outputs_f32() {
+    check_lru_eviction_transparent(Precision::F32, "lru_f32");
 }
 
 // ------------------------------------------------------------- errors
