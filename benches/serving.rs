@@ -6,8 +6,14 @@
 //! Emits `BENCH_serving.json`. Headline metrics:
 //! `tokens_per_sec_s{1,8,32}_{f64,f32}` (scheduled positions per second
 //! at each concurrency), `serve_thread_scaling_s8_f32` (1 worker vs all
-//! cores on the same workload) and `eviction_churn_slowdown_s8_f32`
-//! (sequential per-session drains with snapshot churn vs without).
+//! cores on the same workload), `eviction_churn_slowdown_s8_f32`
+//! (sequential per-session drains with snapshot churn vs without),
+//! and the covariance-drift pair: `online_vs_static_variance`
+//! (across-seed output variance of a static data-aware bank over the
+//! drifted half of the stream, divided by the online-resampling
+//! variance — > 1 means adapting the bank beats freezing it) with
+//! `online_resample_overhead_f64` (wall-clock cost of the resampling
+//! machinery on the same workload).
 //!
 //! Run: `cargo bench --bench serving`.
 
@@ -15,8 +21,12 @@ use darkformer::bench::BenchSuite;
 use darkformer::linalg::Matrix;
 use darkformer::rfa::engine::Head;
 use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::gaussian::{
+    anisotropic_covariance, MultivariateGaussian,
+};
 use darkformer::rfa::serve::{
-    BatchScheduler, Precision, ServeConfig, SessionPool, StepRequest,
+    BatchScheduler, Precision, ResampleConfig, ServeConfig, SessionPool,
+    StepRequest,
 };
 use darkformer::rfa::PrfEstimator;
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -49,6 +59,7 @@ fn serve_config(
         memory_budget,
         snapshot_dir: std::env::temp_dir()
             .join(format!("serving_bench_{}", std::process::id())),
+        resample: None,
     }
 }
 
@@ -66,6 +77,111 @@ fn session_inputs(n_sessions: usize) -> Vec<Vec<Head>> {
                 .collect()
         })
         .collect()
+}
+
+// ------------------------------------------ covariance-drift scenario
+
+const DRIFT_SEG: usize = 64;
+const DRIFT_ROUNDS: usize = 8;
+const DRIFT_SEEDS: u64 = 8;
+
+/// `(1-t)·A + t·B` — the key distribution sliding from A's geometry to
+/// B's over the stream.
+fn mixed_cov(a: &Matrix, b: &Matrix, t: f64) -> Matrix {
+    let mut out = a.scale(1.0 - t);
+    let bt = b.scale(t);
+    for i in 0..out.rows() {
+        for j in 0..out.cols() {
+            out[(i, j)] += bt[(i, j)];
+        }
+    }
+    out
+}
+
+/// The drift endpoints: two differently-rotated anisotropic covariances.
+fn drift_covariances() -> (Matrix, Matrix) {
+    let mut rng = Pcg64::seed(0xc0f);
+    (
+        anisotropic_covariance(D, 0.6, 0.45, &mut rng),
+        anisotropic_covariance(D, 0.6, 0.45, &mut rng),
+    )
+}
+
+/// One fixed drifting stream (shared across every bank seed): segment
+/// `r` draws its queries and keys from `mixed_cov(A, B, r/(R-1))`.
+fn drift_stream(cov_a: &Matrix, cov_b: &Matrix) -> Vec<Vec<Head>> {
+    let mut rng = Pcg64::seed(0xd21f7);
+    (0..DRIFT_ROUNDS)
+        .map(|r| {
+            let t = r as f64 / (DRIFT_ROUNDS - 1) as f64;
+            let g = MultivariateGaussian::new(mixed_cov(cov_a, cov_b, t))
+                .expect("mixed covariance stays SPD");
+            (0..N_HEADS)
+                .map(|_| Head {
+                    q: (0..DRIFT_SEG).map(|_| g.sample(&mut rng)).collect(),
+                    k: (0..DRIFT_SEG).map(|_| g.sample(&mut rng)).collect(),
+                    v: Matrix::from_rows(&rows(DRIFT_SEG, DV, 0.5, &mut rng)),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Stream the drifting segments through one session and return the
+/// flattened outputs of the second (fully drifted) half. Both arms
+/// start from the same data-aware estimator against the start
+/// covariance A; `resample` turns the online adaptation on.
+fn drift_run(
+    cov_a: &Matrix,
+    stream: &[Vec<Head>],
+    resample: Option<ResampleConfig>,
+    seed: u64,
+) -> Vec<f64> {
+    let cfg = ServeConfig {
+        est: PrfEstimator::new(
+            D,
+            M,
+            Sampling::DataAware(
+                MultivariateGaussian::new(cov_a.clone()).unwrap(),
+            ),
+        ),
+        n_heads: N_HEADS,
+        dv: DV,
+        precision: Precision::F64,
+        chunk: CHUNK,
+        threads: 1,
+        memory_budget: 0,
+        snapshot_dir: std::env::temp_dir()
+            .join(format!("serving_drift_{}", std::process::id())),
+        resample,
+    };
+    let mut pool = SessionPool::new(cfg);
+    let id = pool.create_session(seed).unwrap();
+    let mut tail = Vec::new();
+    for (r, heads) in stream.iter().enumerate() {
+        let outs = pool.session_mut(id).unwrap().step(heads, CHUNK);
+        if r >= DRIFT_ROUNDS / 2 {
+            for out in &outs {
+                tail.extend_from_slice(out.to_f64().data());
+            }
+        }
+    }
+    tail
+}
+
+/// Mean per-element variance across runs (each run = one bank seed over
+/// the identical input stream) — the estimator-variance the paper's
+/// data-aware argument is about, measured at serving time.
+fn mean_variance(runs: &[Vec<f64>]) -> f64 {
+    let n = runs.len() as f64;
+    let len = runs[0].len();
+    let mut acc = 0.0;
+    for i in 0..len {
+        let mean = runs.iter().map(|r| r[i]).sum::<f64>() / n;
+        acc += runs.iter().map(|r| (r[i] - mean).powi(2)).sum::<f64>()
+            / (n - 1.0);
+    }
+    acc / len as f64
 }
 
 fn precision_tag(p: Precision) -> &'static str {
@@ -225,6 +341,55 @@ fn main() {
         "eviction/restore churn slowdown (8 sessions, 1-session budget): \
          {:.2}x",
         churn / no_churn
+    );
+
+    // Covariance drift: the key distribution slides from Σ_A to Σ_B
+    // over 8 segments. A bank frozen against Σ_A is mis-matched on the
+    // second half; online resampling re-draws against the streamed
+    // estimate every segment. Lower across-seed variance on the drifted
+    // half = better-conditioned estimator.
+    let rc = ResampleConfig {
+        epoch_positions: DRIFT_SEG as u64,
+        max_epochs: DRIFT_ROUNDS,
+        shrinkage: 0.05,
+    };
+    let (cov_a, cov_b) = drift_covariances();
+    let stream = drift_stream(&cov_a, &cov_b);
+    let static_runs: Vec<Vec<f64>> = (0..DRIFT_SEEDS)
+        .map(|s| drift_run(&cov_a, &stream, None, 9000 + s))
+        .collect();
+    let online_runs: Vec<Vec<f64>> = (0..DRIFT_SEEDS)
+        .map(|s| drift_run(&cov_a, &stream, Some(rc.clone()), 9000 + s))
+        .collect();
+    let var_static = mean_variance(&static_runs);
+    let var_online = mean_variance(&online_runs);
+    suite.metric("drift_variance_static_bank", var_static);
+    suite.metric("drift_variance_online_bank", var_online);
+    suite.metric("online_vs_static_variance", var_static / var_online);
+    println!(
+        "\ncovariance drift ({DRIFT_SEEDS} seeds, {DRIFT_ROUNDS} segments \
+         of {DRIFT_SEG}): static bank variance {var_static:.3e}, online \
+         {var_online:.3e} — {:.2}x in favor of online",
+        var_static / var_online
+    );
+
+    // What the adaptation costs: the same drifting workload with and
+    // without the per-segment moment tracking + redraw.
+    let t_static = suite.bench("serve/f64/drift/static", 1, 3, || {
+        std::hint::black_box(drift_run(&cov_a, &stream, None, 1));
+    });
+    let t_online = suite.bench("serve/f64/drift/online", 1, 3, || {
+        std::hint::black_box(drift_run(
+            &cov_a,
+            &stream,
+            Some(rc.clone()),
+            1,
+        ));
+    });
+    suite.metric("online_resample_overhead_f64", t_online / t_static);
+    println!(
+        "online resampling overhead (f64, K={DRIFT_SEG}): {:.2}x",
+        t_online / t_static
     );
 
     if let Err(e) = suite.write() {

@@ -44,6 +44,7 @@ fn main() {
             threads: 0,
             memory_budget: 0,
             snapshot_dir: snapshot_dir.clone(),
+            resample: None,
         };
         let mut pool = SessionPool::new(cfg);
         let id = pool.create_session(0).unwrap();
@@ -60,6 +61,7 @@ fn main() {
         threads: 0,
         memory_budget: budget,
         snapshot_dir,
+        resample: None,
     };
     println!(
         "serve demo: {n_sessions} streams × {rounds} rounds × {seg} \

@@ -165,16 +165,32 @@ impl<T: Scalar> CausalState<T> {
         Self { s, z }
     }
 
-    /// Process one chunk: returns the normalized attention rows for the
-    /// chunk's positions and folds the chunk's key/value summaries into
-    /// the running state. The single forward body of the whole stack —
-    /// see the module docs for the `Scalar::Accum` contract it encodes.
-    pub fn forward_chunk(
+    /// Frozen readout of the current prefix against a chunk of queries:
+    /// `(Φ(Q)·S, Φ(Q)·z)` at storage width, denominators in Accum. Does
+    /// **not** mutate the state — the multi-epoch combine in
+    /// [`crate::rfa::serve`] calls this on frozen `(bank, S, z)` triples
+    /// whose prefixes stopped advancing at their epoch boundary. Uses the
+    /// exact ops (and rounding) of the inter-chunk readout inside
+    /// [`Self::forward_chunk`].
+    pub fn readout(&self, phi_q: &Mat<T>) -> (Mat<T>, Vec<T::Accum>) {
+        assert_eq!(phi_q.cols(), self.s.rows(), "phi_q feature dim mismatch");
+        let s_t = T::mat_from_accum(&self.s);
+        let z_t = T::slice_from_accum(&self.z);
+        (phi_q.matmul(&s_t), phi_q.matvec_accum(&z_t))
+    }
+
+    /// [`Self::forward_chunk`] minus the final normalization: returns the
+    /// *unnormalized* numerator rows (storage width) and the per-row
+    /// denominators (Accum), and folds the chunk into the running state.
+    /// The multi-epoch serving combine sums these across epoch readouts
+    /// before dividing once; [`Self::forward_chunk`] is exactly this plus
+    /// the single-epoch division, so the split changes no bits.
+    pub fn forward_chunk_unnormalized(
         &mut self,
         phi_q: &Mat<T>,
         phi_k: &Mat<T>,
         v: &Mat<T>,
-    ) -> Mat<T> {
+    ) -> (Mat<T>, Vec<T::Accum>) {
         let (n, dv) = (self.s.rows(), self.s.cols());
         assert_eq!(phi_q.cols(), n, "phi_q feature dim mismatch");
         assert_eq!(phi_k.cols(), n, "phi_k feature dim mismatch");
@@ -220,14 +236,60 @@ impl<T: Scalar> CausalState<T> {
             *z += x;
         }
 
+        (out, denom)
+    }
+
+    /// Process one chunk: returns the normalized attention rows for the
+    /// chunk's positions and folds the chunk's key/value summaries into
+    /// the running state. The single forward body of the whole stack —
+    /// see the module docs for the `Scalar::Accum` contract it encodes.
+    pub fn forward_chunk(
+        &mut self,
+        phi_q: &Mat<T>,
+        phi_k: &Mat<T>,
+        v: &Mat<T>,
+    ) -> Mat<T> {
+        let (mut out, denom) =
+            self.forward_chunk_unnormalized(phi_q, phi_k, v);
+
         // Normalize in Accum, store T — one output rounding.
-        for t in 0..c {
+        for t in 0..phi_q.rows() {
             let d = denom[t];
             for o in out.row_mut(t) {
                 *o = T::from_accum(o.to_accum() / d);
             }
         }
         out
+    }
+
+    /// [`Self::forward`] minus the normalization: slice a segment into
+    /// `chunk`-row blocks, return the concatenated unnormalized numerators
+    /// and denominators. Chunk blocking restarts at the segment start,
+    /// matching [`Self::forward`]'s reassociation exactly.
+    pub fn forward_unnormalized(
+        &mut self,
+        phi_q: &Mat<T>,
+        phi_k: &Mat<T>,
+        v: &Mat<T>,
+        chunk: usize,
+    ) -> (Mat<T>, Vec<T::Accum>) {
+        let (l, dv) = (phi_q.rows(), self.s.cols());
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(l, dv);
+        let mut denom = Vec::with_capacity(l);
+        let mut b = 0;
+        while b < l {
+            let e = (b + chunk).min(l);
+            let (block, block_denom) = self.forward_chunk_unnormalized(
+                &phi_q.row_block(b, e),
+                &phi_k.row_block(b, e),
+                &v.row_block(b, e),
+            );
+            out.data_mut()[b * dv..e * dv].copy_from_slice(block.data());
+            denom.extend(block_denom);
+            b = e;
+        }
+        (out, denom)
     }
 
     /// Process an arbitrary-length segment by slicing it into `chunk`-row
@@ -496,6 +558,69 @@ mod tests {
         }
         assert_eq!(b, l);
         assert_eq!(streamed, one_shot, "streaming must be bitwise one-shot");
+    }
+
+    #[test]
+    fn unnormalized_split_is_bitwise_forward() {
+        // forward_chunk = forward_chunk_unnormalized + the divide, and
+        // readout never mutates — the identities the serving layer's
+        // epoch combine ([`crate::rfa::serve`]) is built on.
+        let mut rng = Pcg64::seed(3104);
+        let (l, d, dv, m) = (19, 4, 3, 16);
+        let est = PrfEstimator::new(d, m, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&est, &mut rng);
+        let phi_q = bank.feature_matrix(&rows(l, d, 0.3, &mut rng));
+        let phi_k = bank.feature_matrix(&rows(l, d, 0.3, &mut rng));
+        let v = Matrix::from_rows(&rows(l, dv, 1.0, &mut rng));
+
+        let mut state_a = CausalState::new(m, dv);
+        let normalized = state_a.forward_chunk(&phi_q, &phi_k, &v);
+
+        let mut state_b = CausalState::new(m, dv);
+        let (mut num, den) =
+            state_b.forward_chunk_unnormalized(&phi_q, &phi_k, &v);
+        for t in 0..l {
+            for o in num.row_mut(t) {
+                *o /= den[t];
+            }
+        }
+        assert_eq!(
+            normalized, num,
+            "normalize(unnormalized) must be bitwise forward_chunk"
+        );
+        // Both states folded the same keys → identical prefixes.
+        assert_eq!(state_a.state(), state_b.state());
+        assert_eq!(state_a.z(), state_b.z());
+
+        // readout against the folded prefix is pure: calling it twice
+        // gives identical results and leaves the state untouched.
+        let (s_before, z_before) =
+            (state_b.state().clone(), state_b.z().to_vec());
+        let (n1, d1) = state_b.readout(&phi_q);
+        let (n2, d2) = state_b.readout(&phi_q);
+        assert_eq!(n1, n2);
+        assert_eq!(d1, d2);
+        assert_eq!(state_b.state(), &s_before);
+        assert_eq!(state_b.z(), z_before.as_slice());
+
+        // And the blocked unnormalized walk normalizes to the blocked
+        // forward, bit for bit (normalization never feeds the state).
+        let mut state_c = CausalState::new(m, dv);
+        let (mut num_blocked, den_blocked) =
+            state_c.forward_unnormalized(&phi_q, &phi_k, &v, 7);
+        assert_eq!(den_blocked.len(), l);
+        for t in 0..l {
+            for o in num_blocked.row_mut(t) {
+                *o /= den_blocked[t];
+            }
+        }
+        let mut state_d = CausalState::new(m, dv);
+        let blocked = state_d.forward(&phi_q, &phi_k, &v, 7);
+        assert_eq!(
+            num_blocked, blocked,
+            "blocked unnormalized walk must normalize to forward()"
+        );
+        assert_eq!(state_c.state(), state_d.state());
     }
 
     #[test]

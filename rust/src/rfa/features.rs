@@ -32,6 +32,7 @@ use crate::linalg::{Mat, Matrix, Matrix32, Scalar};
 use crate::rng::{GaussianExt, Pcg64};
 
 use super::estimators::{PrfEstimator, Sampling};
+use super::gaussian::MultivariateGaussian;
 use super::orthogonal::orthogonal_gaussian_block;
 
 /// A shared bank of `n` projection draws for one estimator geometry.
@@ -63,6 +64,20 @@ impl FeatureBank {
         // One flat standard-normal matrix; row-major fill consumes the rng
         // in the same order as n sequential gaussian_vec(d) calls.
         Self::from_whitened(est, Matrix::from_vec(n, d, rng.gaussian_vec(n * d)))
+    }
+
+    /// Draw an `m`-feature data-aware bank directly against a covariance —
+    /// the serving layer's online-resampling entry point, where each
+    /// epoch's Σ̂ comes from a streaming second-moment estimate rather
+    /// than a pre-built estimator.
+    pub fn draw_data_aware(
+        m: usize,
+        gauss: MultivariateGaussian,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let d = gauss.dim();
+        let est = PrfEstimator::new(d, m, Sampling::DataAware(gauss));
+        Self::draw(&est, rng)
     }
 
     /// Block-orthogonal bank (Performer's ORF coupling) in the estimator's

@@ -101,6 +101,84 @@ pub fn random_orthogonal(d: usize, rng: &mut Pcg64) -> Matrix {
     q
 }
 
+/// Streaming (unnormalized) second-moment accumulator `C = Σ_j x_j·x_jᵀ`,
+/// folded one rank-1 update per observation — the online estimate the
+/// serving layer's bank resampling ([`crate::rfa::serve`]) tracks per
+/// head. `C` and the count are plain f64 sums in observation order, so
+/// the accumulator is bit-deterministic for a given stream and snapshots
+/// exactly (see [`Self::from_parts`]).
+#[derive(Debug, Clone)]
+pub struct SecondMomentAccumulator {
+    sum: Matrix,
+    count: u64,
+}
+
+impl SecondMomentAccumulator {
+    /// Fresh all-zero accumulator for `d`-dimensional observations.
+    pub fn new(d: usize) -> Self {
+        Self { sum: Matrix::zeros(d, d), count: 0 }
+    }
+
+    /// Rebuild from snapshotted parts ([`Self::sum`], [`Self::count`]) —
+    /// bitwise, since the state is exactly these two fields.
+    pub fn from_parts(sum: Matrix, count: u64) -> Self {
+        assert_eq!(sum.rows(), sum.cols(), "second moment must be square");
+        Self { sum, count }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sum.rows()
+    }
+
+    /// Observations folded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The unnormalized running sum `Σ_j x_j·x_jᵀ`.
+    pub fn sum(&self) -> &Matrix {
+        &self.sum
+    }
+
+    /// Fold one observation: `C += x·xᵀ` (rank-1, exploiting symmetry).
+    pub fn accumulate(&mut self, x: &[f64]) {
+        let d = self.dim();
+        assert_eq!(x.len(), d, "observation dim mismatch");
+        for i in 0..d {
+            let xi = x[i];
+            for j in i..d {
+                let v = xi * x[j];
+                self.sum[(i, j)] += v;
+                if j != i {
+                    self.sum[(j, i)] += v;
+                }
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Shrinkage estimate of the second moment:
+    /// `Σ̂ = (1-λ)·C/count + λ·I`, which is symmetric positive definite
+    /// for any `λ ∈ (0, 1]` (the raw `C/count` is PSD, the identity floor
+    /// makes it PD even before `count ≥ d` observations arrive).
+    pub fn shrunk_estimate(&self, lambda: f64) -> Matrix {
+        assert!(
+            lambda > 0.0 && lambda <= 1.0,
+            "shrinkage must be in (0, 1], got {lambda}"
+        );
+        let d = self.dim();
+        let mut est = if self.count == 0 {
+            Matrix::zeros(d, d)
+        } else {
+            self.sum.scale((1.0 - lambda) / self.count as f64)
+        };
+        for i in 0..d {
+            est[(i, i)] += lambda;
+        }
+        est
+    }
+}
+
 /// Empirical covariance of a sample set (rows are observations).
 pub fn empirical_covariance(samples: &[Vec<f64>]) -> Matrix {
     let n = samples.len();
@@ -169,6 +247,62 @@ mod tests {
         let min = *vals.last().unwrap();
         assert!((max - 0.2 * 1.6).abs() < 1e-9);
         assert!((min - 0.2 * 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn second_moment_accumulator_matches_direct_sum() {
+        let mut rng = Pcg64::seed(91);
+        let d = 5;
+        let xs: Vec<Vec<f64>> =
+            (0..37).map(|_| rng.gaussian_vec(d)).collect();
+        let mut acc = SecondMomentAccumulator::new(d);
+        for x in &xs {
+            acc.accumulate(x);
+        }
+        let mut direct = Matrix::zeros(d, d);
+        for x in &xs {
+            for i in 0..d {
+                for j in 0..d {
+                    direct[(i, j)] += x[i] * x[j];
+                }
+            }
+        }
+        assert_eq!(acc.count(), 37);
+        // Same order of adds per entry → bitwise, not approximately.
+        for i in 0..d {
+            for j in 0..d {
+                assert_eq!(acc.sum()[(i, j)], direct[(i, j)]);
+                assert_eq!(acc.sum()[(i, j)], acc.sum()[(j, i)]);
+            }
+        }
+        let rebuilt =
+            SecondMomentAccumulator::from_parts(acc.sum().clone(), 37);
+        assert_eq!(rebuilt.sum(), acc.sum());
+        assert_eq!(rebuilt.count(), acc.count());
+    }
+
+    #[test]
+    fn shrunk_estimate_is_spd_even_underdetermined() {
+        let mut rng = Pcg64::seed(92);
+        let d = 6;
+        // Fewer observations than dimensions: the raw C/count is rank
+        // deficient, but the identity floor must keep Σ̂ Cholesky-able.
+        let mut acc = SecondMomentAccumulator::new(d);
+        for _ in 0..3 {
+            acc.accumulate(&rng.gaussian_vec(d));
+        }
+        for lambda in [1e-3, 0.05, 1.0] {
+            let est = acc.shrunk_estimate(lambda);
+            assert!(
+                MultivariateGaussian::new(est).is_some(),
+                "λ={lambda}: shrunk estimate is not SPD"
+            );
+        }
+        // Even a fresh accumulator gives λ·I — still SPD.
+        let empty = SecondMomentAccumulator::new(d);
+        assert!(
+            MultivariateGaussian::new(empty.shrunk_estimate(0.05)).is_some()
+        );
     }
 
     #[test]

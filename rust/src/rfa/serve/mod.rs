@@ -60,18 +60,63 @@
 //! lengths are multiples of `chunk` is bitwise identical to one
 //! monolithic evaluation (the engine's streaming property).
 //!
+//! # Online bank resampling: the epoch contract
+//!
+//! With [`session::ResampleConfig`] set, each head adapts its bank to
+//! the keys it actually sees — the paper's data-aware kernel made
+//! streaming. Per head the session maintains a second-moment estimate
+//! `C = Σ k_j·k_jᵀ` (rank-1 updates folded in stream order), and at
+//! every **epoch boundary** — the fixed absolute stream positions
+//! `K, 2K, 3K, …` with `K = epoch_positions` — it:
+//!
+//! 1. forms `Σ̂ = (1-λ)·C/count + λ·I` (shrinkage keeps Σ̂ SPD; one
+//!    O(d³) Cholesky per epoch),
+//! 2. **freezes** the current `(bank, S, z)` triple, and
+//! 3. redraws a data-aware bank against Σ̂, seeded by a pure function of
+//!    `(session_seed, head, epoch)` — no RNG state carries across
+//!    epochs, so restores cannot perturb future draws.
+//!
+//! Of the two sound designs — restart the attention window at the
+//! boundary, or freeze-and-combine — this module implements
+//! **freeze-and-combine**: the causal prefix `S, z` is only meaningful
+//! in the feature space it was accumulated in, so each epoch keeps its
+//! own triple, queries take a [`super::engine::CausalState::readout`]
+//! against every retained frozen triple plus the live one, and the
+//! per-epoch *unnormalized* numerators and denominators are summed
+//! (frozen epochs oldest-first, live epoch last, in `Scalar::Accum`)
+//! before the single normalization divide. Each epoch is an unbiased
+//! estimator of its own segment's kernel attention, so the combined
+//! readout keeps the full window without rewriting history. Memory is
+//! bounded by `max_epochs`: the oldest frozen triple is dropped beyond
+//! the cap, which removes that epoch's keys from the attention window —
+//! a sliding-window approximation, applied deterministically at
+//! boundaries.
+//!
+//! The determinism contract extends unchanged: epoch boundaries are
+//! absolute positions (independent of how the stream is sliced into
+//! requests — a boundary mid-segment splits the segment internally),
+//! the bank redraw depends only on `(seed, head, epoch)` and the keys
+//! before the boundary, and all resample state snapshots exactly. So
+//! outputs remain a pure function of `(seed, per-session request
+//! order)` across thread counts, tick boundaries, and eviction — now
+//! across resample epochs too. With `resample: None` the serving path
+//! is bitwise identical to the pre-resampling stack, and an enabled
+//! path changes no bits before its first boundary (the combine of one
+//! live epoch is exact).
+//!
 //! # Snapshot tensor naming scheme
 //!
 //! A session snapshot is a DKFT checkpoint with names:
 //!
 //! ```text
-//! session/version      u32[1]   snapshot schema version (1)
+//! session/version      u32[1]   snapshot schema version (2; v1 still loads)
 //! session/id           u32[2]   u64 as [lo, hi]
 //! session/seed         u32[2]   bank-draw seed as [lo, hi]
 //! session/position     u32[2]   stream position as [lo, hi]
 //! session/precision    u32[1]   0 = f64, 1 = f32
 //! session/n_heads      u32[1]
 //! session/dv           u32[1]
+//! session/resample     u32[1]   1 = online resampling, 0 = static banks
 //! head{h}/bank/omegas  f64[n, d]
 //! head{h}/bank/weights f64[n]
 //! head{h}/bank/sigma   f64[d, d]  (data-aware banks only)
@@ -79,11 +124,29 @@
 //! head{h}/z            f64[n]     running normalizer prefix
 //! ```
 //!
+//! and, when `session/resample` is 1 (all added in schema version 2):
+//!
+//! ```text
+//! session/resample/epoch_positions  u32[2]   K as [lo, hi]
+//! session/resample/max_epochs       u32[1]
+//! session/resample/shrinkage        f64[1]
+//! head{h}/online/epoch              u32[2]   completed resamples [lo, hi]
+//! head{h}/online/count              u32[2]   keys folded into C [lo, hi]
+//! head{h}/online/cov_sum            f64[d, d] the running C = Σ k·kᵀ
+//! head{h}/online/n_frozen           u32[1]
+//! head{h}/frozen{j}/bank/omegas     f64[n, d]  (j oldest-first)
+//! head{h}/frozen{j}/bank/weights    f64[n]
+//! head{h}/frozen{j}/bank/sigma      f64[d, d]  (data-aware banks only)
+//! head{h}/frozen{j}/state           f64[n, dv] frozen S
+//! head{h}/frozen{j}/z               f64[n]     frozen z
+//! ```
+//!
 //! State tensors are F64 even for f32 sessions — the running state
 //! lives in `Scalar::Accum` (f64) for every storage precision (see
 //! [`super::engine`]) — so every round-trip is exact-bits and a restored
 //! session continues its stream bitwise identically to an uninterrupted
-//! one.
+//! one. The covariance sum is an exact f64 accumulation, so this holds
+//! across resample epochs as well.
 
 pub mod scheduler;
 pub mod session;
@@ -91,7 +154,7 @@ pub mod snapshot;
 
 pub use scheduler::{BatchScheduler, StepRequest, StepResponse};
 pub use session::{
-    HeadSlot, Precision, ServeConfig, Session, SessionHeads, SessionPool,
-    StepOutput,
+    FrozenEpoch, HeadSlot, OnlineState, Precision, ResampleConfig,
+    ServeConfig, Session, SessionHeads, SessionPool, StepOutput,
 };
 pub use snapshot::{load_session, save_session};

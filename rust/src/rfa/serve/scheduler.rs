@@ -116,6 +116,11 @@ pub struct BatchScheduler {
     pending: usize,
     responses: VecDeque<StepResponse>,
     next_seq: u64,
+    /// A budget re-enforcement failure from the end of a completed tick,
+    /// deferred so the tick could still surface its responses. Retried
+    /// at the start of the next tick; inspectable via
+    /// [`Self::budget_error`]/[`Self::take_budget_error`].
+    deferred_budget: Option<anyhow::Error>,
 }
 
 impl BatchScheduler {
@@ -127,6 +132,7 @@ impl BatchScheduler {
             pending: 0,
             responses: VecDeque::new(),
             next_seq: 0,
+            deferred_budget: None,
         }
     }
 
@@ -148,12 +154,58 @@ impl BatchScheduler {
         self.pending
     }
 
+    /// The deferred budget re-enforcement error from a completed tick,
+    /// if one is outstanding (the pool may be over budget until a later
+    /// tick re-enforces successfully).
+    pub fn budget_error(&self) -> Option<&anyhow::Error> {
+        self.deferred_budget.as_ref()
+    }
+
+    /// Take (and clear) the deferred budget error.
+    pub fn take_budget_error(&mut self) -> Option<anyhow::Error> {
+        self.deferred_budget.take()
+    }
+
+    /// The current ready-list, in tick batch order: one
+    /// `(head-of-queue seq, session id)` pair per non-empty queue.
+    /// Introspection for error-path determinism tests.
+    pub fn ready_snapshot(&self) -> Vec<(u64, u64)> {
+        self.ready.iter().copied().collect()
+    }
+
+    /// Every queued request's seq, per session, in queue (arrival)
+    /// order. Introspection for error-path determinism tests.
+    pub fn queued_seqs(&self) -> BTreeMap<u64, Vec<u64>> {
+        self.queues
+            .iter()
+            .map(|(sid, q)| (*sid, q.iter().map(|&(seq, _)| seq).collect()))
+            .collect()
+    }
+
+    /// Close a session: drop its queued requests (they will never get
+    /// responses), then remove it from the pool — including its snapshot
+    /// file if it was evicted (see [`SessionPool::close_session`]).
+    pub fn close_session(&mut self, id: u64) -> Result<()> {
+        if let Some(queue) = self.queues.remove(&id) {
+            if let Some(&(seq, _)) = queue.front() {
+                self.ready.remove(&(seq, id));
+            }
+            self.pending -= queue.len();
+        }
+        self.pool.close_session(id)
+    }
+
     /// Validate and enqueue a request; returns its arrival sequence
     /// number (echoed in the response).
     pub fn submit(&mut self, req: StepRequest) -> Result<u64> {
         ensure!(
             self.pool.contains(req.session_id),
             "no session with id {}",
+            req.session_id
+        );
+        ensure!(
+            !req.heads.is_empty(),
+            "request for session {} has no heads",
             req.session_id
         );
         let cfg = self.pool.cfg();
@@ -165,6 +217,12 @@ impl BatchScheduler {
             cfg.n_heads
         );
         let rows = req.rows();
+        ensure!(
+            rows > 0,
+            "request for session {} covers zero positions — a step must \
+             carry at least one row",
+            req.session_id
+        );
         let d = cfg.est.dim();
         for (h, head) in req.heads.iter().enumerate() {
             ensure!(
@@ -200,10 +258,23 @@ impl BatchScheduler {
 
     /// Run one scheduling tick; returns the number of requests completed
     /// (0 when the queue is empty). On a snapshot-IO error (eviction or
-    /// fault-in) the batch goes back to the front of its sessions'
-    /// queues in arrival order and the error propagates — no request is
-    /// lost.
+    /// fault-in) *before* any state advanced, the batch goes back to the
+    /// front of its sessions' queues in arrival order and the error
+    /// propagates — no request is lost. A budget re-enforcement failure
+    /// *after* the batch completed is non-fatal: the responses are
+    /// already queued and `pending` decremented, so the tick returns
+    /// `Ok` and the error is deferred (see [`Self::budget_error`]) and
+    /// retried at the start of the next tick.
     pub fn tick(&mut self) -> Result<usize> {
+        // Retry a deferred budget re-enforcement first, while nothing is
+        // pinned. Still failing is still non-fatal — the pool simply
+        // stays over budget until the snapshot dir heals.
+        if self.deferred_budget.is_some() {
+            match self.pool.ensure_budget(&[]) {
+                Ok(()) => self.deferred_budget = None,
+                Err(e) => self.deferred_budget = Some(e),
+            }
+        }
         // Batch: pop the head request of every ready session. The
         // ready-list is ordered by head seq, so the batch comes out in
         // arrival order without touching any deferred request.
@@ -239,10 +310,14 @@ impl BatchScheduler {
                 self.queues.retain(|_, q| !q.is_empty());
                 // A tick pins its whole batch, so a many-session batch
                 // can legitimately overshoot the budget while running;
-                // re-enforce it now that nothing is pinned. The batch is
-                // NOT requeued on failure here — every request already
-                // completed and its response is queued.
-                self.pool.ensure_budget(&[])?;
+                // re-enforce it now that nothing is pinned. A failure
+                // here must NOT fail the tick: every request already
+                // completed, its response is queued and `pending` was
+                // decremented — returning `Err` would make callers lose
+                // a fully-completed drain. Defer the error instead.
+                if let Err(e) = self.pool.ensure_budget(&[]) {
+                    self.deferred_budget = Some(e);
+                }
                 Ok(completed)
             }
             Err(e) => {

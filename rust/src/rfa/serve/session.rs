@@ -14,7 +14,7 @@
 //! once before running generic [`crate::linalg::Scalar`] code. Nothing
 //! below the session matches on [`Precision`] again.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -24,6 +24,7 @@ use crate::linalg::{Mat, Matrix, Matrix32, Scalar};
 use crate::rfa::engine::{draw_head_banks, CausalState, Head};
 use crate::rfa::estimators::PrfEstimator;
 use crate::rfa::features::FeatureBank;
+use crate::rfa::gaussian::{MultivariateGaussian, SecondMomentAccumulator};
 use crate::rng::Pcg64;
 
 use super::snapshot;
@@ -35,6 +36,51 @@ use super::snapshot;
 pub enum Precision {
     F64,
     F32,
+}
+
+/// Online bank-resampling policy: every `epoch_positions` stream
+/// positions each head freezes its `(bank, S, z)` triple and redraws a
+/// data-aware bank against its streaming key second-moment estimate (see
+/// the epoch contract in the [`super`] module docs). Deterministic by
+/// construction: epoch boundaries are fixed absolute positions, and the
+/// epoch-`e` bank of head `h` is a pure function of
+/// `(session_seed, h, e)` plus the keys seen before the boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResampleConfig {
+    /// Epoch length `K` in stream positions (≥ 1): head banks are
+    /// redrawn at absolute positions `K, 2K, 3K, …`.
+    pub epoch_positions: u64,
+    /// Retained frozen epochs per head (≥ 1). Older epochs are dropped
+    /// oldest-first, bounding memory; dropping one removes its keys from
+    /// the attention window (the sliding-window approximation the module
+    /// docs describe).
+    pub max_epochs: usize,
+    /// Shrinkage λ ∈ (0, 1] toward the identity in the second-moment
+    /// estimate `Σ̂ = (1-λ)·C/count + λ·I`, keeping Σ̂ SPD even early in
+    /// the stream.
+    pub shrinkage: f64,
+}
+
+impl ResampleConfig {
+    /// Resample every `k` positions with default retention (8 epochs)
+    /// and shrinkage (0.05).
+    pub fn every(k: u64) -> Self {
+        Self { epoch_positions: k, max_epochs: 8, shrinkage: 0.05 }
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        ensure!(
+            self.epoch_positions >= 1,
+            "resample epoch length must be >= 1 position"
+        );
+        ensure!(self.max_epochs >= 1, "must retain at least one epoch");
+        ensure!(
+            self.shrinkage > 0.0 && self.shrinkage <= 1.0,
+            "resample shrinkage must be in (0, 1], got {}",
+            self.shrinkage
+        );
+        Ok(())
+    }
 }
 
 /// Serving-layer configuration: model geometry, precision, scheduling
@@ -60,6 +106,10 @@ pub struct ServeConfig {
     pub memory_budget: usize,
     /// Directory evicted-session snapshots are written to.
     pub snapshot_dir: PathBuf,
+    /// Online bank-resampling policy; `None` keeps the original static
+    /// banks for the life of every session (bitwise-identical to the
+    /// pre-resampling serving stack).
+    pub resample: Option<ResampleConfig>,
 }
 
 impl ServeConfig {
@@ -120,11 +170,106 @@ impl StepOutput {
     }
 }
 
+/// One frozen resample epoch of a head: the bank the epoch's keys were
+/// featurized under and the causal prefix `(S, z)` accumulated over
+/// exactly that epoch's positions. Read-only after the boundary — later
+/// queries only [`CausalState::readout`] against it.
+pub struct FrozenEpoch<T: Scalar> {
+    pub(crate) bank: FeatureBank,
+    pub(crate) state: CausalState<T>,
+}
+
+impl<T: Scalar> FrozenEpoch<T> {
+    pub fn bank(&self) -> &FeatureBank {
+        &self.bank
+    }
+
+    pub fn state(&self) -> &CausalState<T> {
+        &self.state
+    }
+}
+
+/// Per-head online-resampling state: the streaming second-moment
+/// estimate of the head's keys, the epoch counter, and the retained
+/// frozen `(bank, S, z)` triples of past epochs (oldest first).
+pub struct OnlineState<T: Scalar> {
+    pub(crate) cfg: ResampleConfig,
+    pub(crate) seed: u64,
+    pub(crate) head: usize,
+    pub(crate) epoch: u64,
+    pub(crate) moment: SecondMomentAccumulator,
+    pub(crate) frozen: VecDeque<FrozenEpoch<T>>,
+}
+
+impl<T: Scalar> OnlineState<T> {
+    pub(crate) fn fresh(
+        cfg: ResampleConfig,
+        seed: u64,
+        head: usize,
+        d: usize,
+    ) -> Self {
+        Self {
+            cfg,
+            seed,
+            head,
+            epoch: 0,
+            moment: SecondMomentAccumulator::new(d),
+            frozen: VecDeque::new(),
+        }
+    }
+
+    /// Rebuild from snapshotted parts (the restore half of the v2
+    /// snapshot surface).
+    pub(crate) fn from_parts(
+        cfg: ResampleConfig,
+        seed: u64,
+        head: usize,
+        epoch: u64,
+        moment: SecondMomentAccumulator,
+        frozen: VecDeque<FrozenEpoch<T>>,
+    ) -> Self {
+        Self { cfg, seed, head, epoch, moment, frozen }
+    }
+
+    /// Completed resamples so far (0 = still on the initial bank).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn config(&self) -> &ResampleConfig {
+        &self.cfg
+    }
+
+    /// Key positions folded into the second-moment estimate (= the
+    /// head's stream position).
+    pub fn count(&self) -> u64 {
+        self.moment.count()
+    }
+
+    /// Retained frozen epochs.
+    pub fn frozen_len(&self) -> usize {
+        self.frozen.len()
+    }
+}
+
+/// The epoch-`e` resample generator for head `h` of a session: a pure
+/// function of `(session_seed, h, e)` — no generator state is carried
+/// across epochs, so evict→restore cannot perturb future draws.
+fn resample_rng(seed: u64, head: usize, epoch: u64) -> Pcg64 {
+    Pcg64::seed_stream(
+        seed ^ epoch.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        0x00da_7aaa_0000_0000 ^ head as u64,
+    )
+}
+
 /// One head of a session: its feature bank plus its running state at the
-/// session's storage precision. The scheduler's unit of parallel work.
+/// session's storage precision, and — when resampling is configured —
+/// the online covariance/epoch state. The scheduler's unit of parallel
+/// work.
 pub struct HeadSlot<T: Scalar> {
     pub(crate) bank: FeatureBank,
     pub(crate) state: CausalState<T>,
+    pub(crate) online: Option<OnlineState<T>>,
 }
 
 impl<T: Scalar> HeadSlot<T> {
@@ -136,16 +281,136 @@ impl<T: Scalar> HeadSlot<T> {
         &self.state
     }
 
+    /// Online-resampling state; `None` for static-bank sessions.
+    pub fn online(&self) -> Option<&OnlineState<T>> {
+        self.online.as_ref()
+    }
+
+    /// Completed resample epochs (0 for static-bank heads).
+    pub fn epoch(&self) -> u64 {
+        self.online.as_ref().map_or(0, |o| o.epoch)
+    }
+
     /// Advance this head by one request segment and return its output
     /// rows. Chunk blocking restarts at the segment start (the
     /// determinism contract in the module docs). The f64-side input
     /// values are rounded to `T` at this boundary (a borrow on the f64
     /// path).
     pub(crate) fn step(&mut self, input: &Head, chunk: usize) -> Mat<T> {
+        if self.online.is_some() {
+            return self.step_online(input, chunk);
+        }
         let phi_q = self.bank.feature_matrix_t::<T>(&input.q);
         let phi_k = self.bank.feature_matrix_t::<T>(&input.k);
         let v = T::mat_from_f64(&input.v);
         self.state.forward(&phi_q, &phi_k, &v, chunk)
+    }
+
+    /// The online forward: split the segment at epoch boundaries; per
+    /// span, fold keys into the moment estimate, run the current-epoch
+    /// unnormalized forward, add every frozen epoch's readout
+    /// (numerators and denominators summed in `Scalar::Accum`,
+    /// oldest-first, current-epoch last), divide once. With no frozen
+    /// epochs and no boundary inside the segment this reduces to the
+    /// static path's exact operations (adding into an all-zero `Accum`
+    /// sum is exact), so enabling resampling changes no bits before the
+    /// first boundary.
+    fn step_online(&mut self, input: &Head, chunk: usize) -> Mat<T> {
+        let l = input.v.rows();
+        let dv = self.state.dv();
+        let mut out: Mat<T> = Mat::zeros(l, dv);
+        let mut b = 0usize;
+        while b < l {
+            let online = self.online.as_mut().expect("online state present");
+            let k_epoch = online.cfg.epoch_positions;
+            let into_epoch = online.moment.count() % k_epoch;
+            let span = ((k_epoch - into_epoch) as usize).min(l - b);
+            let e = b + span;
+
+            let q_span = &input.q[b..e];
+            let k_span = &input.k[b..e];
+            // Stream order: keys enter the moment estimate span by span,
+            // so the estimate at a boundary is independent of how the
+            // stream was sliced into requests.
+            for key in k_span {
+                online.moment.accumulate(key);
+            }
+            let phi_q = self.bank.feature_matrix_t::<T>(q_span);
+            let phi_k = self.bank.feature_matrix_t::<T>(k_span);
+            let v_span = input.v.row_block(b, e);
+            let v_t = T::mat_from_f64(&v_span);
+            let (num_cur, den_cur) =
+                self.state.forward_unnormalized(&phi_q, &phi_k, &v_t, chunk);
+
+            // Frozen-epoch readouts, oldest → newest, then the current
+            // epoch — a fixed summation order independent of request
+            // slicing and thread count.
+            let mut num =
+                vec![<T::Accum as Scalar>::ZERO; span * dv];
+            let mut den = vec![<T::Accum as Scalar>::ZERO; span];
+            for fe in &online.frozen {
+                let phi_qe = fe.bank.feature_matrix_t::<T>(q_span);
+                let (num_e, den_e) = fe.state.readout(&phi_qe);
+                for (acc, &x) in num.iter_mut().zip(num_e.data()) {
+                    *acc += x.to_accum();
+                }
+                for (acc, x) in den.iter_mut().zip(den_e) {
+                    *acc += x;
+                }
+            }
+            for (acc, &x) in num.iter_mut().zip(num_cur.data()) {
+                *acc += x.to_accum();
+            }
+            for (acc, x) in den.iter_mut().zip(den_cur) {
+                *acc += x;
+            }
+            for t in 0..span {
+                let d = den[t];
+                let orow = &mut out.data_mut()[(b + t) * dv..(b + t + 1) * dv];
+                for (o, &nx) in orow.iter_mut().zip(&num[t * dv..(t + 1) * dv])
+                {
+                    *o = T::from_accum(nx / d);
+                }
+            }
+
+            // Epoch boundary reached: freeze the triple and redraw the
+            // bank against the shrunk second-moment estimate.
+            if online.moment.count() % k_epoch == 0 {
+                online.epoch += 1;
+                let sigma =
+                    online.moment.shrunk_estimate(online.cfg.shrinkage);
+                let d_in = self.bank.dim();
+                let gauss = MultivariateGaussian::new(sigma)
+                    .unwrap_or_else(|| {
+                        // Pathological rounding can defeat the shrinkage
+                        // floor; fall back to the isotropic geometry
+                        // deterministically rather than fail the step.
+                        MultivariateGaussian::new(Matrix::identity(d_in))
+                            .expect("identity is SPD")
+                    });
+                let mut rng =
+                    resample_rng(online.seed, online.head, online.epoch);
+                let n = self.state.n_features();
+                let new_bank = FeatureBank::draw_data_aware(
+                    self.bank.n_features(),
+                    gauss,
+                    &mut rng,
+                );
+                let old_bank = std::mem::replace(&mut self.bank, new_bank);
+                let old_state = std::mem::replace(
+                    &mut self.state,
+                    CausalState::new(n, dv),
+                );
+                online
+                    .frozen
+                    .push_back(FrozenEpoch { bank: old_bank, state: old_state });
+                while online.frozen.len() > online.cfg.max_epochs {
+                    online.frozen.pop_front();
+                }
+            }
+            b = e;
+        }
+        out
     }
 }
 
@@ -191,10 +456,17 @@ fn fresh_slots<T: Scalar>(
     banks: Vec<FeatureBank>,
     n: usize,
     dv: usize,
+    seed: u64,
+    resample: Option<&ResampleConfig>,
 ) -> Vec<HeadSlot<T>> {
     banks
         .into_iter()
-        .map(|bank| HeadSlot { bank, state: CausalState::new(n, dv) })
+        .enumerate()
+        .map(|(h, bank)| {
+            let online = resample
+                .map(|rc| OnlineState::fresh(rc.clone(), seed, h, bank.dim()));
+            HeadSlot { bank, state: CausalState::new(n, dv), online }
+        })
         .collect()
 }
 
@@ -211,19 +483,37 @@ fn step_slots<T: Scalar>(
         .collect()
 }
 
+/// f64 slots held by one bank: omegas, weights, √weights, optional Σ.
+fn bank_floats(bank: &FeatureBank) -> usize {
+    let (n, d) = (bank.n_features(), bank.dim());
+    n * d + 2 * n + bank.norm_sigma().map_or(0, |s| s.rows() * s.cols())
+}
+
 /// Resident bytes of a slot vector: per-head bank (omegas, weights,
 /// √weights, optional Σ) plus running state (`Scalar::Accum` = f64
-/// accumulators in every precision).
+/// accumulators in every precision), plus — for online heads — the
+/// covariance accumulator and every retained frozen epoch's bank+state.
 fn slots_bytes<T: Scalar>(slots: &[HeadSlot<T>], dv: usize) -> usize {
     const F64_BYTES: usize = std::mem::size_of::<f64>();
+    let state_floats = |n: usize| n * dv + n;
     slots
         .iter()
         .map(|h| {
-            let (n, d) = (h.bank.n_features(), h.bank.dim());
-            let bank = n * d + 2 * n
-                + h.bank.norm_sigma().map_or(0, |s| s.rows() * s.cols());
-            let state = n * dv + n;
-            (bank + state) * F64_BYTES
+            let n = h.bank.n_features();
+            let mut floats = bank_floats(&h.bank) + state_floats(n);
+            if let Some(online) = &h.online {
+                let d = online.moment.dim();
+                floats += d * d;
+                floats += online
+                    .frozen
+                    .iter()
+                    .map(|fe| {
+                        bank_floats(&fe.bank)
+                            + state_floats(fe.bank.n_features())
+                    })
+                    .sum::<usize>();
+            }
+            floats * F64_BYTES
         })
         .sum()
 }
@@ -235,27 +525,38 @@ pub struct Session {
     seed: u64,
     position: u64,
     dv: usize,
+    resample: Option<ResampleConfig>,
     heads: SessionHeads,
 }
 
 impl Session {
-    /// Fresh session: banks drawn via [`draw_head_banks`] from the
-    /// session seed (bank h is a pure function of (seed, h)), all states
-    /// zero. The one precision dispatch of the session's lifetime
-    /// happens here.
+    /// Fresh session: epoch-0 banks drawn via [`draw_head_banks`] from
+    /// the session seed (bank h is a pure function of (seed, h)), all
+    /// states zero. The one precision dispatch of the session's lifetime
+    /// happens here. When `cfg.resample` is set, each head additionally
+    /// carries fresh [`OnlineState`].
     pub(crate) fn new(id: u64, seed: u64, cfg: &ServeConfig) -> Self {
         let banks =
             draw_head_banks(&cfg.est, cfg.n_heads, &mut Pcg64::seed(seed));
         let n = cfg.est.m;
+        let resample = cfg.resample.clone();
         let heads = match cfg.precision {
-            Precision::F64 => {
-                SessionHeads::F64(fresh_slots(banks, n, cfg.dv))
-            }
-            Precision::F32 => {
-                SessionHeads::F32(fresh_slots(banks, n, cfg.dv))
-            }
+            Precision::F64 => SessionHeads::F64(fresh_slots(
+                banks,
+                n,
+                cfg.dv,
+                seed,
+                resample.as_ref(),
+            )),
+            Precision::F32 => SessionHeads::F32(fresh_slots(
+                banks,
+                n,
+                cfg.dv,
+                seed,
+                resample.as_ref(),
+            )),
         };
-        Self { id, seed, position: 0, dv: cfg.dv, heads }
+        Self { id, seed, position: 0, dv: cfg.dv, resample, heads }
     }
 
     /// Reassemble a session from restored parts (the snapshot path).
@@ -264,9 +565,10 @@ impl Session {
         seed: u64,
         position: u64,
         dv: usize,
+        resample: Option<ResampleConfig>,
         heads: SessionHeads,
     ) -> Self {
-        Self { id, seed, position, dv, heads }
+        Self { id, seed, position, dv, resample, heads }
     }
 
     pub fn id(&self) -> u64 {
@@ -297,6 +599,24 @@ impl Session {
 
     pub fn heads(&self) -> &SessionHeads {
         &self.heads
+    }
+
+    /// The session's resampling policy (`None` = static banks).
+    pub fn resample_config(&self) -> Option<&ResampleConfig> {
+        self.resample.as_ref()
+    }
+
+    /// Completed resample epochs per head (all zeros for static-bank
+    /// sessions).
+    pub fn head_epochs(&self) -> Vec<u64> {
+        match &self.heads {
+            SessionHeads::F64(slots) => {
+                slots.iter().map(HeadSlot::epoch).collect()
+            }
+            SessionHeads::F32(slots) => {
+                slots.iter().map(HeadSlot::epoch).collect()
+            }
+        }
     }
 
     pub(crate) fn advance(&mut self, rows: u64) {
@@ -405,6 +725,9 @@ impl SessionPool {
     /// Allocate an id and create a fresh session for `seed`, evicting
     /// LRU sessions if the budget demands it.
     pub fn create_session(&mut self, seed: u64) -> Result<u64> {
+        if let Some(rc) = &self.cfg.resample {
+            rc.validate()?;
+        }
         let id = self.next_id;
         self.next_id += 1;
         let session = Session::new(id, seed, &self.cfg);
@@ -483,6 +806,13 @@ impl SessionPool {
             self.cfg.dv,
             self.cfg.precision
         );
+        ensure!(
+            session.resample_config() == self.cfg.resample.as_ref(),
+            "snapshot resample policy {:?} does not match the pool \
+             config {:?}",
+            session.resample_config(),
+            self.cfg.resample
+        );
         // The snapshot is consumed: the resident session is now the only
         // truth, so a stale file can never shadow newer state.
         self.evicted.remove(&id);
@@ -509,6 +839,33 @@ impl SessionPool {
         self.evicted.insert(id, path);
         self.last_used.remove(&id);
         self.stats.evictions += 1;
+        Ok(())
+    }
+
+    /// End a session's life: drop its resident state, or — if it was
+    /// evicted — remove the `evicted` entry *and* unlink its snapshot
+    /// file, so closed sessions never accrete snapshot files on disk.
+    /// An already-gone snapshot file is tolerated (the close still wins);
+    /// an unknown id is an error.
+    pub fn close_session(&mut self, id: u64) -> Result<()> {
+        let was_resident = self.resident.remove(&id).is_some();
+        self.last_used.remove(&id);
+        if let Some(path) = self.evicted.remove(&id) {
+            match std::fs::remove_file(&path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "removing snapshot {} of closed session {id}",
+                            path.display()
+                        )
+                    });
+                }
+            }
+            return Ok(());
+        }
+        ensure!(was_resident, "no session with id {id}");
         Ok(())
     }
 
@@ -547,7 +904,10 @@ impl SessionPool {
             .collect()
     }
 
-    fn snapshot_path(&self, id: u64) -> PathBuf {
+    /// Where session `id`'s eviction snapshot lives (whether or not one
+    /// currently exists). Public for tests that inject IO faults at the
+    /// exact path the pool will write to.
+    pub fn snapshot_path(&self, id: u64) -> PathBuf {
         self.cfg.snapshot_dir.join(format!(
             "pool{}-{}-session-{id}.dkft",
             std::process::id(),

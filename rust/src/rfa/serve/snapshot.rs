@@ -1,33 +1,47 @@
 //! Session snapshots over the DKFT tensor store.
 //!
 //! A snapshot is a self-contained [`Checkpoint`]: metadata (id, seed,
-//! position, precision, geometry) as `u32` tensors, bank matrices and
-//! running state as `f64` tensors — see the naming scheme in the
-//! [`super`] module docs. Everything numeric is stored at full f64
-//! width: the engine's `Scalar::Accum` contract keeps the running state
-//! in f64 accumulators for *every* storage precision, so every
-//! round-trip is exact-bits and a restored session continues its stream
-//! bitwise identically — the resumability property
-//! `rust/tests/rfa_serve.rs` pins.
+//! position, precision, geometry, resample policy) as `u32`/`f64`
+//! tensors, bank matrices and running state as `f64` tensors — see the
+//! naming scheme in the [`super`] module docs. Everything numeric is
+//! stored at full f64 width: the engine's `Scalar::Accum` contract keeps
+//! the running state in f64 accumulators for *every* storage precision,
+//! so every round-trip is exact-bits and a restored session continues
+//! its stream bitwise identically — the resumability property
+//! `rust/tests/rfa_serve.rs` pins. For online-resampling sessions this
+//! extends to the whole epoch machinery: the epoch counter, the
+//! covariance accumulator (an exact f64 sum) and every retained frozen
+//! `(bank, S, z)` triple round-trip bit for bit, so evict→restore→
+//! continue is bitwise across resample boundaries too.
+//!
+//! Version 2 of the schema adds the resample-policy and per-head online
+//! tensors; version-1 files (written before resampling existed) still
+//! load, as static-bank sessions.
 //!
 //! Precision dispatch follows the session-boundary rule: serialization
 //! reads the session's [`SessionHeads`] once, restoration matches the
 //! stored precision tag once, and everything per-head runs through the
 //! generic [`insert_heads`]/[`read_heads`] bodies.
 
+use std::collections::VecDeque;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::checkpoint::{Checkpoint, Tensor};
 use crate::linalg::{Matrix, Scalar};
 use crate::rfa::engine::CausalState;
 use crate::rfa::features::FeatureBank;
+use crate::rfa::gaussian::SecondMomentAccumulator;
 
-use super::session::{HeadSlot, Precision, Session, SessionHeads};
+use super::session::{
+    FrozenEpoch, HeadSlot, OnlineState, Precision, ResampleConfig, Session,
+    SessionHeads,
+};
 
-/// Schema version stored under `session/version`.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// Schema version stored under `session/version`. Version 1 (static
+/// banks only) is still accepted on read.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 fn u64_tensor(v: u64) -> Tensor {
     Tensor::from_u32(vec![2], &[v as u32, (v >> 32) as u32])
@@ -42,6 +56,81 @@ fn read_scalar_u32(ck: &Checkpoint, name: &str) -> Result<u32> {
     Ok(ck.require_u32(name, &[1])?[0])
 }
 
+/// Write one bank's tensors under `{prefix}/{omegas,weights,sigma}`.
+fn insert_bank(ck: &mut Checkpoint, prefix: &str, bank: &FeatureBank) {
+    let (n, d) = (bank.n_features(), bank.dim());
+    ck.insert(
+        format!("{prefix}/omegas"),
+        Tensor::from_f64(vec![n, d], bank.omegas().data()),
+    );
+    ck.insert(
+        format!("{prefix}/weights"),
+        Tensor::from_f64(vec![n], bank.weights()),
+    );
+    if let Some(sigma) = bank.norm_sigma() {
+        ck.insert(
+            format!("{prefix}/sigma"),
+            Tensor::from_f64(vec![d, d], sigma.data()),
+        );
+    }
+}
+
+/// Read one bank back from `{prefix}/{omegas,weights,sigma}`; returns
+/// the bank plus its `(n, d)` geometry.
+fn read_bank(
+    ck: &Checkpoint,
+    prefix: &str,
+) -> Result<(FeatureBank, usize, usize)> {
+    let omegas_t = ck.require(&format!("{prefix}/omegas"))?;
+    if omegas_t.shape.len() != 2 {
+        bail!(
+            "{prefix}/omegas must be rank 2, got shape {:?}",
+            omegas_t.shape
+        );
+    }
+    let (n, d) = (omegas_t.shape[0], omegas_t.shape[1]);
+    let omegas = Matrix::from_vec(
+        n,
+        d,
+        ck.require_f64(&format!("{prefix}/omegas"), &[n, d])?,
+    );
+    let weights = ck.require_f64(&format!("{prefix}/weights"), &[n])?;
+    let sigma_name = format!("{prefix}/sigma");
+    let norm_sigma = if ck.get(&sigma_name).is_some() {
+        Some(Matrix::from_vec(d, d, ck.require_f64(&sigma_name, &[d, d])?))
+    } else {
+        None
+    };
+    Ok((FeatureBank::from_parts(omegas, weights, norm_sigma), n, d))
+}
+
+/// Write one causal state's tensors under `{prefix}/state`, `{prefix}/z`.
+fn insert_state<T: Scalar<Accum = f64>>(
+    ck: &mut Checkpoint,
+    prefix: &str,
+    state: &CausalState<T>,
+    dv: usize,
+) {
+    let n = state.n_features();
+    ck.insert(
+        format!("{prefix}/state"),
+        Tensor::from_f64(vec![n, dv], state.state().data()),
+    );
+    ck.insert(format!("{prefix}/z"), Tensor::from_f64(vec![n], state.z()));
+}
+
+/// Read one causal state back from `{prefix}/state`, `{prefix}/z`.
+fn read_state<T: Scalar<Accum = f64>>(
+    ck: &Checkpoint,
+    prefix: &str,
+    n: usize,
+    dv: usize,
+) -> Result<CausalState<T>> {
+    let s = ck.require_f64(&format!("{prefix}/state"), &[n, dv])?;
+    let z = ck.require_f64(&format!("{prefix}/z"), &[n])?;
+    Ok(CausalState::from_parts(Matrix::from_vec(n, dv, s), z))
+}
+
 /// Write one precision's head slots into the checkpoint — the generic
 /// half of serialization. The `Accum = f64` bound *is* the format
 /// guarantee: state tensors are f64 for every storage precision.
@@ -51,70 +140,95 @@ fn insert_heads<T: Scalar<Accum = f64>>(
     dv: usize,
 ) {
     for (h, slot) in slots.iter().enumerate() {
-        let bank = slot.bank();
-        let (n, d) = (bank.n_features(), bank.dim());
-        ck.insert(
-            format!("head{h}/bank/omegas"),
-            Tensor::from_f64(vec![n, d], bank.omegas().data()),
-        );
-        ck.insert(
-            format!("head{h}/bank/weights"),
-            Tensor::from_f64(vec![n], bank.weights()),
-        );
-        if let Some(sigma) = bank.norm_sigma() {
+        insert_bank(ck, &format!("head{h}/bank"), slot.bank());
+        insert_state(ck, &format!("head{h}"), slot.state(), dv);
+        if let Some(online) = slot.online() {
             ck.insert(
-                format!("head{h}/bank/sigma"),
-                Tensor::from_f64(vec![d, d], sigma.data()),
+                format!("head{h}/online/epoch"),
+                u64_tensor(online.epoch()),
             );
+            ck.insert(
+                format!("head{h}/online/count"),
+                u64_tensor(online.count()),
+            );
+            let cov = online.moment.sum();
+            let d = cov.rows();
+            ck.insert(
+                format!("head{h}/online/cov_sum"),
+                Tensor::from_f64(vec![d, d], cov.data()),
+            );
+            ck.insert(
+                format!("head{h}/online/n_frozen"),
+                Tensor::from_u32(vec![1], &[online.frozen.len() as u32]),
+            );
+            for (j, fe) in online.frozen.iter().enumerate() {
+                insert_bank(ck, &format!("head{h}/frozen{j}/bank"), fe.bank());
+                insert_state(ck, &format!("head{h}/frozen{j}"), fe.state(), dv);
+            }
         }
-        let state = slot.state();
-        ck.insert(
-            format!("head{h}/state"),
-            Tensor::from_f64(vec![n, dv], state.state().data()),
-        );
-        ck.insert(format!("head{h}/z"), Tensor::from_f64(vec![n], state.z()));
     }
 }
 
 /// Read `n_heads` head slots back at storage precision `T` — the generic
 /// half of restoration, validating every tensor's dtype and shape.
+/// `resample` carries the session's policy and seed when the snapshot
+/// holds an online session; `None` restores static-bank heads.
 fn read_heads<T: Scalar<Accum = f64>>(
     ck: &Checkpoint,
     n_heads: usize,
     dv: usize,
+    resample: Option<(&ResampleConfig, u64)>,
 ) -> Result<Vec<HeadSlot<T>>> {
     let mut heads = Vec::with_capacity(n_heads);
     for h in 0..n_heads {
-        let omegas_t = ck.require(&format!("head{h}/bank/omegas"))?;
-        if omegas_t.shape.len() != 2 {
-            bail!(
-                "head{h}/bank/omegas must be rank 2, got shape {:?}",
-                omegas_t.shape
-            );
-        }
-        let (n, d) = (omegas_t.shape[0], omegas_t.shape[1]);
-        let omegas = Matrix::from_vec(
-            n,
-            d,
-            ck.require_f64(&format!("head{h}/bank/omegas"), &[n, d])?,
-        );
-        let weights = ck.require_f64(&format!("head{h}/bank/weights"), &[n])?;
-        let sigma_name = format!("head{h}/bank/sigma");
-        let norm_sigma = if ck.get(&sigma_name).is_some() {
-            Some(Matrix::from_vec(
-                d,
-                d,
-                ck.require_f64(&sigma_name, &[d, d])?,
-            ))
-        } else {
-            None
+        let (bank, n, d) = read_bank(ck, &format!("head{h}/bank"))?;
+        let state = read_state::<T>(ck, &format!("head{h}"), n, dv)?;
+        let online = match resample {
+            None => None,
+            Some((rc, seed)) => {
+                let epoch = read_u64(ck, &format!("head{h}/online/epoch"))?;
+                let count = read_u64(ck, &format!("head{h}/online/count"))?;
+                let cov = Matrix::from_vec(
+                    d,
+                    d,
+                    ck.require_f64(
+                        &format!("head{h}/online/cov_sum"),
+                        &[d, d],
+                    )?,
+                );
+                let n_frozen = read_scalar_u32(
+                    ck,
+                    &format!("head{h}/online/n_frozen"),
+                )? as usize;
+                ensure!(
+                    n_frozen <= rc.max_epochs,
+                    "head{h} retains {n_frozen} frozen epochs, policy \
+                     allows {}",
+                    rc.max_epochs
+                );
+                let mut frozen = VecDeque::with_capacity(n_frozen);
+                for j in 0..n_frozen {
+                    let (fbank, fnn, _) =
+                        read_bank(ck, &format!("head{h}/frozen{j}/bank"))?;
+                    let fstate = read_state::<T>(
+                        ck,
+                        &format!("head{h}/frozen{j}"),
+                        fnn,
+                        dv,
+                    )?;
+                    frozen.push_back(FrozenEpoch { bank: fbank, state: fstate });
+                }
+                Some(OnlineState::from_parts(
+                    rc.clone(),
+                    seed,
+                    h,
+                    epoch,
+                    SecondMomentAccumulator::from_parts(cov, count),
+                    frozen,
+                ))
+            }
         };
-        let bank = FeatureBank::from_parts(omegas, weights, norm_sigma);
-
-        let s = ck.require_f64(&format!("head{h}/state"), &[n, dv])?;
-        let z = ck.require_f64(&format!("head{h}/z"), &[n])?;
-        let state = CausalState::from_parts(Matrix::from_vec(n, dv, s), z);
-        heads.push(HeadSlot { bank, state });
+        heads.push(HeadSlot { bank, state, online });
     }
     Ok(heads)
 }
@@ -142,6 +256,26 @@ pub fn session_checkpoint(session: &Session) -> Checkpoint {
         "session/dv",
         Tensor::from_u32(vec![1], &[session.dv() as u32]),
     );
+    match session.resample_config() {
+        Some(rc) => {
+            ck.insert("session/resample", Tensor::from_u32(vec![1], &[1]));
+            ck.insert(
+                "session/resample/epoch_positions",
+                u64_tensor(rc.epoch_positions),
+            );
+            ck.insert(
+                "session/resample/max_epochs",
+                Tensor::from_u32(vec![1], &[rc.max_epochs as u32]),
+            );
+            ck.insert(
+                "session/resample/shrinkage",
+                Tensor::from_f64(vec![1], &[rc.shrinkage]),
+            );
+        }
+        None => {
+            ck.insert("session/resample", Tensor::from_u32(vec![1], &[0]));
+        }
+    }
     match session.heads() {
         SessionHeads::F64(slots) => insert_heads(&mut ck, slots, session.dv()),
         SessionHeads::F32(slots) => insert_heads(&mut ck, slots, session.dv()),
@@ -153,7 +287,7 @@ pub fn session_checkpoint(session: &Session) -> Checkpoint {
 /// and shape (descriptive errors, never panics, on malformed input).
 pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
     let version = read_scalar_u32(ck, "session/version")?;
-    if version != SNAPSHOT_VERSION {
+    if version != 1 && version != SNAPSHOT_VERSION {
         bail!("unsupported session snapshot version {version}");
     }
     let id = read_u64(ck, "session/id")?;
@@ -172,18 +306,42 @@ pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
     if n_heads > 4096 {
         bail!("implausible head count {n_heads} in session snapshot");
     }
+    // Version-1 files predate resampling; they are static-bank sessions.
+    let resample = if version >= 2
+        && read_scalar_u32(ck, "session/resample")? == 1
+    {
+        let epoch_positions =
+            read_u64(ck, "session/resample/epoch_positions")?;
+        let max_epochs =
+            read_scalar_u32(ck, "session/resample/max_epochs")? as usize;
+        if max_epochs > 4096 {
+            bail!(
+                "implausible retained-epoch cap {max_epochs} in session \
+                 snapshot"
+            );
+        }
+        let shrinkage =
+            ck.require_f64("session/resample/shrinkage", &[1])?[0];
+        let rc = ResampleConfig { epoch_positions, max_epochs, shrinkage };
+        rc.validate()
+            .context("session snapshot carries an invalid resample policy")?;
+        Some(rc)
+    } else {
+        None
+    };
 
     // The stored precision tag resolves to a compile-time Scalar exactly
     // once, here; everything per-head below is generic.
+    let online = resample.as_ref().map(|rc| (rc, seed));
     let heads = match precision {
         Precision::F64 => {
-            SessionHeads::F64(read_heads::<f64>(ck, n_heads, dv)?)
+            SessionHeads::F64(read_heads::<f64>(ck, n_heads, dv, online)?)
         }
         Precision::F32 => {
-            SessionHeads::F32(read_heads::<f32>(ck, n_heads, dv)?)
+            SessionHeads::F32(read_heads::<f32>(ck, n_heads, dv, online)?)
         }
     };
-    Ok(Session::from_parts(id, seed, position, dv, heads))
+    Ok(Session::from_parts(id, seed, position, dv, resample, heads))
 }
 
 /// Snapshot a session to `path` (DKFT: magic, version, crc — see

@@ -29,8 +29,8 @@ use darkformer::rfa::gaussian::{
     anisotropic_covariance, MultivariateGaussian,
 };
 use darkformer::rfa::serve::{
-    load_session, save_session, BatchScheduler, Precision, ServeConfig,
-    SessionPool, StepRequest,
+    load_session, save_session, BatchScheduler, Precision, ResampleConfig,
+    ServeConfig, SessionHeads, SessionPool, StepRequest,
 };
 use darkformer::rfa::{FeatureBank, PrfEstimator};
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -82,6 +82,21 @@ fn cfg(
         threads,
         memory_budget,
         snapshot_dir: dir,
+        resample: None,
+    }
+}
+
+fn cfg_resample(
+    est: PrfEstimator,
+    precision: Precision,
+    threads: usize,
+    memory_budget: usize,
+    dir: PathBuf,
+    rc: ResampleConfig,
+) -> ServeConfig {
+    ServeConfig {
+        resample: Some(rc),
+        ..cfg(est, precision, threads, memory_budget, dir)
     }
 }
 
@@ -167,7 +182,16 @@ fn run_scheduled(
             }
         }
     }
-    let mut responses = sched.run_until_idle().unwrap();
+    let responses = sched.run_until_idle().unwrap();
+    reassemble_streams(responses, ids)
+}
+
+/// Reassemble drained responses into per-session, per-head output
+/// matrices in stream order, asserting in-order application.
+fn reassemble_streams(
+    mut responses: Vec<darkformer::rfa::serve::StepResponse>,
+    ids: &[u64],
+) -> Vec<Vec<Matrix>> {
     responses.sort_by_key(|r| r.seq);
     let mut per_session: Vec<Vec<Vec<f64>>> =
         vec![vec![Vec::new(); N_HEADS]; ids.len()];
@@ -194,6 +218,15 @@ fn run_scheduled(
                 .collect()
         })
         .collect()
+}
+
+/// Resident bytes of one fresh static-bank session at `precision` — the
+/// probe the budget-churn tests size their pools with.
+fn one_session_bytes(precision: Precision, tag: &str) -> usize {
+    let dir = snapshot_dir(tag);
+    let mut pool = SessionPool::new(cfg(iso_est(), precision, 1, 0, dir));
+    let id = pool.create_session(1).unwrap();
+    pool.session_mut(id).unwrap().state_bytes()
 }
 
 // ---------------------------------------------------------------- (a)
@@ -594,4 +627,482 @@ fn restored_bank_reproduces_feature_maps() {
         bank.feature_matrix32(&xs).data(),
         rebuilt.feature_matrix32(&xs).data()
     );
+}
+
+// ------------------------------------------- (d) online bank resampling
+
+#[test]
+fn resample_epochs_advance_and_redraw_data_aware_banks() {
+    // K = CHUNK → every request crosses exactly one epoch boundary.
+    let rc = ResampleConfig {
+        epoch_positions: CHUNK as u64,
+        max_epochs: 2,
+        shrinkage: 0.05,
+    };
+    let dir = snapshot_dir("resample_epochs");
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        Precision::F64,
+        1,
+        0,
+        dir,
+        rc,
+    ));
+    let id = pool.create_session(5150).unwrap();
+    let stream = stream_inputs(9200);
+
+    // Epoch 0 banks are the static draw for the configured estimator:
+    // isotropic here, so no Σ geometry yet.
+    let initial_omegas: Vec<Matrix> = {
+        let session = pool.session_mut(id).unwrap();
+        assert_eq!(session.head_epochs(), vec![0; N_HEADS]);
+        let banks = session.heads().banks();
+        assert!(banks.iter().all(|b| b.norm_sigma().is_none()));
+        banks.into_iter().map(|b| b.omegas().clone()).collect()
+    };
+
+    for r in 0..N_REQUESTS {
+        pool.session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+    }
+
+    let session = pool.session_mut(id).unwrap();
+    assert_eq!(
+        session.head_epochs(),
+        vec![N_REQUESTS as u64; N_HEADS],
+        "one boundary per request at K = CHUNK"
+    );
+    // Every live bank is now a data-aware redraw against the streamed Σ̂.
+    let banks = session.heads().banks();
+    for (h, bank) in banks.iter().enumerate() {
+        assert!(
+            bank.norm_sigma().is_some(),
+            "head {h}: resampled bank is not data-aware"
+        );
+        assert_ne!(
+            bank.omegas(),
+            &initial_omegas[h],
+            "head {h}: bank unchanged after {N_REQUESTS} resamples"
+        );
+    }
+    // Distinct heads must draw distinct banks at the same epoch (the
+    // redraw rng streams by head).
+    assert_ne!(banks[0].omegas(), banks[1].omegas());
+    // Retention: 4 freezes against a cap of 2, and the moment
+    // accumulator saw every key of the stream.
+    match session.heads() {
+        SessionHeads::F64(slots) => {
+            for (h, slot) in slots.iter().enumerate() {
+                let online = slot.online().unwrap();
+                assert_eq!(
+                    online.frozen_len(),
+                    2,
+                    "head {h}: retained-epoch cap not enforced"
+                );
+                assert_eq!(online.count(), L as u64);
+                assert_eq!(online.epoch(), N_REQUESTS as u64);
+            }
+        }
+        SessionHeads::F32(_) => unreachable!("pool built at F64"),
+    }
+}
+
+#[test]
+fn online_resampling_is_bitwise_noop_before_first_boundary() {
+    // K > L: the stream never reaches a boundary, so the online path —
+    // moment tracking and all — must reproduce the static serial
+    // reference bit for bit at both precisions.
+    for (precision, tag) in
+        [(Precision::F64, "noop_f64"), (Precision::F32, "noop_f32")]
+    {
+        let rc = ResampleConfig {
+            epoch_positions: (L + 1) as u64,
+            max_epochs: 3,
+            shrinkage: 0.1,
+        };
+        let stream = stream_inputs(9300);
+        let expected = serial_reference(&iso_est(), 808, &stream, precision);
+        let dir = snapshot_dir(tag);
+        let mut pool = SessionPool::new(cfg_resample(
+            iso_est(),
+            precision,
+            1,
+            0,
+            dir,
+            rc,
+        ));
+        let ids = vec![pool.create_session(808).unwrap()];
+        let mut sched = BatchScheduler::new(pool);
+        let got = run_scheduled(
+            &mut sched,
+            &ids,
+            std::slice::from_ref(&stream),
+            false,
+        );
+        for h in 0..N_HEADS {
+            assert_eq!(
+                got[0][h], expected[h],
+                "{precision:?} head {h}: online path changed bits before \
+                 its first boundary"
+            );
+        }
+    }
+}
+
+/// The tentpole acceptance property at one precision: with boundaries
+/// at 12 and 24 (mid-request and exactly on a request edge),
+/// evict→restore→continue across resample epochs is bitwise identical
+/// to the uninterrupted stream, and the scheduler transport reproduces
+/// the same bits at worker counts {1, 4}.
+fn check_online_resume(precision: Precision, max_epochs: usize, tag: &str) {
+    let rc = ResampleConfig {
+        epoch_positions: 12,
+        max_epochs,
+        shrinkage: 0.05,
+    };
+    let stream = stream_inputs(9100);
+    let seed = 4242u64;
+
+    // Uninterrupted reference: direct pool, serial segment steps.
+    let dir = snapshot_dir(&format!("{tag}_ref"));
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        precision,
+        1,
+        0,
+        dir,
+        rc.clone(),
+    ));
+    let id = pool.create_session(seed).unwrap();
+    let mut expected: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for r in 0..N_REQUESTS {
+        let outs = pool
+            .session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        for (h, out) in outs.iter().enumerate() {
+            expected[h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    assert_eq!(
+        pool.session_mut(id).unwrap().head_epochs(),
+        vec![2; N_HEADS],
+        "L = 32 with K = 12 must complete two epochs"
+    );
+
+    // Same stream, evicted to a snapshot after every segment: request 1
+    // crosses the first boundary (position 12), request 2 ends exactly
+    // on the second (position 24) — both frozen triples, the moment
+    // accumulator, and the live bank must round-trip exact-bits.
+    let dir = snapshot_dir(&format!("{tag}_resume"));
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        precision,
+        1,
+        0,
+        dir,
+        rc.clone(),
+    ));
+    let id = pool.create_session(seed).unwrap();
+    let mut resumed: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for r in 0..N_REQUESTS {
+        let outs = pool
+            .session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        for (h, out) in outs.iter().enumerate() {
+            resumed[h].extend_from_slice(out.to_f64().data());
+        }
+        if r + 1 < N_REQUESTS {
+            pool.evict(id).unwrap();
+        }
+    }
+    assert_eq!(pool.stats().restores, (N_REQUESTS - 1) as u64);
+    for h in 0..N_HEADS {
+        assert_eq!(
+            expected[h], resumed[h],
+            "{precision:?} max_epochs={max_epochs} head {h}: \
+             evict→restore across a resample epoch changed bits"
+        );
+    }
+
+    // Scheduler transport must reproduce the same bits at {1, 4} workers.
+    for threads in [1usize, 4] {
+        let dir = snapshot_dir(&format!("{tag}_sched{threads}"));
+        let mut pool = SessionPool::new(cfg_resample(
+            iso_est(),
+            precision,
+            threads,
+            0,
+            dir,
+            rc.clone(),
+        ));
+        let ids = vec![pool.create_session(seed).unwrap()];
+        let mut sched = BatchScheduler::new(pool);
+        let got = run_scheduled(
+            &mut sched,
+            &ids,
+            std::slice::from_ref(&stream),
+            false,
+        );
+        for h in 0..N_HEADS {
+            assert_eq!(
+                got[0][h].data(),
+                expected[h].as_slice(),
+                "{precision:?} threads={threads} head {h}: scheduled \
+                 online stream diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn online_evict_restore_bitwise_across_epochs_f64() {
+    check_online_resume(Precision::F64, 8, "online_resume_f64");
+}
+
+#[test]
+fn online_evict_restore_bitwise_across_epochs_f32() {
+    // max_epochs = 1 exercises the frozen-epoch drop at the second
+    // boundary — the sliding-window path must also restore exact-bits.
+    check_online_resume(Precision::F32, 1, "online_resume_f32");
+}
+
+// --------------------------------------------- (e) scheduler bugfixes
+
+#[test]
+fn submit_rejects_zero_row_and_headless_requests() {
+    let dir = snapshot_dir("zero_rows");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F64, 1, 0, dir));
+    let id = pool.create_session(3).unwrap();
+    let mut sched = BatchScheduler::new(pool);
+    let stream = stream_inputs(9700);
+
+    let err = sched
+        .submit(StepRequest { session_id: id, heads: Vec::new() })
+        .unwrap_err();
+    assert!(format!("{err}").contains("no heads"), "got: {err}");
+
+    let err = sched
+        .submit(StepRequest {
+            session_id: id,
+            heads: slice_heads(&stream, 0, 0),
+        })
+        .unwrap_err();
+    assert!(format!("{err}").contains("zero positions"), "got: {err}");
+    assert_eq!(sched.pending_len(), 0, "rejected requests must not queue");
+}
+
+#[test]
+fn tick_surfaces_responses_when_post_batch_budget_fails() {
+    // The post-completion budget re-enforcement is bookkeeping: if it
+    // fails, the tick's finished responses must still surface and the
+    // error must be retried on the next tick — not lose a batch of work.
+    let budget = one_session_bytes(Precision::F64, "budget_probe");
+    let dir = snapshot_dir("deferred_budget");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F64, 1, budget, dir));
+    let s0 = pool.create_session(41).unwrap();
+    let s1 = pool.create_session(43).unwrap(); // evicts s0
+    assert_eq!(pool.evicted_count(), 1);
+    let stream0 = stream_inputs(9400);
+    let stream1 = stream_inputs(9401);
+    let mut sched = BatchScheduler::new(pool);
+    // Submit s1 first: the tick touches sessions in arrival order, so
+    // after the batch the LRU victim is s1 — the resident session whose
+    // snapshot path is free to block up front (s0's path holds its
+    // eviction file until fault-in consumes it).
+    sched
+        .submit(StepRequest {
+            session_id: s1,
+            heads: slice_heads(&stream1, 0, CHUNK),
+        })
+        .unwrap();
+    sched
+        .submit(StepRequest {
+            session_id: s0,
+            heads: slice_heads(&stream0, 0, CHUNK),
+        })
+        .unwrap();
+
+    // Block the eviction write with a directory squatting on the exact
+    // snapshot path (File::create on a directory fails even as root).
+    let block = sched.pool().snapshot_path(s1);
+    std::fs::create_dir_all(&block).unwrap();
+
+    let done = sched.tick().expect("a completed batch must not fail");
+    assert_eq!(done, 2, "both requests completed");
+    let responses = sched.poll_responses();
+    assert_eq!(responses.len(), 2, "completed responses were lost");
+    assert_eq!(sched.pending_len(), 0);
+    let err = sched
+        .budget_error()
+        .expect("budget failure must be deferred, not dropped");
+    assert!(
+        format!("{err:#}").contains("evicting session"),
+        "got: {err:#}"
+    );
+    // The surfaced outputs are the correct ones.
+    for resp in &responses {
+        let (seed, stream) = if resp.session_id == s0 {
+            (41u64, &stream0)
+        } else {
+            (43u64, &stream1)
+        };
+        let expected = serial_reference(
+            &iso_est(),
+            seed,
+            &slice_heads(stream, 0, CHUNK),
+            Precision::F64,
+        );
+        for (h, out) in resp.outputs.iter().enumerate() {
+            assert_eq!(
+                out.as_f64().unwrap(),
+                &expected[h],
+                "session {} head {h}: deferred-budget tick corrupted \
+                 its outputs",
+                resp.session_id
+            );
+        }
+    }
+
+    // Heal the path: the next tick retries the deferred re-enforcement
+    // before batching and brings the pool back under budget.
+    std::fs::remove_dir(&block).unwrap();
+    assert_eq!(sched.tick().unwrap(), 0);
+    assert!(
+        sched.budget_error().is_none(),
+        "healed snapshot dir must clear the deferred error"
+    );
+    assert!(sched.pool().resident_bytes() <= budget);
+}
+
+#[test]
+fn failed_fault_in_preserves_order_and_later_outputs() {
+    // Error-path determinism: a tick that fails faulting a session in
+    // must requeue the exact pre-tick order, and a subsequent successful
+    // run must be bitwise identical to a run that never failed.
+    let budget = one_session_bytes(Precision::F64, "fault_probe");
+    let streams = [stream_inputs(9500), stream_inputs(9501)];
+    let seeds = [61u64, 67];
+
+    let run = |fault: bool, tag: &str| -> Vec<Vec<Matrix>> {
+        let dir = snapshot_dir(tag);
+        let mut pool =
+            SessionPool::new(cfg(iso_est(), Precision::F64, 1, budget, dir));
+        let ids: Vec<u64> =
+            seeds.iter().map(|s| pool.create_session(*s).unwrap()).collect();
+        // Creating session 1 evicted session 0: its snapshot is on disk.
+        assert_eq!(pool.evicted_count(), 1);
+        let snap = pool.snapshot_path(ids[0]);
+        let mut sched = BatchScheduler::new(pool);
+        for r in 0..N_REQUESTS {
+            for (id, stream) in ids.iter().zip(&streams) {
+                let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+                sched
+                    .submit(StepRequest { session_id: *id, heads })
+                    .unwrap();
+            }
+        }
+        if fault {
+            let pending = sched.pending_len();
+            let ready = sched.ready_snapshot();
+            let queued = sched.queued_seqs();
+            // Corrupt the snapshot: the first tick's fault-in fails.
+            let original = std::fs::read(&snap).unwrap();
+            let mut bad = original.clone();
+            let mid = bad.len() / 2;
+            bad[mid] ^= 0x10;
+            std::fs::write(&snap, &bad).unwrap();
+            let err = sched.tick().unwrap_err();
+            assert!(
+                format!("{err:#}").contains("faulting in"),
+                "got: {err:#}"
+            );
+            // The failed tick must put everything back exactly.
+            assert_eq!(sched.pending_len(), pending);
+            assert_eq!(
+                sched.ready_snapshot(),
+                ready,
+                "ready-list changed across a failed tick"
+            );
+            assert_eq!(
+                sched.queued_seqs(),
+                queued,
+                "per-session queue order changed across a failed tick"
+            );
+            assert!(
+                sched.poll_responses().is_empty(),
+                "a failed tick must complete nothing"
+            );
+            // Heal the snapshot and continue normally.
+            std::fs::write(&snap, &original).unwrap();
+        }
+        let responses = sched.run_until_idle().unwrap();
+        reassemble_streams(responses, &ids)
+    };
+
+    let clean = run(false, "fault_clean");
+    let healed = run(true, "fault_healed");
+    for s in 0..2 {
+        for h in 0..N_HEADS {
+            assert_eq!(
+                clean[s][h], healed[s][h],
+                "session {s} head {h}: recovery after a failed fault-in \
+                 is not bitwise identical to a clean run"
+            );
+        }
+    }
+}
+
+#[test]
+fn close_session_unlinks_snapshots_and_drops_state() {
+    // Snapshot accretion bugfix: closing a session must reclaim its
+    // disk snapshot, not just its memory — a churned pool's snapshot
+    // directory ends empty once every session is closed.
+    let budget = one_session_bytes(Precision::F64, "close_probe");
+    let dir = snapshot_dir("close_churn");
+    let mut pool = SessionPool::new(cfg(
+        iso_est(),
+        Precision::F64,
+        1,
+        budget,
+        dir.clone(),
+    ));
+    let ids: Vec<u64> =
+        (0..3u64).map(|s| pool.create_session(100 + s).unwrap()).collect();
+    assert_eq!(pool.evicted_count(), 2);
+    let files = |dir: &PathBuf| std::fs::read_dir(dir).unwrap().count();
+    assert_eq!(files(&dir), 2, "two eviction snapshots on disk");
+
+    // Through the scheduler, close also drops the session's queued work.
+    let stream = stream_inputs(9600);
+    let mut sched = BatchScheduler::new(pool);
+    sched
+        .submit(StepRequest {
+            session_id: ids[2],
+            heads: slice_heads(&stream, 0, CHUNK),
+        })
+        .unwrap();
+    assert_eq!(sched.pending_len(), 1);
+    sched.close_session(ids[2]).unwrap();
+    assert_eq!(sched.pending_len(), 0, "closed session left queued work");
+    assert_eq!(sched.tick().unwrap(), 0, "orphaned work after close");
+
+    for &id in &ids[..2] {
+        sched.close_session(id).unwrap();
+    }
+    let mut pool = sched.into_pool();
+    assert_eq!(pool.resident_count(), 0);
+    assert_eq!(pool.evicted_count(), 0);
+    assert!(ids.iter().all(|&id| !pool.contains(id)));
+    assert_eq!(
+        files(&dir),
+        0,
+        "closed sessions must leave no snapshot files behind"
+    );
+    let err = pool.close_session(999).unwrap_err();
+    assert!(format!("{err}").contains("no session"), "got: {err}");
 }
