@@ -13,7 +13,7 @@
 //! Run: `cargo bench --bench linear_attention`.
 
 use darkformer::bench::BenchSuite;
-use darkformer::linalg::{Matrix, Matrix32};
+use darkformer::linalg::{simd, Matrix, Matrix32};
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{anisotropic_covariance, MultivariateGaussian};
 use darkformer::rfa::{attention, engine, FeatureBank, PrfEstimator};
@@ -202,6 +202,79 @@ fn main() {
         suite.metric("chunked_vs_perpos_causal_speedup_L131072", speedup);
         suite.metric("f32_vs_f64_chunked_throughput_L131072", f32_throughput);
     }
+
+    // ----------------------------------------------------------------
+    // SIMD dispatch A/B: the same chunked causal forward under the
+    // forced-scalar fallback vs the dispatched kernels, both precisions.
+    // Every ISA is bitwise-identical to the fallback, so the outputs are
+    // asserted equal and the only delta is throughput.
+    // ----------------------------------------------------------------
+    {
+        let l = 8192usize;
+        let chunk = 32usize;
+        println!("\nsimd-vs-scalar dispatch A/B, L={l}, m={m}, chunk={chunk}");
+        let q = rows(l, d, 0.1, &mut rng);
+        let k = rows(l, d, 0.1, &mut rng);
+        let v = Matrix::from_rows(&rows(l, dv, 0.5, &mut rng));
+        let phi_q = iso_bank.feature_matrix(&q);
+        let phi_k = iso_bank.feature_matrix(&k);
+        let phi_q32 = iso_bank.feature_matrix32(&q);
+        let phi_k32 = iso_bank.feature_matrix32(&k);
+        let v32 = Matrix32::from_f64(&v);
+
+        let prev = simd::set_isa(simd::Isa::Scalar);
+        let scalar64_ms =
+            suite.bench("causal_chunked_f64_scalar_kernels/L8192", 1, 5, || {
+                std::hint::black_box(engine::chunked_causal_linear_attention(
+                    &phi_q, &phi_k, &v, chunk,
+                ));
+            });
+        let scalar32_ms =
+            suite.bench("causal_chunked_f32_scalar_kernels/L8192", 1, 5, || {
+                std::hint::black_box(
+                    engine::chunked_causal_linear_attention32(
+                        &phi_q32, &phi_k32, &v32, chunk,
+                    ),
+                );
+            });
+        let out_scalar =
+            engine::chunked_causal_linear_attention(&phi_q, &phi_k, &v, chunk);
+        simd::set_isa(prev);
+
+        let simd64_ms =
+            suite.bench("causal_chunked_f64_simd_kernels/L8192", 1, 5, || {
+                std::hint::black_box(engine::chunked_causal_linear_attention(
+                    &phi_q, &phi_k, &v, chunk,
+                ));
+            });
+        let simd32_ms =
+            suite.bench("causal_chunked_f32_simd_kernels/L8192", 1, 5, || {
+                std::hint::black_box(
+                    engine::chunked_causal_linear_attention32(
+                        &phi_q32, &phi_k32, &v32, chunk,
+                    ),
+                );
+            });
+        let out_simd =
+            engine::chunked_causal_linear_attention(&phi_q, &phi_k, &v, chunk);
+        assert_eq!(
+            out_scalar.data(),
+            out_simd.data(),
+            "dispatched kernels must be bitwise-identical to the fallback"
+        );
+
+        let speedup64 = scalar64_ms / simd64_ms;
+        let speedup32 = scalar32_ms / simd32_ms;
+        println!(
+            "simd-vs-scalar chunked speedup ({}): f64 {:.2}x, f32 {:.2}x",
+            simd::active_isa(),
+            speedup64,
+            speedup32
+        );
+        suite.metric("simd_vs_scalar_chunked_f64_L8192", speedup64);
+        suite.metric("simd_vs_scalar_chunked_f32_L8192", speedup32);
+    }
+    suite.metric_str("active_isa", simd::active_isa());
 
     if let Err(e) = suite.write() {
         eprintln!("could not write bench json: {e}");

@@ -107,6 +107,7 @@ fn main() {
     };
     suite.metric("h8_over_h1_wallclock_L8192", at(8, 8192) / at(1, 8192));
     suite.metric("h8_over_h1_wallclock_L65536", at(8, 65536) / at(1, 65536));
+    suite.metric_str("active_isa", darkformer::linalg::simd::active_isa());
 
     if let Err(e) = suite.write() {
         eprintln!("could not write bench json: {e}");

@@ -13,12 +13,15 @@
 //! drifted half of the stream, divided by the online-resampling
 //! variance — > 1 means adapting the bank beats freezing it) with
 //! `online_resample_overhead_f64` (wall-clock cost of the resampling
-//! machinery on the same workload).
+//! machinery on the same workload), and
+//! `simd_vs_scalar_serve_s8_{f64,f32}` (one scheduling round under the
+//! forced-scalar fallback vs the dispatched SIMD kernels, with the
+//! effective ISA recorded as `active_isa`).
 //!
 //! Run: `cargo bench --bench serving`.
 
 use darkformer::bench::BenchSuite;
-use darkformer::linalg::Matrix;
+use darkformer::linalg::{simd, Matrix};
 use darkformer::rfa::engine::Head;
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{
@@ -391,6 +394,63 @@ fn main() {
         "online resampling overhead (f64, K={DRIFT_SEG}): {:.2}x",
         t_online / t_static
     );
+
+    // SIMD dispatch A/B: one 8-session scheduling round per precision on
+    // a single worker (isolating kernel throughput from scheduling),
+    // forced-scalar fallback vs dispatched kernels. Outputs are bitwise-
+    // identical by the dispatch contract, so only the wall-clock moves.
+    let prev = simd::set_isa(simd::Isa::Scalar);
+    let scalar64 = bench_round(
+        &mut suite,
+        "serve/f64/s8/scalar_kernels",
+        Precision::F64,
+        1,
+        0,
+        8,
+        true,
+        3,
+    );
+    let scalar32 = bench_round(
+        &mut suite,
+        "serve/f32/s8/scalar_kernels",
+        Precision::F32,
+        1,
+        0,
+        8,
+        true,
+        3,
+    );
+    simd::set_isa(prev);
+    let simd64 = bench_round(
+        &mut suite,
+        "serve/f64/s8/simd_kernels",
+        Precision::F64,
+        1,
+        0,
+        8,
+        true,
+        3,
+    );
+    let simd32 = bench_round(
+        &mut suite,
+        "serve/f32/s8/simd_kernels",
+        Precision::F32,
+        1,
+        0,
+        8,
+        true,
+        3,
+    );
+    suite.metric("simd_vs_scalar_serve_s8_f64", scalar64 / simd64);
+    suite.metric("simd_vs_scalar_serve_s8_f32", scalar32 / simd32);
+    println!(
+        "\nsimd-vs-scalar serve round (8 sessions, 1 worker, {}): \
+         f64 {:.2}x, f32 {:.2}x",
+        simd::active_isa(),
+        scalar64 / simd64,
+        scalar32 / simd32
+    );
+    suite.metric_str("active_isa", simd::active_isa());
 
     if let Err(e) = suite.write() {
         eprintln!("could not write bench json: {e}");

@@ -227,6 +227,7 @@ fn main() {
         let big = anisotropic_covariance(32, 0.2, 0.5, &mut rng.clone());
         std::hint::black_box(big.jacobi_eigen());
     });
+    suite.metric_str("active_isa", darkformer::linalg::simd::active_isa());
 
     if let Err(e) = suite.write() {
         eprintln!("could not write bench json: {e}");

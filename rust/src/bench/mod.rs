@@ -54,11 +54,17 @@ pub struct BenchSuite {
     suite: String,
     results: Vec<BenchResult>,
     metrics: Vec<(String, f64)>,
+    str_metrics: Vec<(String, String)>,
 }
 
 impl BenchSuite {
     pub fn new(suite: impl Into<String>) -> Self {
-        Self { suite: suite.into(), results: Vec::new(), metrics: Vec::new() }
+        Self {
+            suite: suite.into(),
+            results: Vec::new(),
+            metrics: Vec::new(),
+            str_metrics: Vec::new(),
+        }
     }
 
     /// Run [`bench`] and record the result; returns the mean ms.
@@ -85,6 +91,13 @@ impl BenchSuite {
         self.metrics.push((key.into(), value));
     }
 
+    /// Record a free-form string metric (e.g. the active SIMD ISA).
+    /// Serialized into the same `metrics` object; `bench_diff` skips
+    /// non-numeric values, so string metrics annotate without diffing.
+    pub fn metric_str(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.str_metrics.push((key.into(), value.into()));
+    }
+
     /// Serialize the whole suite.
     pub fn to_json(&self) -> Json {
         let mut obj = JsonObj::new();
@@ -96,6 +109,9 @@ impl BenchSuite {
         let mut metrics = JsonObj::new();
         for (k, v) in &self.metrics {
             metrics.insert(k.clone(), Json::Num(*v));
+        }
+        for (k, v) in &self.str_metrics {
+            metrics.insert(k.clone(), Json::Str(v.clone()));
         }
         obj.insert("metrics", Json::Obj(metrics));
         Json::Obj(obj)
@@ -195,6 +211,7 @@ mod tests {
             p50_ms: 1.25,
         });
         suite.metric("speedup", 6.5);
+        suite.metric_str("active_isa", "avx2");
         let text = suite.to_json().to_string_compact();
         let back = crate::ser::parse(&text).expect("valid json");
         assert_eq!(back.field("suite").unwrap().as_str(), Some("unit"));
@@ -202,10 +219,9 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].field("name").unwrap().as_str(), Some("case"));
         assert_eq!(results[0].field("iters").unwrap().as_usize(), Some(3));
-        assert_eq!(
-            back.field("metrics").unwrap().field("speedup").unwrap().as_f64(),
-            Some(6.5)
-        );
+        let metrics = back.field("metrics").unwrap();
+        assert_eq!(metrics.field("speedup").unwrap().as_f64(), Some(6.5));
+        assert_eq!(metrics.field("active_isa").unwrap().as_str(), Some("avx2"));
     }
 
     #[test]

@@ -3,10 +3,14 @@
 //! One kernel structure serves every precision: the tiled
 //! [`Mat::matmul`], the transpose-free [`Mat::matmul_transb`] /
 //! [`Mat::matmul_transa`] contractions, and the [`Scalar::dot`]-based
-//! row kernels are written once against the trait and compile to the
-//! same autovectorized loops the hand-split f64/f32 types used to carry.
-//! Length-L reductions ([`Mat::col_sums`], [`Mat::matvec_accum`]) land
-//! in [`Scalar::Accum`] per the accumulation-policy contract.
+//! row kernels are written once against the trait. The inner loops run
+//! through the sealed [`Scalar`] kernel hooks (`axpy`/`axpy4`, `dot`/
+//! `dot4`, `accum_row`, `dot_seq_accum`), which dispatch into
+//! [`crate::linalg::simd`] — explicit AVX2/AVX-512/NEON microkernels with
+//! a portable fallback, all bitwise-identical, so this file only decides
+//! *tiling and traversal order* and never sees an intrinsic. Length-L
+//! reductions ([`Mat::col_sums`], [`Mat::matvec_accum`]) land in
+//! [`Scalar::Accum`] per the accumulation-policy contract.
 //!
 //! Decompositions (Cholesky, eigen, inverses) stay f64-only in
 //! `impl Mat<f64>` — they are setup-time operations where precision
@@ -108,9 +112,7 @@ impl<T: Scalar> Mat<T> {
     pub fn col_sums(&self) -> Vec<T::Accum> {
         let mut out = vec![<T::Accum as Scalar>::ZERO; self.cols];
         for r in 0..self.rows {
-            for (o, &x) in out.iter_mut().zip(self.row(r)) {
-                *o += x.to_accum();
-            }
+            T::accum_row(&mut out, self.row(r));
         }
         out
     }
@@ -141,12 +143,29 @@ impl<T: Scalar> Mat<T> {
                 for i in 0..m {
                     let arow = &self.data[i * kk..(i + 1) * kk];
                     let orow = &mut out.data[i * n + jb..i * n + je];
-                    for k in kb..ke {
-                        let a = arow[k];
+                    // Register-blocked: four k-panels per pass over the
+                    // output row chunk. Per element the k accumulation
+                    // still runs in ascending order (bitwise vs the
+                    // unblocked loop); KT is a multiple of 4, so the
+                    // remainder loop only fires in the last k tile.
+                    let mut k = kb;
+                    while k + 4 <= ke {
+                        T::axpy4(
+                            orow,
+                            [arow[k], arow[k + 1], arow[k + 2], arow[k + 3]],
+                            [
+                                &other.data[k * n + jb..k * n + je],
+                                &other.data[(k + 1) * n + jb..(k + 1) * n + je],
+                                &other.data[(k + 2) * n + jb..(k + 2) * n + je],
+                                &other.data[(k + 3) * n + jb..(k + 3) * n + je],
+                            ],
+                        );
+                        k += 4;
+                    }
+                    while k < ke {
                         let brow = &other.data[k * n + jb..k * n + je];
-                        for (o, &b) in orow.iter_mut().zip(brow) {
-                            *o += a * b;
-                        }
+                        T::axpy(orow, arow[k], brow);
+                        k += 1;
                     }
                 }
                 kb = ke;
@@ -170,8 +189,26 @@ impl<T: Scalar> Mat<T> {
         for i in 0..m {
             let arow = self.row(i);
             let orow = &mut out.data[i * n..(i + 1) * n];
-            for (o, j) in orow.iter_mut().zip(0..n) {
-                *o = T::dot(arow, other.row(j));
+            // Four output columns per pass share the `arow` loads through
+            // the dot4 microkernel; each output is still the plain
+            // `Scalar::dot` fold, so blocking is bitwise-free.
+            let mut j = 0;
+            while j + 4 <= n {
+                let d = T::dot4(
+                    arow,
+                    [
+                        other.row(j),
+                        other.row(j + 1),
+                        other.row(j + 2),
+                        other.row(j + 3),
+                    ],
+                );
+                orow[j..j + 4].copy_from_slice(&d);
+                j += 4;
+            }
+            while j < n {
+                orow[j] = T::dot(arow, other.row(j));
+                j += 1;
             }
         }
         out
@@ -188,15 +225,34 @@ impl<T: Scalar> Mat<T> {
         assert_eq!(self.rows, other.rows, "matmul_transa shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for r in 0..k {
+        // Four rank-1 updates per pass over the output: per element the r
+        // accumulation still applies in ascending order (bitwise vs the
+        // one-row-at-a-time loop), but `out` is loaded/stored once per
+        // block of four instead of once per row.
+        let mut r = 0;
+        while r + 4 <= k {
+            let arows = [self.row(r), self.row(r + 1), self.row(r + 2), self.row(r + 3)];
+            let brows = [
+                other.row(r),
+                other.row(r + 1),
+                other.row(r + 2),
+                other.row(r + 3),
+            ];
+            for i in 0..m {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                let a = [arows[0][i], arows[1][i], arows[2][i], arows[3][i]];
+                T::axpy4(orow, a, brows);
+            }
+            r += 4;
+        }
+        while r < k {
             let arow = self.row(r);
             let brow = other.row(r);
             for (i, &a) in arow.iter().enumerate() {
                 let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
+                T::axpy(orow, a, brow);
             }
+            r += 1;
         }
         out
     }
@@ -207,15 +263,37 @@ impl<T: Scalar> Mat<T> {
     /// the division must happen in the accumulator domain.
     pub fn matvec_accum(&self, x: &[T]) -> Vec<T::Accum> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|r| {
-                self.row(r)
-                    .iter()
-                    .zip(x)
-                    .map(|(&a, &b)| a.to_accum() * b.to_accum())
-                    .fold(<T::Accum as Scalar>::ZERO, |acc, t| acc + t)
-            })
-            .collect()
+        (0..self.rows).map(|r| T::dot_seq_accum(self.row(r), x)).collect()
+    }
+
+    /// Transpose as a standalone matrix.
+    ///
+    /// Cache-blocked in 32×32 tiles: within a tile both the row-major
+    /// reads and the column-strided writes touch at most 32 distinct
+    /// cache lines, so one of the two streams always stays resident
+    /// instead of thrashing on every element the way the naive
+    /// column-strided double loop does. A pure permutation — output is
+    /// bitwise-identical regardless of blocking. Sits on snapshot/serve
+    /// paths (and under the `matmul(&b.transpose())` test references).
+    pub fn transpose(&self) -> Mat<T> {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        const B: usize = 32;
+        let mut rb = 0;
+        while rb < self.rows {
+            let re = (rb + B).min(self.rows);
+            let mut cb = 0;
+            while cb < self.cols {
+                let ce = (cb + B).min(self.cols);
+                for r in rb..re {
+                    for c in cb..ce {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+                cb = ce;
+            }
+            rb = re;
+        }
+        t
     }
 
     pub fn scale(&self, s: T) -> Mat<T> {
@@ -293,16 +371,6 @@ impl Matrix {
             m[(i, i)] = v;
         }
         m
-    }
-
-    pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[(c, r)] = self[(r, c)];
-            }
-        }
-        t
     }
 
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {

@@ -1,4 +1,5 @@
-//! Dense linear-algebra substrate (row-major).
+//! Dense linear-algebra substrate (row-major) with runtime-dispatched
+//! explicit-SIMD microkernels.
 //!
 //! Powers the pure-Rust random-feature analysis in [`crate::rfa`]: building
 //! anisotropic covariances, Cholesky-sampling Gaussians, and evaluating the
@@ -6,17 +7,52 @@
 //! `(I + 2L)(I - 2L)^{-1}` and eigen-decompositions. Deliberately small —
 //! just what the reproduction needs, tested against hand-computable cases.
 //!
-//! Storage precisions live behind the sealed [`Scalar`] backend trait:
-//! one generic [`Mat<T>`] carries the SIMD-tiled multiply/contract
-//! kernels for every precision, with [`Matrix`] (= `Mat<f64>`) the
-//! default that additionally carries every decomposition, and
-//! [`Matrix32`] (= `Mat<f32>`) the attention engine's hot path — half
-//! the memory traffic, twice the lanes per register. Long reductions
-//! always accumulate in [`Scalar::Accum`] (f64); see `scalar.rs` for the
-//! policy contract.
+//! # Layering: who decides what
+//!
+//! The stack separates three concerns, one module each:
+//!
+//! * **`mat` — tiling and traversal order.** `Mat<T>` owns shapes, cache
+//!   tiles (`matmul`'s KT×JT panels, the blocked `transpose`), and which
+//!   microkernel each contraction feeds (`axpy4` row updates, `dot4`
+//!   column blocks, rank-1 `axpy` sweeps). It never sees an intrinsic.
+//! * **`scalar` — precision and policy.** The sealed [`Scalar`] trait
+//!   binds one storage precision to its kernel hooks (`dot`, `dot4`,
+//!   `axpy`, `axpy4`, `accum_row`, `dot_seq_accum`, `feature_finish`) and
+//!   to the accumulation policy [`Scalar::Accum`] (= `f64` for every
+//!   impl): sequence-length sums — running `S`/`z`, denominators, the
+//!   feature-map exponent — always accumulate in f64. Because the hooks
+//!   hang off the sealed trait, `Mat<T>` call sites are identical for
+//!   every precision and adding a precision (bf16/f16 emulation: double
+//!   the lanes, half the session-resident bytes) stays a one-impl job.
+//! * **[`simd`] — instruction selection.** Each hook dispatches on a
+//!   process-wide ISA decided *once* (AVX2/AVX-512 via
+//!   `is_x86_feature_detected!`, NEON as the aarch64 baseline, portable
+//!   scalar fallback everywhere else) and cached in an atomic. The
+//!   `RFA_SIMD=scalar` env override forces the fallback for A/B timing;
+//!   [`simd::set_isa`] switches in-process (benches, dual-mode tests);
+//!   [`simd::active_isa`] names the effective ISA for `BENCH_*.json`.
+//!
+//! # The bitwise contract
+//!
+//! Every ISA's kernels are **bitwise-identical** to the portable
+//! reference in [`simd::fallback`] — the dispatch decision is invisible
+//! in results, only in throughput. That is what lets `rfa_generic.rs`
+//! pin end-to-end forwards with `assert_eq!` under *both* dispatch
+//! modes, and what makes serve-layer determinism (snapshots, epoch
+//! resume) independent of the machine's vector width. How each kernel
+//! family earns the property (frozen accumulator layouts, no FMA,
+//! scalar-order reductions, scalar libm `exp`, in-order sequential
+//! folds) is documented in [`simd::fallback`]; the procedure for adding
+//! a new ISA without breaking it is in [`simd`]'s module docs.
+//!
+//! [`Matrix`] (= `Mat<f64>`) is the default precision and additionally
+//! carries every decomposition; [`Matrix32`] (= `Mat<f32>`) is the
+//! attention engine's hot path — half the memory traffic, twice the
+//! lanes per register.
 
 mod mat;
 mod scalar;
+pub mod simd;
 
 pub use mat::{Mat, Matrix, Matrix32};
 pub use scalar::{dot32, dot_unrolled as dot, Scalar};

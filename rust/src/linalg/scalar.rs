@@ -30,6 +30,7 @@ use std::fmt;
 use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Sub, SubAssign};
 
 use super::mat::Mat;
+use super::simd;
 
 mod sealed {
     pub trait Sealed {}
@@ -95,8 +96,42 @@ pub trait Scalar:
     /// [`dot_unrolled`] (4 independent f64 accumulators) for `f64`,
     /// [`dot32`] (8 f32 lanes) for `f32`. Summation order differs from a
     /// sequential fold — fine for fresh gram entries, the contract both
-    /// kernels have always had.
+    /// kernels have always had. Routes through [`crate::linalg::simd`]:
+    /// the explicit-SIMD implementations keep the exact accumulator
+    /// layout, so dispatch never changes the result.
     fn dot(a: &[Self], b: &[Self]) -> Self;
+
+    /// Four dots against a shared left operand — the `matmul_transb`
+    /// 4-column microkernel. Each output is bitwise-equal to a separate
+    /// [`Scalar::dot`] call; the SIMD paths share the left-operand loads.
+    fn dot4(a: &[Self], b: [&[Self]; 4]) -> [Self; 4];
+
+    /// `out[j] += a * x[j]` — the tiled `matmul` row update. Elementwise,
+    /// so every ISA is bitwise-identical.
+    fn axpy(out: &mut [Self], a: Self, x: &[Self]);
+
+    /// Register-blocked 4-column row update: per output element the four
+    /// `mul`+`add` pairs apply in ascending operand order, bitwise-equal
+    /// to four consecutive [`Scalar::axpy`] calls but with one load/store
+    /// pass over `out`.
+    fn axpy4(out: &mut [Self], a: [Self; 4], x: [&[Self]; 4]);
+
+    /// `out[j] += row[j]` widened into the accumulator domain — one row
+    /// step of `Mat::col_sums`.
+    fn accum_row(out: &mut [Self::Accum], row: &[Self]);
+
+    /// Strictly sequential widening dot in the accumulator domain — the
+    /// `Mat::matvec_accum` fold behind denominators and normalizers (one
+    /// running sum in ascending index order, *not* the reassociated
+    /// [`Scalar::dot`] fold). SIMD may vectorize only the widen+multiply
+    /// stage.
+    fn dot_seq_accum(a: &[Self], b: &[Self]) -> Self::Accum;
+
+    /// Feature-map finish `row[j] = exp(row[j] - a) * sqrt_w[j]`: widen to
+    /// the accumulator domain, subtract, scalar-libm `exp`, scale, round
+    /// back to storage once per element (the exponent inner loop of
+    /// `FeatureBank::feature_matrix_t`).
+    fn feature_finish(row: &mut [Self], a: f64, sqrt_w: &[f64]);
 
     /// Borrow-or-round an f64 matrix into this precision: a borrow when
     /// `Self` *is* f64, one rounded copy otherwise. This is how f64-side
@@ -147,7 +182,37 @@ impl Scalar for f64 {
 
     #[inline(always)]
     fn dot(a: &[Self], b: &[Self]) -> Self {
-        dot_unrolled(a, b)
+        simd::dot_f64(a, b)
+    }
+
+    #[inline(always)]
+    fn dot4(a: &[Self], b: [&[Self]; 4]) -> [Self; 4] {
+        simd::dot4_f64(a, b)
+    }
+
+    #[inline(always)]
+    fn axpy(out: &mut [Self], a: Self, x: &[Self]) {
+        simd::axpy_f64(out, a, x)
+    }
+
+    #[inline(always)]
+    fn axpy4(out: &mut [Self], a: [Self; 4], x: [&[Self]; 4]) {
+        simd::axpy4_f64(out, a, x)
+    }
+
+    #[inline(always)]
+    fn accum_row(out: &mut [f64], row: &[Self]) {
+        simd::accum_row_f64(out, row)
+    }
+
+    #[inline(always)]
+    fn dot_seq_accum(a: &[Self], b: &[Self]) -> f64 {
+        simd::dot_seq_f64(a, b)
+    }
+
+    #[inline(always)]
+    fn feature_finish(row: &mut [Self], a: f64, sqrt_w: &[f64]) {
+        simd::feature_finish_f64(row, a, sqrt_w)
     }
 
     fn mat_from_f64(m: &Mat<f64>) -> Cow<'_, Mat<f64>> {
@@ -197,7 +262,37 @@ impl Scalar for f32 {
 
     #[inline(always)]
     fn dot(a: &[Self], b: &[Self]) -> Self {
-        dot32(a, b)
+        simd::dot_f32(a, b)
+    }
+
+    #[inline(always)]
+    fn dot4(a: &[Self], b: [&[Self]; 4]) -> [Self; 4] {
+        simd::dot4_f32(a, b)
+    }
+
+    #[inline(always)]
+    fn axpy(out: &mut [Self], a: Self, x: &[Self]) {
+        simd::axpy_f32(out, a, x)
+    }
+
+    #[inline(always)]
+    fn axpy4(out: &mut [Self], a: [Self; 4], x: [&[Self]; 4]) {
+        simd::axpy4_f32(out, a, x)
+    }
+
+    #[inline(always)]
+    fn accum_row(out: &mut [f64], row: &[Self]) {
+        simd::accum_row_f32(out, row)
+    }
+
+    #[inline(always)]
+    fn dot_seq_accum(a: &[Self], b: &[Self]) -> f64 {
+        simd::dot_seq_f32(a, b)
+    }
+
+    #[inline(always)]
+    fn feature_finish(row: &mut [Self], a: f64, sqrt_w: &[f64]) {
+        simd::feature_finish_f32(row, a, sqrt_w)
     }
 
     fn mat_from_f64(m: &Mat<f64>) -> Cow<'_, Mat<f32>> {
@@ -214,50 +309,30 @@ impl Scalar for f32 {
 }
 
 /// f64 dot product with four independent accumulators: breaks the
-/// add-latency dependency chain so the compiler can keep multiple FMAs in
-/// flight. Summation order differs from a sequential fold, which is fine
-/// for the fresh entries [`Mat::matmul_transb`] produces. Public as
+/// add-latency dependency chain so multiple multiply/adds stay in flight.
+/// Summation order differs from a sequential fold, which is fine for the
+/// fresh entries [`Mat::matmul_transb`] produces. Public as
 /// [`crate::linalg::dot`]: the attention engines use it for masked
 /// row-wise score computation where a full gram would waste work.
+///
+/// Dispatches through [`crate::linalg::simd`]; the reference body (and
+/// frozen fold shape every ISA reproduces bitwise) is
+/// [`crate::linalg::simd::fallback::dot_f64`].
+#[inline(always)]
 pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        acc[0] += xa[0] * xb[0];
-        acc[1] += xa[1] * xb[1];
-        acc[2] += xa[2] * xb[2];
-        acc[3] += xa[3] * xb[3];
-    }
-    let mut tail = 0.0;
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        tail += x * y;
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    simd::dot_f64(a, b)
 }
 
-/// f32 dot with eight independent accumulators: at 8 f32 lanes per
-/// 256-bit register this keeps a full vector of FMAs in flight per
-/// accumulator. Summation order differs from a sequential fold (fine for
-/// fresh gram entries, same contract as the f64 [`dot_unrolled`]).
+/// f32 dot with eight independent accumulators — one full 256-bit vector
+/// of f32 lanes per step. Summation order differs from a sequential fold
+/// (fine for fresh gram entries, same contract as the f64
+/// [`dot_unrolled`]).
+///
+/// Dispatches through [`crate::linalg::simd`]; the reference body is
+/// [`crate::linalg::simd::fallback::dot_f32`].
+#[inline(always)]
 pub fn dot32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let mut ca = a.chunks_exact(8);
-    let mut cb = b.chunks_exact(8);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for (a, (&x, &y)) in acc.iter_mut().zip(xa.iter().zip(xb)) {
-            *a += x * y;
-        }
-    }
-    let mut tail = 0.0;
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        tail += x * y;
-    }
-    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
-        + tail
+    simd::dot_f32(a, b)
 }
 
 #[cfg(test)]

@@ -1,0 +1,124 @@
+//! AVX-512 microkernels (x86-64, behind the off-by-default `avx512` cargo
+//! feature — the 512-bit intrinsics stabilized much later than AVX2, so
+//! the default build keeps the older-toolchain-friendly surface).
+//!
+//! Only the *elementwise* kernels get 512-bit variants: they carry one
+//! independent rounding chain per output element, so doubling the lane
+//! width is bitwise-free. The dot-family folds are pinned to the 256-bit
+//! lane decomposition (four f64 / eight f32 accumulators) and route to the
+//! AVX2 bodies in [`super::x86`] — a 512-bit fold would change the
+//! association and break the bitwise contract.
+
+#![cfg(all(target_arch = "x86_64", feature = "avx512"))]
+
+use core::arch::x86_64::*;
+
+/// `out[j] += a * x[j]` at 512-bit width (elementwise ⇒ bitwise).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let body = n / 8 * 8;
+    let av = _mm512_set1_pd(a);
+    let mut i = 0;
+    while i < body {
+        let o = _mm512_loadu_pd(out.as_ptr().add(i));
+        let v = _mm512_loadu_pd(x.as_ptr().add(i));
+        _mm512_storeu_pd(out.as_mut_ptr().add(i), _mm512_add_pd(o, _mm512_mul_pd(av, v)));
+        i += 8;
+    }
+    for j in body..n {
+        out[j] += a * x[j];
+    }
+}
+
+/// `out[j] += a * x[j]` at 512-bit width (single-precision).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn axpy_f32(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let body = n / 16 * 16;
+    let av = _mm512_set1_ps(a);
+    let mut i = 0;
+    while i < body {
+        let o = _mm512_loadu_ps(out.as_ptr().add(i));
+        let v = _mm512_loadu_ps(x.as_ptr().add(i));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_add_ps(o, _mm512_mul_ps(av, v)));
+        i += 16;
+    }
+    for j in body..n {
+        out[j] += a * x[j];
+    }
+}
+
+/// Register-blocked 4-column update at 512-bit width; per element the four
+/// `mul`+`add` pairs apply in ascending operand order (elementwise ⇒
+/// bitwise vs [`super::fallback::axpy4_f64`]).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn axpy4_f64(out: &mut [f64], a: [f64; 4], x: [&[f64]; 4]) {
+    let n = out.len();
+    debug_assert!(x.iter().all(|xi| xi.len() == n));
+    let a0 = _mm512_set1_pd(a[0]);
+    let a1 = _mm512_set1_pd(a[1]);
+    let a2 = _mm512_set1_pd(a[2]);
+    let a3 = _mm512_set1_pd(a[3]);
+    let body = n / 8 * 8;
+    let mut i = 0;
+    while i < body {
+        let mut o = _mm512_loadu_pd(out.as_ptr().add(i));
+        o = _mm512_add_pd(o, _mm512_mul_pd(a0, _mm512_loadu_pd(x[0].as_ptr().add(i))));
+        o = _mm512_add_pd(o, _mm512_mul_pd(a1, _mm512_loadu_pd(x[1].as_ptr().add(i))));
+        o = _mm512_add_pd(o, _mm512_mul_pd(a2, _mm512_loadu_pd(x[2].as_ptr().add(i))));
+        o = _mm512_add_pd(o, _mm512_mul_pd(a3, _mm512_loadu_pd(x[3].as_ptr().add(i))));
+        _mm512_storeu_pd(out.as_mut_ptr().add(i), o);
+        i += 8;
+    }
+    for j in body..n {
+        let o = &mut out[j];
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// Register-blocked 4-column update at 512-bit width (single-precision).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn axpy4_f32(out: &mut [f32], a: [f32; 4], x: [&[f32]; 4]) {
+    let n = out.len();
+    debug_assert!(x.iter().all(|xi| xi.len() == n));
+    let a0 = _mm512_set1_ps(a[0]);
+    let a1 = _mm512_set1_ps(a[1]);
+    let a2 = _mm512_set1_ps(a[2]);
+    let a3 = _mm512_set1_ps(a[3]);
+    let body = n / 16 * 16;
+    let mut i = 0;
+    while i < body {
+        let mut o = _mm512_loadu_ps(out.as_ptr().add(i));
+        o = _mm512_add_ps(o, _mm512_mul_ps(a0, _mm512_loadu_ps(x[0].as_ptr().add(i))));
+        o = _mm512_add_ps(o, _mm512_mul_ps(a1, _mm512_loadu_ps(x[1].as_ptr().add(i))));
+        o = _mm512_add_ps(o, _mm512_mul_ps(a2, _mm512_loadu_ps(x[2].as_ptr().add(i))));
+        o = _mm512_add_ps(o, _mm512_mul_ps(a3, _mm512_loadu_ps(x[3].as_ptr().add(i))));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), o);
+        i += 16;
+    }
+    for j in body..n {
+        let o = &mut out[j];
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}

@@ -1,0 +1,198 @@
+//! Portable reference kernels — the semantic contract for every ISA.
+//!
+//! Each function here is the *definition* of the corresponding dispatch
+//! entry point in [`super`]: an explicit-SIMD implementation for some ISA
+//! is correct iff it produces bitwise-identical results to the function in
+//! this module for every input. The fold shapes are frozen:
+//!
+//! - [`dot_f64`] is the historical `dot_unrolled` kernel: four independent
+//!   accumulators over `chunks_exact(4)`, sequential tail, reduced as
+//!   `(acc0 + acc1) + (acc2 + acc3) + tail`. A 256-bit lane group (or two
+//!   128-bit NEON registers) maps onto those four accumulators exactly, so
+//!   AVX2/NEON dots are bitwise-identical by construction.
+//! - [`dot_f32`] is the historical `dot32` kernel: eight accumulators over
+//!   `chunks_exact(8)`, reduced pairwise as
+//!   `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7)) + tail` — one 8-lane `f32`
+//!   vector, or two NEON quads.
+//! - The elementwise kernels ([`axpy_f64`], [`axpy4_f64`], [`accum_row_f64`],
+//!   their `f32` twins, and [`feature_finish_f64`]/[`feature_finish_f32`])
+//!   have one independent rounding chain per output element, so *any*
+//!   vector width is bitwise-identical as long as the per-element operation
+//!   order is preserved (`mul` then `add`, never fused).
+//! - [`dot_seq_f64`]/[`dot_seq_f32`] are the strictly sequential widening
+//!   folds behind `Mat::matvec_accum` (denominator contract: one running
+//!   `f64` accumulator, ascending index order). SIMD variants may vectorize
+//!   the widen+multiply stage only; the fold itself must stay in-order.
+//!
+//! These functions double as the oracle for `rust/tests/linalg_simd.rs`.
+
+/// Dot product with four independent accumulators (frozen `dot_unrolled`).
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Dot product with eight independent `f32` accumulators (frozen `dot32`).
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+        acc[4] += xa[4] * xb[4];
+        acc[5] += xa[5] * xb[5];
+        acc[6] += xa[6] * xb[6];
+        acc[7] += xa[7] * xb[7];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
+/// Four dot products against a shared left operand; each output is the
+/// plain [`dot_f64`] fold, so this is bitwise-equal to four separate calls.
+pub fn dot4_f64(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    [
+        dot_f64(a, b[0]),
+        dot_f64(a, b[1]),
+        dot_f64(a, b[2]),
+        dot_f64(a, b[3]),
+    ]
+}
+
+/// Four dot products against a shared left operand ([`dot_f32`] fold).
+pub fn dot4_f32(a: &[f32], b: [&[f32]; 4]) -> [f32; 4] {
+    [
+        dot_f32(a, b[0]),
+        dot_f32(a, b[1]),
+        dot_f32(a, b[2]),
+        dot_f32(a, b[3]),
+    ]
+}
+
+/// `out[j] += a * x[j]` — the inner row update of the tiled `matmul`.
+pub fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+/// `out[j] += a * x[j]` (single-precision).
+pub fn axpy_f32(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+/// Register-blocked 4-column update:
+/// `out[j] += a[0]*x0[j]; out[j] += a[1]*x1[j]; ...` per element, in
+/// ascending operand order. Per output element this is exactly the
+/// rounding chain of four consecutive [`axpy_f64`] calls, so fusing the
+/// four updates into one pass over `out` is bitwise-free.
+pub fn axpy4_f64(out: &mut [f64], a: [f64; 4], x: [&[f64]; 4]) {
+    debug_assert_eq!(out.len(), x[0].len());
+    debug_assert_eq!(out.len(), x[1].len());
+    debug_assert_eq!(out.len(), x[2].len());
+    debug_assert_eq!(out.len(), x[3].len());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// Register-blocked 4-column update (single-precision).
+pub fn axpy4_f32(out: &mut [f32], a: [f32; 4], x: [&[f32]; 4]) {
+    debug_assert_eq!(out.len(), x[0].len());
+    debug_assert_eq!(out.len(), x[1].len());
+    debug_assert_eq!(out.len(), x[2].len());
+    debug_assert_eq!(out.len(), x[3].len());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// `out[j] += row[j]` — one row step of `Mat::<f64>::col_sums`.
+pub fn accum_row_f64(out: &mut [f64], row: &[f64]) {
+    debug_assert_eq!(out.len(), row.len());
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o += v;
+    }
+}
+
+/// `out[j] += row[j] as f64` — one widening row step of
+/// `Mat::<f32>::col_sums` (the `Scalar::Accum = f64` policy).
+pub fn accum_row_f32(out: &mut [f64], row: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o += v as f64;
+    }
+}
+
+/// Strictly sequential dot in the accumulator type: one running `f64`
+/// sum in ascending index order (the `matvec_accum` denominator fold).
+pub fn dot_seq_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Strictly sequential widening dot: products formed in `f64`, summed in
+/// ascending index order.
+pub fn dot_seq_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as f64 * y as f64;
+    }
+    acc
+}
+
+/// Feature-map finish: `row[j] = exp(row[j] - a) * sqrt_w[j]`, all in
+/// `f64`. `exp` is always the scalar libm call — a vector polynomial
+/// `exp` could not be bitwise-identical — so SIMD variants may vectorize
+/// only the subtract/multiply stages around it.
+pub fn feature_finish_f64(row: &mut [f64], a: f64, sqrt_w: &[f64]) {
+    debug_assert_eq!(row.len(), sqrt_w.len());
+    for (p, &sw) in row.iter_mut().zip(sqrt_w) {
+        *p = (*p - a).exp() * sw;
+    }
+}
+
+/// Feature-map finish on `f32` storage: widen to `f64`, subtract,
+/// scalar-libm `exp`, scale, round once back to `f32` (round-to-nearest,
+/// identical to an `as f32` cast).
+pub fn feature_finish_f32(row: &mut [f32], a: f64, sqrt_w: &[f64]) {
+    debug_assert_eq!(row.len(), sqrt_w.len());
+    for (p, &sw) in row.iter_mut().zip(sqrt_w) {
+        *p = ((*p as f64 - a).exp() * sw) as f32;
+    }
+}

@@ -1,0 +1,424 @@
+//! Runtime-dispatched explicit-SIMD microkernels for the `Scalar` stack.
+//!
+//! # Architecture
+//!
+//! This module is the single funnel between the generic [`Mat<T>`] /
+//! [`Scalar`] call sites and the per-ISA kernel implementations:
+//!
+//! ```text
+//!   Mat<T> / FeatureBank / CausalState
+//!        │  (sealed Scalar kernel hooks: dot, dot4, axpy, axpy4, ...)
+//!        ▼
+//!   linalg::simd  — dispatch functions (this file)
+//!        │  isa(): one cached AtomicU8, detection runs once
+//!        ├── x86.rs      AVX2 kernels            (x86-64)
+//!        ├── avx512.rs   AVX-512 elementwise     (x86-64 + `avx512` feature)
+//!        ├── neon.rs     NEON kernels            (aarch64)
+//!        └── fallback.rs portable reference      (every target)
+//! ```
+//!
+//! The ISA is detected once (`is_x86_feature_detected!` on x86-64; NEON is
+//! baseline on aarch64) and cached in a process-wide atomic. The
+//! `RFA_SIMD` environment variable overrides detection at first use —
+//! `RFA_SIMD=scalar` forces the portable fallback everywhere (A/B timing,
+//! debugging), and a named ISA (`avx2`, `avx512`, `neon`) is honored only
+//! if the running CPU actually supports it. [`set_isa`] changes the
+//! effective ISA in-process (benches use it for dispatched-vs-scalar
+//! speedup metrics; tests use it to run golden pins under both modes).
+//!
+//! # Bitwise policy
+//!
+//! Every kernel in every ISA module is **bitwise-identical** to its
+//! [`fallback`] reference — the fallback bodies are the frozen historical
+//! kernels (`dot_unrolled`, `dot32`, the tiled-matmul row update, the
+//! sequential `matvec_accum` fold, the feature-map exponent loop), and
+//! `rust/tests/linalg_simd.rs` pins dispatched-vs-fallback equality with
+//! `to_bits` across adversarial shapes. The fold disciplines that make
+//! bitwise-at-any-ISA possible are documented in [`fallback`]; the short
+//! version: no FMA, lane groups mapped exactly onto the historical
+//! accumulator layout, scalar-order reductions, scalar libm `exp`, and
+//! sequential folds vectorized only in their widen+multiply stage.
+//! Because switching ISA never changes results, a mid-computation
+//! [`set_isa`] from another thread is numerically benign.
+//!
+//! # Adding an ISA
+//!
+//! 1. Add a variant to [`Isa`] and a `<isa>.rs` module whose kernels are
+//!    bitwise-identical to [`fallback`] (match the accumulator layouts —
+//!    e.g. a 512-bit dot must still fold as four f64 / eight f32 lanes).
+//! 2. Teach [`supported`]/`detect` to report it (runtime feature check,
+//!    gated on `target_arch` and, if the intrinsics are newer than the
+//!    repo's floor toolchain, a cargo feature like `avx512`).
+//! 3. Add an early-return arm to each dispatch function below and a name
+//!    to [`active_isa`].
+//! 4. Extend the forced-ISA loop in `rust/tests/linalg_simd.rs`; the
+//!    property suite and the `rfa_generic.rs` golden pins do the rest.
+//!
+//! [`Mat<T>`]: crate::linalg::Mat
+//! [`Scalar`]: crate::linalg::Scalar
+
+pub mod fallback;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set families the dispatcher can route to.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable fallback — the frozen reference kernels, no `std::arch`.
+    Scalar = 0,
+    /// 128-bit aarch64 NEON (baseline on that architecture).
+    Neon = 1,
+    /// 256-bit x86-64 AVX2.
+    Avx2 = 2,
+    /// 512-bit x86-64 AVX-512F (requires the `avx512` cargo feature;
+    /// dot-family folds still run the 256-bit AVX2 bodies — see
+    /// `avx512.rs`).
+    Avx512 = 3,
+}
+
+/// Sentinel for "not yet initialized" in the cached-ISA atomic.
+const UNSET: u8 = u8::MAX;
+
+/// Process-wide effective ISA, initialized on first kernel call.
+static ISA: AtomicU8 = AtomicU8::new(UNSET);
+
+fn decode(v: u8) -> Isa {
+    match v {
+        1 => Isa::Neon,
+        2 => Isa::Avx2,
+        3 => Isa::Avx512,
+        _ => Isa::Scalar,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Isa {
+    #[cfg(feature = "avx512")]
+    if is_x86_feature_detected!("avx512f") {
+        return Isa::Avx512;
+    }
+    if is_x86_feature_detected!("avx2") {
+        return Isa::Avx2;
+    }
+    Isa::Scalar
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Isa {
+    Isa::Scalar
+}
+
+/// Whether the running CPU (and compiled feature set) can execute kernels
+/// for `target`. [`Isa::Scalar`] is always supported.
+pub fn supported(target: Isa) -> bool {
+    match target {
+        Isa::Scalar => true,
+        Isa::Neon => cfg!(target_arch = "aarch64"),
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                is_x86_feature_detected!("avx2")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        Isa::Avx512 => {
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            {
+                is_x86_feature_detected!("avx512f")
+            }
+            #[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+            {
+                false
+            }
+        }
+    }
+}
+
+/// What detection alone would pick on this machine (ignores the cached
+/// override state and `RFA_SIMD`).
+pub fn detected_isa() -> Isa {
+    detect()
+}
+
+fn initial() -> Isa {
+    match std::env::var("RFA_SIMD").as_deref() {
+        Ok("scalar") => Isa::Scalar,
+        Ok("neon") if supported(Isa::Neon) => Isa::Neon,
+        Ok("avx2") if supported(Isa::Avx2) => Isa::Avx2,
+        Ok("avx512") if supported(Isa::Avx512) => Isa::Avx512,
+        _ => detect(),
+    }
+}
+
+/// The effective ISA every dispatch function routes on. First call runs
+/// detection (honoring `RFA_SIMD`) and caches the result; afterwards this
+/// is one relaxed atomic load.
+pub fn isa() -> Isa {
+    let v = ISA.load(Ordering::Relaxed);
+    if v != UNSET {
+        return decode(v);
+    }
+    let init = initial();
+    ISA.store(init as u8, Ordering::Relaxed);
+    init
+}
+
+/// Force the effective ISA for this process and return the previous one.
+///
+/// Unsupported targets are sanitized to [`Isa::Scalar`], so the dispatch
+/// functions never route to a kernel the CPU cannot run. Benches use
+/// `set_isa(Isa::Scalar)` + restore for dispatched-vs-scalar A/B timing;
+/// `rfa_generic.rs` uses it to run the golden pins under both modes. The
+/// setting is process-global; since every ISA is bitwise-identical,
+/// concurrent readers only ever see a performance difference.
+pub fn set_isa(target: Isa) -> Isa {
+    let prev = isa();
+    let eff = if supported(target) { target } else { Isa::Scalar };
+    ISA.store(eff as u8, Ordering::Relaxed);
+    prev
+}
+
+/// Human-readable name of the effective ISA (`"avx512"`, `"avx2"`,
+/// `"neon"`, or `"scalar"`). Recorded as a metric in every
+/// `BENCH_*.json` so perf numbers are comparable across machines.
+pub fn active_isa() -> &'static str {
+    match isa() {
+        Isa::Scalar => "scalar",
+        Isa::Neon => "neon",
+        Isa::Avx2 => "avx2",
+        Isa::Avx512 => "avx512",
+    }
+}
+
+// ------------------------------------------------------------ dispatch
+//
+// One function per microkernel. Each checks the cached ISA and
+// early-returns into the widest bitwise-identical implementation; the
+// portable fallback is always the final arm, so the default build runs on
+// any target with zero `std::arch` requirements.
+
+/// Dot product, frozen `dot_unrolled` fold (four f64 accumulators).
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::dot_f64(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::dot_f64(a, b) };
+    }
+    fallback::dot_f64(a, b)
+}
+
+/// Dot product, frozen `dot32` fold (eight f32 accumulators).
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::dot_f32(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::dot_f32(a, b) };
+    }
+    fallback::dot_f32(a, b)
+}
+
+/// Four dot products against a shared left operand (each the `dot_f64`
+/// fold — bitwise-equal to four separate dots).
+pub fn dot4_f64(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::dot4_f64(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::dot4_f64(a, b) };
+    }
+    fallback::dot4_f64(a, b)
+}
+
+/// Four dot products against a shared left operand (`dot_f32` fold).
+pub fn dot4_f32(a: &[f32], b: [&[f32]; 4]) -> [f32; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::dot4_f32(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::dot4_f32(a, b) };
+    }
+    fallback::dot4_f32(a, b)
+}
+
+/// `out[j] += a * x[j]` (tiled-matmul row update).
+pub fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if matches!(isa(), Isa::Avx512) {
+        // SAFETY: Avx512 is effective only after avx512f detection.
+        return unsafe { avx512::axpy_f64(out, a, x) };
+    }
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::axpy_f64(out, a, x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::axpy_f64(out, a, x) };
+    }
+    fallback::axpy_f64(out, a, x)
+}
+
+/// `out[j] += a * x[j]` (single-precision).
+pub fn axpy_f32(out: &mut [f32], a: f32, x: &[f32]) {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if matches!(isa(), Isa::Avx512) {
+        // SAFETY: Avx512 is effective only after avx512f detection.
+        return unsafe { avx512::axpy_f32(out, a, x) };
+    }
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::axpy_f32(out, a, x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::axpy_f32(out, a, x) };
+    }
+    fallback::axpy_f32(out, a, x)
+}
+
+/// Register-blocked 4-column row update (ascending operand order per
+/// element — bitwise-equal to four consecutive `axpy_f64` calls).
+pub fn axpy4_f64(out: &mut [f64], a: [f64; 4], x: [&[f64]; 4]) {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if matches!(isa(), Isa::Avx512) {
+        // SAFETY: Avx512 is effective only after avx512f detection.
+        return unsafe { avx512::axpy4_f64(out, a, x) };
+    }
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::axpy4_f64(out, a, x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::axpy4_f64(out, a, x) };
+    }
+    fallback::axpy4_f64(out, a, x)
+}
+
+/// Register-blocked 4-column row update (single-precision).
+pub fn axpy4_f32(out: &mut [f32], a: [f32; 4], x: [&[f32]; 4]) {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if matches!(isa(), Isa::Avx512) {
+        // SAFETY: Avx512 is effective only after avx512f detection.
+        return unsafe { avx512::axpy4_f32(out, a, x) };
+    }
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::axpy4_f32(out, a, x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::axpy4_f32(out, a, x) };
+    }
+    fallback::axpy4_f32(out, a, x)
+}
+
+/// `out[j] += row[j]` (one `col_sums` row step).
+pub fn accum_row_f64(out: &mut [f64], row: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::accum_row_f64(out, row) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::accum_row_f64(out, row) };
+    }
+    fallback::accum_row_f64(out, row)
+}
+
+/// `out[j] += row[j] as f64` (widening `col_sums` row step).
+pub fn accum_row_f32(out: &mut [f64], row: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::accum_row_f32(out, row) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if matches!(isa(), Isa::Neon) {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::accum_row_f32(out, row) };
+    }
+    fallback::accum_row_f32(out, row)
+}
+
+/// Strictly sequential dot (`matvec_accum` denominator fold). Always the
+/// fallback: the contract is one running `f64` sum in ascending index
+/// order, and for f64 inputs there is no widen/multiply stage left to
+/// vectorize without changing the fold association.
+pub fn dot_seq_f64(a: &[f64], b: &[f64]) -> f64 {
+    fallback::dot_seq_f64(a, b)
+}
+
+/// Strictly sequential widening dot. On AVX2 the widen+multiply stage is
+/// vectorized; the fold itself stays in ascending index order (bitwise).
+pub fn dot_seq_f32(a: &[f32], b: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::dot_seq_f32(a, b) };
+    }
+    fallback::dot_seq_f32(a, b)
+}
+
+/// Feature-map finish `row[j] = exp(row[j] - a) * sqrt_w[j]`. Always the
+/// fallback for f64 storage: `exp` must stay the scalar libm call to
+/// remain bitwise, and with no precision conversions the surrounding
+/// subtract/multiply are already single scalar ops per element.
+pub fn feature_finish_f64(row: &mut [f64], a: f64, sqrt_w: &[f64]) {
+    fallback::feature_finish_f64(row, a, sqrt_w)
+}
+
+/// Feature-map finish on f32 storage. On AVX2 the widen/subtract/scale/
+/// narrow stages are vectorized around the scalar libm `exp` (bitwise).
+pub fn feature_finish_f32(row: &mut [f32], a: f64, sqrt_w: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa(), Isa::Avx2 | Isa::Avx512) {
+        // SAFETY: isa() reports Avx2/Avx512 only after runtime detection.
+        return unsafe { x86::feature_finish_f32(row, a, sqrt_w) };
+    }
+    fallback::feature_finish_f32(row, a, sqrt_w)
+}

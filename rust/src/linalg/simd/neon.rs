@@ -1,0 +1,272 @@
+//! NEON microkernels (aarch64).
+//!
+//! NEON registers are 128-bit, so the frozen fold shapes map onto register
+//! *pairs*: the `f64` dot keeps two `float64x2_t` accumulators whose four
+//! lanes are the four scalar accumulators of `fallback::dot_f64`, and the
+//! `f32` dot keeps two `float32x4_t` accumulators covering the eight
+//! accumulators of `fallback::dot_f32`. Reductions extract lanes and
+//! combine in the exact scalar order, multiplies and adds stay separate
+//! (`vmulq` + `vaddq`, never `vfmaq` — fusing changes rounding), so every
+//! kernel is bitwise-identical to its [`super::fallback`] reference.
+//!
+//! The sequential-fold (`dot_seq_*`) and feature-finish kernels stay on
+//! the fallback on NEON: the fold order is contractual and the `exp` call
+//! dominates, so there is little to vectorize — see the dispatcher in
+//! [`super`].
+//!
+//! NEON is a baseline feature of aarch64, but the kernels keep the same
+//! `unsafe fn` + `#[target_feature]` shape as the x86 file so the
+//! dispatcher treats every ISA module uniformly.
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+/// Bitwise-identical NEON form of [`super::fallback::dot_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let body = n / 4 * 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut i = 0;
+    while i < body {
+        let a01 = vld1q_f64(a.as_ptr().add(i));
+        let b01 = vld1q_f64(b.as_ptr().add(i));
+        acc01 = vaddq_f64(acc01, vmulq_f64(a01, b01));
+        let a23 = vld1q_f64(a.as_ptr().add(i + 2));
+        let b23 = vld1q_f64(b.as_ptr().add(i + 2));
+        acc23 = vaddq_f64(acc23, vmulq_f64(a23, b23));
+        i += 4;
+    }
+    let mut tail = 0.0;
+    for j in body..n {
+        tail += a[j] * b[j];
+    }
+    let l0 = vgetq_lane_f64::<0>(acc01);
+    let l1 = vgetq_lane_f64::<1>(acc01);
+    let l2 = vgetq_lane_f64::<0>(acc23);
+    let l3 = vgetq_lane_f64::<1>(acc23);
+    (l0 + l1) + (l2 + l3) + tail
+}
+
+/// Bitwise-identical NEON form of [`super::fallback::dot_f32`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let body = n / 8 * 8;
+    let mut lo = vdupq_n_f32(0.0);
+    let mut hi = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i < body {
+        let a_lo = vld1q_f32(a.as_ptr().add(i));
+        let b_lo = vld1q_f32(b.as_ptr().add(i));
+        lo = vaddq_f32(lo, vmulq_f32(a_lo, b_lo));
+        let a_hi = vld1q_f32(a.as_ptr().add(i + 4));
+        let b_hi = vld1q_f32(b.as_ptr().add(i + 4));
+        hi = vaddq_f32(hi, vmulq_f32(a_hi, b_hi));
+        i += 8;
+    }
+    let mut tail = 0.0;
+    for j in body..n {
+        tail += a[j] * b[j];
+    }
+    let l0 = vgetq_lane_f32::<0>(lo);
+    let l1 = vgetq_lane_f32::<1>(lo);
+    let l2 = vgetq_lane_f32::<2>(lo);
+    let l3 = vgetq_lane_f32::<3>(lo);
+    let l4 = vgetq_lane_f32::<0>(hi);
+    let l5 = vgetq_lane_f32::<1>(hi);
+    let l6 = vgetq_lane_f32::<2>(hi);
+    let l7 = vgetq_lane_f32::<3>(hi);
+    ((l0 + l1) + (l2 + l3)) + ((l4 + l5) + (l6 + l7)) + tail
+}
+
+/// Four dot products against a shared left operand; each is the plain
+/// [`dot_f64`] fold (= [`super::fallback::dot4_f64`]).
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot4_f64(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    [
+        dot_f64(a, b[0]),
+        dot_f64(a, b[1]),
+        dot_f64(a, b[2]),
+        dot_f64(a, b[3]),
+    ]
+}
+
+/// Four dot products against a shared left operand ([`dot_f32`] fold).
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot4_f32(a: &[f32], b: [&[f32]; 4]) -> [f32; 4] {
+    [
+        dot_f32(a, b[0]),
+        dot_f32(a, b[1]),
+        dot_f32(a, b[2]),
+        dot_f32(a, b[3]),
+    ]
+}
+
+/// `out[j] += a * x[j]` — elementwise, bitwise at any lane width.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let body = n / 2 * 2;
+    let av = vdupq_n_f64(a);
+    let mut i = 0;
+    while i < body {
+        let o = vld1q_f64(out.as_ptr().add(i));
+        let v = vld1q_f64(x.as_ptr().add(i));
+        vst1q_f64(out.as_mut_ptr().add(i), vaddq_f64(o, vmulq_f64(av, v)));
+        i += 2;
+    }
+    for j in body..n {
+        out[j] += a * x[j];
+    }
+}
+
+/// `out[j] += a * x[j]` (single-precision, elementwise).
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f32(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let body = n / 4 * 4;
+    let av = vdupq_n_f32(a);
+    let mut i = 0;
+    while i < body {
+        let o = vld1q_f32(out.as_ptr().add(i));
+        let v = vld1q_f32(x.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(o, vmulq_f32(av, v)));
+        i += 4;
+    }
+    for j in body..n {
+        out[j] += a * x[j];
+    }
+}
+
+/// Register-blocked 4-column update; per element the four `mul`+`add`
+/// pairs apply in ascending operand order ([`super::fallback::axpy4_f64`]).
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy4_f64(out: &mut [f64], a: [f64; 4], x: [&[f64]; 4]) {
+    let n = out.len();
+    debug_assert!(x.iter().all(|xi| xi.len() == n));
+    let a0 = vdupq_n_f64(a[0]);
+    let a1 = vdupq_n_f64(a[1]);
+    let a2 = vdupq_n_f64(a[2]);
+    let a3 = vdupq_n_f64(a[3]);
+    let body = n / 2 * 2;
+    let mut i = 0;
+    while i < body {
+        let mut o = vld1q_f64(out.as_ptr().add(i));
+        o = vaddq_f64(o, vmulq_f64(a0, vld1q_f64(x[0].as_ptr().add(i))));
+        o = vaddq_f64(o, vmulq_f64(a1, vld1q_f64(x[1].as_ptr().add(i))));
+        o = vaddq_f64(o, vmulq_f64(a2, vld1q_f64(x[2].as_ptr().add(i))));
+        o = vaddq_f64(o, vmulq_f64(a3, vld1q_f64(x[3].as_ptr().add(i))));
+        vst1q_f64(out.as_mut_ptr().add(i), o);
+        i += 2;
+    }
+    for j in body..n {
+        let o = &mut out[j];
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// Register-blocked 4-column update (single-precision).
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy4_f32(out: &mut [f32], a: [f32; 4], x: [&[f32]; 4]) {
+    let n = out.len();
+    debug_assert!(x.iter().all(|xi| xi.len() == n));
+    let a0 = vdupq_n_f32(a[0]);
+    let a1 = vdupq_n_f32(a[1]);
+    let a2 = vdupq_n_f32(a[2]);
+    let a3 = vdupq_n_f32(a[3]);
+    let body = n / 4 * 4;
+    let mut i = 0;
+    while i < body {
+        let mut o = vld1q_f32(out.as_ptr().add(i));
+        o = vaddq_f32(o, vmulq_f32(a0, vld1q_f32(x[0].as_ptr().add(i))));
+        o = vaddq_f32(o, vmulq_f32(a1, vld1q_f32(x[1].as_ptr().add(i))));
+        o = vaddq_f32(o, vmulq_f32(a2, vld1q_f32(x[2].as_ptr().add(i))));
+        o = vaddq_f32(o, vmulq_f32(a3, vld1q_f32(x[3].as_ptr().add(i))));
+        vst1q_f32(out.as_mut_ptr().add(i), o);
+        i += 4;
+    }
+    for j in body..n {
+        let o = &mut out[j];
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// `out[j] += row[j]` — elementwise, bitwise at any lane width.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn accum_row_f64(out: &mut [f64], row: &[f64]) {
+    debug_assert_eq!(out.len(), row.len());
+    let n = out.len();
+    let body = n / 2 * 2;
+    let mut i = 0;
+    while i < body {
+        let o = vld1q_f64(out.as_ptr().add(i));
+        let v = vld1q_f64(row.as_ptr().add(i));
+        vst1q_f64(out.as_mut_ptr().add(i), vaddq_f64(o, v));
+        i += 2;
+    }
+    for j in body..n {
+        out[j] += row[j];
+    }
+}
+
+/// `out[j] += row[j] as f64` — `vcvt_f64_f32` widens exactly like the
+/// scalar `as f64` cast (f32→f64 is lossless), so this stays bitwise.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn accum_row_f32(out: &mut [f64], row: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    let n = out.len();
+    let body = n / 2 * 2;
+    let mut i = 0;
+    while i < body {
+        let o = vld1q_f64(out.as_ptr().add(i));
+        let v = vcvt_f64_f32(vld1_f32(row.as_ptr().add(i)));
+        vst1q_f64(out.as_mut_ptr().add(i), vaddq_f64(o, v));
+        i += 2;
+    }
+    for j in body..n {
+        out[j] += row[j] as f64;
+    }
+}

@@ -1,0 +1,380 @@
+//! AVX2 microkernels (x86-64).
+//!
+//! Every kernel here is bitwise-identical to its [`super::fallback`]
+//! reference — see the module docs there for the frozen fold shapes. The
+//! lane discipline that makes this possible:
+//!
+//! - multiplies and adds stay separate (`_mm256_mul_pd` + `_mm256_add_pd`,
+//!   never FMA — fusing changes the rounding of every partial product);
+//! - the `f64` dot keeps ONE 256-bit accumulator whose four lanes *are*
+//!   the four scalar accumulators of `fallback::dot_f64`, reduced in the
+//!   exact scalar order `(l0 + l1) + (l2 + l3) + tail`;
+//! - the `f32` dot keeps ONE 8-lane accumulator matching
+//!   `fallback::dot_f32`, reduced as `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`;
+//! - widening/narrowing conversions use `_mm256_cvtps_pd` /
+//!   `_mm256_cvtpd_ps`, which round exactly like Rust `as` casts
+//!   (round-to-nearest-even, overflow to infinity);
+//! - all loads/stores are unaligned (`loadu`/`storeu`) — `Mat<T>` rows can
+//!   start at any offset;
+//! - `dot_seq_*` sequential folds are vectorized only in the widen+multiply
+//!   stage; the running sum still adds lane products in ascending index
+//!   order (`dot_seq_f64` has no such stage and stays on the fallback).
+//!
+//! All functions are `unsafe fn` with `#[target_feature(enable = "avx2")]`:
+//! the caller (the dispatcher in [`super`]) must have verified AVX2 support.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+/// Reduce a 256-bit accumulator in the frozen `dot_unrolled` order.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce4(acc: __m256d) -> f64 {
+    let mut l = [0.0f64; 4];
+    _mm256_storeu_pd(l.as_mut_ptr(), acc);
+    (l[0] + l[1]) + (l[2] + l[3])
+}
+
+/// Reduce an 8-lane accumulator in the frozen `dot32` order.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce8(acc: __m256) -> f32 {
+    let mut l = [0.0f32; 8];
+    _mm256_storeu_ps(l.as_mut_ptr(), acc);
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Bitwise-identical AVX2 form of [`super::fallback::dot_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let body = n / 4 * 4;
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < body {
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+        i += 4;
+    }
+    let mut tail = 0.0;
+    for j in body..n {
+        tail += a[j] * b[j];
+    }
+    reduce4(acc) + tail
+}
+
+/// Bitwise-identical AVX2 form of [`super::fallback::dot_f32`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let body = n / 8 * 8;
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i < body {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        i += 8;
+    }
+    let mut tail = 0.0;
+    for j in body..n {
+        tail += a[j] * b[j];
+    }
+    reduce8(acc) + tail
+}
+
+/// Four dots sharing each left-operand load; each accumulator follows the
+/// [`dot_f64`] fold independently, so the result is bitwise-equal to four
+/// separate dots (= [`super::fallback::dot4_f64`]).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot4_f64(a: &[f64], b: [&[f64]; 4]) -> [f64; 4] {
+    let n = a.len();
+    debug_assert!(b.iter().all(|bi| bi.len() == n));
+    let body = n / 4 * 4;
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut acc2 = _mm256_setzero_pd();
+    let mut acc3 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < body {
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(va, _mm256_loadu_pd(b[0].as_ptr().add(i))));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(va, _mm256_loadu_pd(b[1].as_ptr().add(i))));
+        acc2 = _mm256_add_pd(acc2, _mm256_mul_pd(va, _mm256_loadu_pd(b[2].as_ptr().add(i))));
+        acc3 = _mm256_add_pd(acc3, _mm256_mul_pd(va, _mm256_loadu_pd(b[3].as_ptr().add(i))));
+        i += 4;
+    }
+    let mut out = [reduce4(acc0), reduce4(acc1), reduce4(acc2), reduce4(acc3)];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut tail = 0.0;
+        for j in body..n {
+            tail += a[j] * b[k][j];
+        }
+        *o += tail;
+    }
+    out
+}
+
+/// Four dots sharing each left-operand load ([`dot_f32`] fold per lane
+/// group; bitwise-equal to [`super::fallback::dot4_f32`]).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot4_f32(a: &[f32], b: [&[f32]; 4]) -> [f32; 4] {
+    let n = a.len();
+    debug_assert!(b.iter().all(|bi| bi.len() == n));
+    let body = n / 8 * 8;
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i < body {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(va, _mm256_loadu_ps(b[0].as_ptr().add(i))));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(va, _mm256_loadu_ps(b[1].as_ptr().add(i))));
+        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(va, _mm256_loadu_ps(b[2].as_ptr().add(i))));
+        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(va, _mm256_loadu_ps(b[3].as_ptr().add(i))));
+        i += 8;
+    }
+    let mut out = [reduce8(acc0), reduce8(acc1), reduce8(acc2), reduce8(acc3)];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut tail = 0.0;
+        for j in body..n {
+            tail += a[j] * b[k][j];
+        }
+        *o += tail;
+    }
+    out
+}
+
+/// `out[j] += a * x[j]` — elementwise, so bitwise at any lane width.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let body = n / 4 * 4;
+    let av = _mm256_set1_pd(a);
+    let mut i = 0;
+    while i < body {
+        let o = _mm256_loadu_pd(out.as_ptr().add(i));
+        let v = _mm256_loadu_pd(x.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_add_pd(o, _mm256_mul_pd(av, v)));
+        i += 4;
+    }
+    for j in body..n {
+        out[j] += a * x[j];
+    }
+}
+
+/// `out[j] += a * x[j]` (single-precision, elementwise).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f32(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let body = n / 8 * 8;
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i < body {
+        let o = _mm256_loadu_ps(out.as_ptr().add(i));
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(o, _mm256_mul_ps(av, v)));
+        i += 8;
+    }
+    for j in body..n {
+        out[j] += a * x[j];
+    }
+}
+
+/// Register-blocked 4-column update: per element the four `mul`+`add`
+/// pairs apply in ascending operand order, exactly as in
+/// [`super::fallback::axpy4_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy4_f64(out: &mut [f64], a: [f64; 4], x: [&[f64]; 4]) {
+    let n = out.len();
+    debug_assert!(x.iter().all(|xi| xi.len() == n));
+    let body = n / 4 * 4;
+    let a0 = _mm256_set1_pd(a[0]);
+    let a1 = _mm256_set1_pd(a[1]);
+    let a2 = _mm256_set1_pd(a[2]);
+    let a3 = _mm256_set1_pd(a[3]);
+    let mut i = 0;
+    while i < body {
+        let mut o = _mm256_loadu_pd(out.as_ptr().add(i));
+        o = _mm256_add_pd(o, _mm256_mul_pd(a0, _mm256_loadu_pd(x[0].as_ptr().add(i))));
+        o = _mm256_add_pd(o, _mm256_mul_pd(a1, _mm256_loadu_pd(x[1].as_ptr().add(i))));
+        o = _mm256_add_pd(o, _mm256_mul_pd(a2, _mm256_loadu_pd(x[2].as_ptr().add(i))));
+        o = _mm256_add_pd(o, _mm256_mul_pd(a3, _mm256_loadu_pd(x[3].as_ptr().add(i))));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), o);
+        i += 4;
+    }
+    for j in body..n {
+        let o = &mut out[j];
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// Register-blocked 4-column update (single-precision).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy4_f32(out: &mut [f32], a: [f32; 4], x: [&[f32]; 4]) {
+    let n = out.len();
+    debug_assert!(x.iter().all(|xi| xi.len() == n));
+    let body = n / 8 * 8;
+    let a0 = _mm256_set1_ps(a[0]);
+    let a1 = _mm256_set1_ps(a[1]);
+    let a2 = _mm256_set1_ps(a[2]);
+    let a3 = _mm256_set1_ps(a[3]);
+    let mut i = 0;
+    while i < body {
+        let mut o = _mm256_loadu_ps(out.as_ptr().add(i));
+        o = _mm256_add_ps(o, _mm256_mul_ps(a0, _mm256_loadu_ps(x[0].as_ptr().add(i))));
+        o = _mm256_add_ps(o, _mm256_mul_ps(a1, _mm256_loadu_ps(x[1].as_ptr().add(i))));
+        o = _mm256_add_ps(o, _mm256_mul_ps(a2, _mm256_loadu_ps(x[2].as_ptr().add(i))));
+        o = _mm256_add_ps(o, _mm256_mul_ps(a3, _mm256_loadu_ps(x[3].as_ptr().add(i))));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), o);
+        i += 8;
+    }
+    for j in body..n {
+        let o = &mut out[j];
+        *o += a[0] * x[0][j];
+        *o += a[1] * x[1][j];
+        *o += a[2] * x[2][j];
+        *o += a[3] * x[3][j];
+    }
+}
+
+/// `out[j] += row[j]` — elementwise, bitwise at any lane width.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn accum_row_f64(out: &mut [f64], row: &[f64]) {
+    debug_assert_eq!(out.len(), row.len());
+    let n = out.len();
+    let body = n / 4 * 4;
+    let mut i = 0;
+    while i < body {
+        let o = _mm256_loadu_pd(out.as_ptr().add(i));
+        let v = _mm256_loadu_pd(row.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_add_pd(o, v));
+        i += 4;
+    }
+    for j in body..n {
+        out[j] += row[j];
+    }
+}
+
+/// `out[j] += row[j] as f64` — `_mm256_cvtps_pd` widens exactly like the
+/// scalar `as f64` cast (f32→f64 is lossless), so this stays bitwise.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn accum_row_f32(out: &mut [f64], row: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    let n = out.len();
+    let body = n / 4 * 4;
+    let mut i = 0;
+    while i < body {
+        let o = _mm256_loadu_pd(out.as_ptr().add(i));
+        let v = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(i)));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_add_pd(o, v));
+        i += 4;
+    }
+    for j in body..n {
+        out[j] += row[j] as f64;
+    }
+}
+
+/// Sequential widening dot: the widen+multiply stage is vectorized (four
+/// exact `f64` products per step), but the running sum adds the lane
+/// products in ascending index order — bitwise-identical to
+/// [`super::fallback::dot_seq_f32`], preserving the denominator contract.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_seq_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let body = n / 4 * 4;
+    let mut acc = 0.0f64;
+    let mut prod = [0.0f64; 4];
+    let mut i = 0;
+    while i < body {
+        let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+        let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+        _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(va, vb));
+        acc += prod[0];
+        acc += prod[1];
+        acc += prod[2];
+        acc += prod[3];
+        i += 4;
+    }
+    for j in body..n {
+        acc += a[j] as f64 * b[j] as f64;
+    }
+    acc
+}
+
+/// Feature-map finish on `f32` storage. The widen, subtract, scale, and
+/// narrow stages are vectorized in `f64`; `exp` itself stays the scalar
+/// libm call per lane (a vector polynomial `exp` could not match libm
+/// bitwise). `_mm256_cvtpd_ps` narrows exactly like `as f32`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn feature_finish_f32(row: &mut [f32], a: f64, sqrt_w: &[f64]) {
+    debug_assert_eq!(row.len(), sqrt_w.len());
+    let n = row.len();
+    let body = n / 4 * 4;
+    let av = _mm256_set1_pd(a);
+    let mut tmp = [0.0f64; 4];
+    let mut i = 0;
+    while i < body {
+        let v = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(i)));
+        _mm256_storeu_pd(tmp.as_mut_ptr(), _mm256_sub_pd(v, av));
+        tmp[0] = tmp[0].exp();
+        tmp[1] = tmp[1].exp();
+        tmp[2] = tmp[2].exp();
+        tmp[3] = tmp[3].exp();
+        let e = _mm256_loadu_pd(tmp.as_ptr());
+        let w = _mm256_loadu_pd(sqrt_w.as_ptr().add(i));
+        let narrowed = _mm256_cvtpd_ps(_mm256_mul_pd(e, w));
+        _mm_storeu_ps(row.as_mut_ptr().add(i), narrowed);
+        i += 4;
+    }
+    for j in body..n {
+        row[j] = ((row[j] as f64 - a).exp() * sqrt_w[j]) as f32;
+    }
+}

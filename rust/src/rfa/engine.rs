@@ -21,9 +21,13 @@
 //! Everything left of the `tril` is a dense contraction (`matmul`,
 //! [`Mat::matmul_transa`]); the masked intra-chunk gram is `C(C+1)/2`
 //! unrolled dots per chunk. The causal path therefore costs
-//! O(L·(C·n + n·dv)) of dense, autovectorized work instead of O(L) scalar
-//! iterations, while the state stays O(n·dv) — a [`CausalState`] can
-//! stream L ≫ 10⁵ chunk by chunk without ever materializing the sequence.
+//! O(L·(C·n + n·dv)) of dense work instead of O(L) scalar iterations,
+//! while the state stays O(n·dv) — a [`CausalState`] can stream L ≫ 10⁵
+//! chunk by chunk without ever materializing the sequence. All of those
+//! contractions (and the masked-row dots) bottom out in the
+//! [`crate::linalg::simd`] microkernels via the sealed [`Scalar`] hooks:
+//! explicit AVX2/AVX-512/NEON with runtime dispatch, bitwise-identical to
+//! the portable fallback, so nothing in this file is ISA-aware.
 //!
 //! # The `Scalar::Accum` contract
 //!

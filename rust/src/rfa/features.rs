@@ -198,12 +198,11 @@ impl FeatureBank {
         // proj[l, i] = ω_i · x_l
         let mut proj = x_mat.matmul_transb(&omegas_t);
         for (li, x) in xs.iter().enumerate() {
-            let a = <T::Accum as Scalar>::from_f64(self.normalizer(x));
+            let a = self.normalizer(x);
             let row = &mut proj.data_mut()[li * n..(li + 1) * n];
-            for (p, &sw) in row.iter_mut().zip(&self.sqrt_weights) {
-                let sw = <T::Accum as Scalar>::from_f64(sw);
-                *p = T::from_accum((p.to_accum() - a).exp() * sw);
-            }
+            // Widen, subtract, scalar-libm exp, scale, round back to T
+            // once — the dispatched feature-map finish microkernel.
+            T::feature_finish(row, a, &self.sqrt_weights);
         }
         proj
     }

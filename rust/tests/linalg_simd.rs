@@ -1,0 +1,481 @@
+//! Property suite for the `linalg::simd` dispatch layer.
+//!
+//! The dispatch contract is that every microkernel is **bitwise-identical**
+//! to its portable reference in `simd::fallback` on every ISA the machine
+//! can route to. This suite pins that with `to_bits` equality:
+//!
+//! * kernel-level, across adversarial lengths (empty, below lane width,
+//!   exact multiples of 4/8/16, one off either side of each) and
+//!   offset-by-one (unaligned) slices, both precisions;
+//! * `Mat`-level, forced-scalar vs detected-ISA over the contraction
+//!   kernels (`matmul`, `matmul_transb`, `matmul_transa`, `col_sums`,
+//!   `matvec_accum`) on degenerate and tail-heavy shapes;
+//! * the blocked `transpose` against the index permutation it claims to be;
+//! * the feature map end to end under both dispatch modes.
+//!
+//! The effective ISA is a process-global atomic, so every test that forces
+//! it serializes on one mutex (poison-tolerant: an assert failure in one
+//! test must not wedge the rest).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use darkformer::linalg::simd::{self, fallback, Isa};
+use darkformer::linalg::{Matrix, Matrix32};
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::{FeatureBank, PrfEstimator};
+use darkformer::rng::{GaussianExt, Pcg64};
+
+/// Lengths around every lane boundary the kernels split on: 4 (f64×256),
+/// 8 (f32×256 / f64×512), 16 (f32×512), plus larger head/body/tail mixes.
+const LENS: &[usize] = &[
+    0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 255, 256, 257,
+];
+
+fn isa_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Every ISA this machine can actually execute (always includes Scalar;
+/// unsupported variants are filtered rather than silently sanitized so
+/// each loop iteration tests a distinct code path).
+fn usable_isas() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Neon, Isa::Avx2, Isa::Avx512]
+        .into_iter()
+        .filter(|&i| simd::supported(i))
+        .collect()
+}
+
+/// Run `f` once per supported ISA with the dispatcher held on it.
+fn with_each_isa(mut f: impl FnMut(Isa)) {
+    let _guard = isa_lock();
+    let prev = simd::set_isa(Isa::Scalar);
+    for isa in usable_isas() {
+        simd::set_isa(isa);
+        f(isa);
+    }
+    simd::set_isa(prev);
+}
+
+fn gen64(n: usize, seed: u64) -> Vec<f64> {
+    Pcg64::seed(seed).gaussian_vec(n)
+}
+
+fn gen32(n: usize, seed: u64) -> Vec<f32> {
+    gen64(n, seed).iter().map(|&x| x as f32).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// --------------------------------------------------- kernel-level pins
+
+#[test]
+fn dot_matches_fallback_bitwise() {
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let a = gen64(n + 1, 11 + n as u64);
+            let b = gen64(n + 1, 77 + n as u64);
+            let a32 = gen32(n + 1, 13 + n as u64);
+            let b32 = gen32(n + 1, 79 + n as u64);
+            for off in [0usize, 1] {
+                let (x, y) = (&a[off..off + n], &b[off..off + n]);
+                assert_eq!(
+                    simd::dot_f64(x, y).to_bits(),
+                    fallback::dot_f64(x, y).to_bits(),
+                    "dot_f64 n={n} off={off} isa={isa:?}"
+                );
+                let (x, y) = (&a32[off..off + n], &b32[off..off + n]);
+                assert_eq!(
+                    simd::dot_f32(x, y).to_bits(),
+                    fallback::dot_f32(x, y).to_bits(),
+                    "dot_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn dot4_matches_fallback_bitwise() {
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let a = gen64(n + 1, 211 + n as u64);
+            let bs: Vec<Vec<f64>> =
+                (0..4).map(|j| gen64(n + 1, 300 + j + n as u64)).collect();
+            let a32 = gen32(n + 1, 213 + n as u64);
+            let bs32: Vec<Vec<f32>> =
+                (0..4).map(|j| gen32(n + 1, 400 + j + n as u64)).collect();
+            for off in [0usize, 1] {
+                let e = off + n;
+                let b = [&bs[0][off..e], &bs[1][off..e], &bs[2][off..e], &bs[3][off..e]];
+                let got = simd::dot4_f64(&a[off..e], b);
+                let want = fallback::dot4_f64(&a[off..e], b);
+                assert_eq!(
+                    bits64(&got),
+                    bits64(&want),
+                    "dot4_f64 n={n} off={off} isa={isa:?}"
+                );
+                let b32 =
+                    [&bs32[0][off..e], &bs32[1][off..e], &bs32[2][off..e], &bs32[3][off..e]];
+                let got = simd::dot4_f32(&a32[off..e], b32);
+                let want = fallback::dot4_f32(&a32[off..e], b32);
+                assert_eq!(
+                    bits32(&got),
+                    bits32(&want),
+                    "dot4_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn axpy_matches_fallback_bitwise() {
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let base = gen64(n + 1, 501 + n as u64);
+            let x = gen64(n + 1, 601 + n as u64);
+            let base32 = gen32(n + 1, 503 + n as u64);
+            let x32 = gen32(n + 1, 603 + n as u64);
+            for off in [0usize, 1] {
+                let e = off + n;
+                let mut got = base[off..e].to_vec();
+                let mut want = got.clone();
+                simd::axpy_f64(&mut got, 0.37, &x[off..e]);
+                fallback::axpy_f64(&mut want, 0.37, &x[off..e]);
+                assert_eq!(
+                    bits64(&got),
+                    bits64(&want),
+                    "axpy_f64 n={n} off={off} isa={isa:?}"
+                );
+                let mut got = base32[off..e].to_vec();
+                let mut want = got.clone();
+                simd::axpy_f32(&mut got, 0.37, &x32[off..e]);
+                fallback::axpy_f32(&mut want, 0.37, &x32[off..e]);
+                assert_eq!(
+                    bits32(&got),
+                    bits32(&want),
+                    "axpy_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn axpy4_matches_fallback_bitwise() {
+    let a4 = [0.31f64, -1.7, 0.002, 4.5];
+    let a4_32 = [0.31f32, -1.7, 0.002, 4.5];
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let base = gen64(n + 1, 701 + n as u64);
+            let xs: Vec<Vec<f64>> =
+                (0..4).map(|j| gen64(n + 1, 800 + j + n as u64)).collect();
+            let base32 = gen32(n + 1, 703 + n as u64);
+            let xs32: Vec<Vec<f32>> =
+                (0..4).map(|j| gen32(n + 1, 900 + j + n as u64)).collect();
+            for off in [0usize, 1] {
+                let e = off + n;
+                let x = [&xs[0][off..e], &xs[1][off..e], &xs[2][off..e], &xs[3][off..e]];
+                let mut got = base[off..e].to_vec();
+                let mut want = got.clone();
+                simd::axpy4_f64(&mut got, a4, x);
+                fallback::axpy4_f64(&mut want, a4, x);
+                assert_eq!(
+                    bits64(&got),
+                    bits64(&want),
+                    "axpy4_f64 n={n} off={off} isa={isa:?}"
+                );
+                let x32 =
+                    [&xs32[0][off..e], &xs32[1][off..e], &xs32[2][off..e], &xs32[3][off..e]];
+                let mut got = base32[off..e].to_vec();
+                let mut want = got.clone();
+                simd::axpy4_f32(&mut got, a4_32, x32);
+                fallback::axpy4_f32(&mut want, a4_32, x32);
+                assert_eq!(
+                    bits32(&got),
+                    bits32(&want),
+                    "axpy4_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn accum_row_matches_fallback_bitwise() {
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let base = gen64(n + 1, 1001 + n as u64);
+            let row = gen64(n + 1, 1101 + n as u64);
+            let row32 = gen32(n + 1, 1103 + n as u64);
+            for off in [0usize, 1] {
+                let e = off + n;
+                let mut got = base[off..e].to_vec();
+                let mut want = got.clone();
+                simd::accum_row_f64(&mut got, &row[off..e]);
+                fallback::accum_row_f64(&mut want, &row[off..e]);
+                assert_eq!(
+                    bits64(&got),
+                    bits64(&want),
+                    "accum_row_f64 n={n} off={off} isa={isa:?}"
+                );
+                let mut got = base[off..e].to_vec();
+                let mut want = got.clone();
+                simd::accum_row_f32(&mut got, &row32[off..e]);
+                fallback::accum_row_f32(&mut want, &row32[off..e]);
+                assert_eq!(
+                    bits64(&got),
+                    bits64(&want),
+                    "accum_row_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn dot_seq_matches_fallback_bitwise() {
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let a = gen64(n + 1, 1201 + n as u64);
+            let b = gen64(n + 1, 1301 + n as u64);
+            let a32 = gen32(n + 1, 1203 + n as u64);
+            let b32 = gen32(n + 1, 1303 + n as u64);
+            for off in [0usize, 1] {
+                let e = off + n;
+                assert_eq!(
+                    simd::dot_seq_f64(&a[off..e], &b[off..e]).to_bits(),
+                    fallback::dot_seq_f64(&a[off..e], &b[off..e]).to_bits(),
+                    "dot_seq_f64 n={n} off={off} isa={isa:?}"
+                );
+                assert_eq!(
+                    simd::dot_seq_f32(&a32[off..e], &b32[off..e]).to_bits(),
+                    fallback::dot_seq_f32(&a32[off..e], &b32[off..e]).to_bits(),
+                    "dot_seq_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn feature_finish_matches_fallback_bitwise() {
+    with_each_isa(|isa| {
+        for &n in LENS {
+            let row = gen64(n + 1, 1401 + n as u64);
+            let row32 = gen32(n + 1, 1403 + n as u64);
+            // Positive weights as the real bank produces (sqrt of w_i > 0).
+            let sqrt_w: Vec<f64> = gen64(n + 1, 1501 + n as u64)
+                .iter()
+                .map(|x| x.abs() + 0.5)
+                .collect();
+            for off in [0usize, 1] {
+                let e = off + n;
+                let mut got = row[off..e].to_vec();
+                let mut want = got.clone();
+                simd::feature_finish_f64(&mut got, 0.25, &sqrt_w[off..e]);
+                fallback::feature_finish_f64(&mut want, 0.25, &sqrt_w[off..e]);
+                assert_eq!(
+                    bits64(&got),
+                    bits64(&want),
+                    "feature_finish_f64 n={n} off={off} isa={isa:?}"
+                );
+                let mut got = row32[off..e].to_vec();
+                let mut want = got.clone();
+                simd::feature_finish_f32(&mut got, 0.25, &sqrt_w[off..e]);
+                fallback::feature_finish_f32(&mut want, 0.25, &sqrt_w[off..e]);
+                assert_eq!(
+                    bits32(&got),
+                    bits32(&want),
+                    "feature_finish_f32 n={n} off={off} isa={isa:?}"
+                );
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------ Mat-level pins
+
+/// (m, k, n) shapes: degenerate, all-tails, and mixes that cross the
+/// matmul KT=64/JT=256 tile edges and the 4-wide register blocks.
+const MAT_SHAPES: &[(usize, usize, usize)] = &[
+    (0, 0, 0),
+    (1, 1, 1),
+    (3, 5, 7),
+    (17, 63, 65),
+    (8, 65, 257),
+    (63, 255, 33),
+];
+
+fn mat64(r: usize, c: usize, seed: u64) -> Matrix {
+    Matrix::from_vec(r, c, gen64(r * c, seed))
+}
+
+#[test]
+fn mat_contractions_dispatch_vs_scalar_bitwise() {
+    let _guard = isa_lock();
+    let prev = simd::set_isa(Isa::Scalar);
+    for (i, &(m, k, n)) in MAT_SHAPES.iter().enumerate() {
+        let s = 2000 + 10 * i as u64;
+        let a = mat64(m, k, s);
+        let b = mat64(k, n, s + 1);
+        let bt = mat64(n, k, s + 2);
+        let at = mat64(k, m, s + 3);
+        let x = gen64(k, s + 4);
+        let (a32, b32, bt32, at32) = (
+            Matrix32::from_f64(&a),
+            Matrix32::from_f64(&b),
+            Matrix32::from_f64(&bt),
+            Matrix32::from_f64(&at),
+        );
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+
+        simd::set_isa(Isa::Scalar);
+        let scalar = (
+            a.matmul(&b),
+            a.matmul_transb(&bt),
+            at.matmul_transa(&b),
+            a.col_sums(),
+            a.matvec_accum(&x),
+        );
+        let scalar32 = (
+            a32.matmul(&b32),
+            a32.matmul_transb(&bt32),
+            at32.matmul_transa(&b32),
+            a32.col_sums(),
+            a32.matvec_accum(&x32),
+        );
+
+        simd::set_isa(simd::detected_isa());
+        let ctx = format!("shape ({m},{k},{n}) isa={:?}", simd::isa());
+        assert_eq!(bits64(a.matmul(&b).data()), bits64(scalar.0.data()), "matmul {ctx}");
+        assert_eq!(
+            bits64(a.matmul_transb(&bt).data()),
+            bits64(scalar.1.data()),
+            "matmul_transb {ctx}"
+        );
+        assert_eq!(
+            bits64(at.matmul_transa(&b).data()),
+            bits64(scalar.2.data()),
+            "matmul_transa {ctx}"
+        );
+        assert_eq!(bits64(&a.col_sums()), bits64(&scalar.3), "col_sums {ctx}");
+        assert_eq!(bits64(&a.matvec_accum(&x)), bits64(&scalar.4), "matvec_accum {ctx}");
+        assert_eq!(
+            bits32(a32.matmul(&b32).data()),
+            bits32(scalar32.0.data()),
+            "matmul f32 {ctx}"
+        );
+        assert_eq!(
+            bits32(a32.matmul_transb(&bt32).data()),
+            bits32(scalar32.1.data()),
+            "matmul_transb f32 {ctx}"
+        );
+        assert_eq!(
+            bits32(at32.matmul_transa(&b32).data()),
+            bits32(scalar32.2.data()),
+            "matmul_transa f32 {ctx}"
+        );
+        assert_eq!(bits64(&a32.col_sums()), bits64(&scalar32.3), "col_sums f32 {ctx}");
+        assert_eq!(
+            bits64(&a32.matvec_accum(&x32)),
+            bits64(&scalar32.4),
+            "matvec_accum f32 {ctx}"
+        );
+    }
+    simd::set_isa(prev);
+}
+
+#[test]
+fn blocked_transpose_is_pure_permutation() {
+    // ISA-independent (pure permutation), so no dispatch lock needed.
+    for &(r, c) in &[(0usize, 0usize), (1, 9), (9, 1), (5, 0), (33, 65), (64, 64), (31, 257)] {
+        let a = mat64(r, c, 3000 + (r * 1000 + c) as u64);
+        let t = a.transpose();
+        assert_eq!((t.rows(), t.cols()), (c, r));
+        for i in 0..r {
+            for j in 0..c {
+                assert_eq!(
+                    t.data()[j * r + i].to_bits(),
+                    a.data()[i * c + j].to_bits(),
+                    "transpose permutation ({r}x{c}) at ({i},{j})"
+                );
+            }
+        }
+        let back = t.transpose();
+        assert_eq!(bits64(back.data()), bits64(a.data()), "transpose involution ({r}x{c})");
+
+        let a32 = Matrix32::from_f64(&a);
+        let t32 = a32.transpose();
+        assert_eq!((t32.rows(), t32.cols()), (c, r));
+        for i in 0..r {
+            for j in 0..c {
+                assert_eq!(
+                    t32.data()[j * r + i].to_bits(),
+                    a32.data()[i * c + j].to_bits(),
+                    "transpose f32 permutation ({r}x{c}) at ({i},{j})"
+                );
+            }
+        }
+        assert_eq!(
+            bits32(t32.transpose().data()),
+            bits32(a32.data()),
+            "transpose f32 involution ({r}x{c})"
+        );
+    }
+}
+
+// ------------------------------------------------- end-to-end + policy
+
+#[test]
+fn feature_map_bitwise_across_dispatch_modes() {
+    let _guard = isa_lock();
+    // M=33 (odd) forces tail iterations in every projection kernel.
+    let est = PrfEstimator::new(8, 33, Sampling::Isotropic);
+    let mut rng = Pcg64::seed(0xfeed);
+    let bank = FeatureBank::draw(&est, &mut rng);
+    let xs: Vec<Vec<f64>> = (0..17)
+        .map(|_| rng.gaussian_vec(8).iter().map(|v| 0.2 * v).collect())
+        .collect();
+
+    let prev = simd::set_isa(Isa::Scalar);
+    let phi64_scalar = bank.feature_matrix(&xs);
+    let phi32_scalar = bank.feature_matrix32(&xs);
+    simd::set_isa(simd::detected_isa());
+    let phi64_simd = bank.feature_matrix(&xs);
+    let phi32_simd = bank.feature_matrix32(&xs);
+    simd::set_isa(prev);
+
+    assert_eq!(bits64(phi64_scalar.data()), bits64(phi64_simd.data()), "feature map f64");
+    assert_eq!(bits32(phi32_scalar.data()), bits32(phi32_simd.data()), "feature map f32");
+}
+
+#[test]
+fn set_isa_sanitizes_and_reports() {
+    let _guard = isa_lock();
+    let prev = simd::set_isa(Isa::Scalar);
+    assert_eq!(simd::isa(), Isa::Scalar);
+    assert_eq!(simd::active_isa(), "scalar");
+    for target in [Isa::Neon, Isa::Avx2, Isa::Avx512] {
+        simd::set_isa(Isa::Scalar);
+        let returned = simd::set_isa(target);
+        assert_eq!(returned, Isa::Scalar, "set_isa returns the previous ISA");
+        let expect = if simd::supported(target) { target } else { Isa::Scalar };
+        assert_eq!(simd::isa(), expect, "unsupported {target:?} must sanitize to Scalar");
+    }
+    assert!(simd::supported(Isa::Scalar), "Scalar is supported everywhere");
+    assert!(
+        simd::supported(simd::detected_isa()),
+        "detection only reports executable ISAs"
+    );
+    simd::set_isa(prev);
+}

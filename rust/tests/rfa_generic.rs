@@ -26,8 +26,14 @@
 //!
 //! Pinned at L=512 for chunk ∈ {1, 7, 64} and heads ∈ {1, 4}, exactly
 //! the acceptance grid of the refactor issue, for isotropic and
-//! data-aware banks.
+//! data-aware banks — and under **both dispatch modes** (forced-scalar
+//! fallback and the detected SIMD ISA), which is the end-to-end half of
+//! the `linalg::simd` bitwise contract (the kernel-level half lives in
+//! `linalg_simd.rs`).
 
+use std::sync::{Mutex, OnceLock};
+
+use darkformer::linalg::simd::{self, Isa};
 use darkformer::rfa::engine::{
     draw_head_banks, multi_head_causal_attention,
     multi_head_causal_attention32, EngineConfig, Head,
@@ -337,6 +343,23 @@ fn estimators() -> Vec<(&'static str, PrfEstimator)> {
     ]
 }
 
+/// Run `body` twice: once on the forced-scalar fallback, once on the
+/// detected ISA. The effective ISA is a process-global atomic, so the
+/// pinned tests serialize on one poison-tolerant lock (an assert failure
+/// under one mode must not wedge the other tests).
+fn with_both_dispatch_modes(mut body: impl FnMut(&'static str)) {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let _guard = LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    let prev = simd::set_isa(Isa::Scalar);
+    body("scalar");
+    simd::set_isa(simd::detected_isa());
+    body("dispatched");
+    simd::set_isa(prev);
+}
+
 fn head_inputs(n_heads: usize) -> Vec<Head> {
     let mut rng = Pcg64::seed(INPUT_SEED + n_heads as u64);
     (0..n_heads)
@@ -352,97 +375,104 @@ fn head_inputs(n_heads: usize) -> Vec<Head> {
 
 #[test]
 fn generic_f64_path_matches_frozen_pre_refactor_bitwise() {
-    for (mode, est) in estimators() {
-        for n_heads in [1usize, 4] {
-            let banks =
-                draw_head_banks(&est, n_heads, &mut Pcg64::seed(BANK_SEED));
-            let heads = head_inputs(n_heads);
-            for chunk in [1usize, 7, 64] {
-                let cfg = EngineConfig { chunk, threads: 1 };
-                let got = multi_head_causal_attention(&banks, &heads, &cfg);
-                for (h, (bank, head)) in
-                    banks.iter().zip(&heads).enumerate()
-                {
-                    let phi_q = frozen_feature_matrix64(bank, &head.q);
-                    let phi_k = frozen_feature_matrix64(bank, &head.k);
-                    let want = frozen_forward64(
-                        &phi_q,
-                        &phi_k,
-                        head.v.data(),
-                        L,
-                        M,
-                        DV,
-                        chunk,
-                    );
-                    assert_eq!(
-                        got[h].data(),
-                        &want[..],
-                        "{mode} heads={n_heads} chunk={chunk} head={h}: \
-                         generic f64 path is not bitwise the pre-refactor \
-                         f64 path"
-                    );
+    with_both_dispatch_modes(|dispatch| {
+        for (mode, est) in estimators() {
+            for n_heads in [1usize, 4] {
+                let banks =
+                    draw_head_banks(&est, n_heads, &mut Pcg64::seed(BANK_SEED));
+                let heads = head_inputs(n_heads);
+                for chunk in [1usize, 7, 64] {
+                    let cfg = EngineConfig { chunk, threads: 1 };
+                    let got = multi_head_causal_attention(&banks, &heads, &cfg);
+                    for (h, (bank, head)) in
+                        banks.iter().zip(&heads).enumerate()
+                    {
+                        let phi_q = frozen_feature_matrix64(bank, &head.q);
+                        let phi_k = frozen_feature_matrix64(bank, &head.k);
+                        let want = frozen_forward64(
+                            &phi_q,
+                            &phi_k,
+                            head.v.data(),
+                            L,
+                            M,
+                            DV,
+                            chunk,
+                        );
+                        assert_eq!(
+                            got[h].data(),
+                            &want[..],
+                            "{mode} heads={n_heads} chunk={chunk} head={h} \
+                             ({dispatch} kernels): generic f64 path is not \
+                             bitwise the pre-refactor f64 path"
+                        );
+                    }
                 }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn generic_f32_path_matches_frozen_pre_refactor_bitwise() {
-    for (mode, est) in estimators() {
-        for n_heads in [1usize, 4] {
-            let banks =
-                draw_head_banks(&est, n_heads, &mut Pcg64::seed(BANK_SEED));
-            let heads = head_inputs(n_heads);
-            for chunk in [1usize, 7, 64] {
-                let cfg = EngineConfig { chunk, threads: 1 };
-                let got = multi_head_causal_attention32(&banks, &heads, &cfg);
-                for (h, (bank, head)) in
-                    banks.iter().zip(&heads).enumerate()
-                {
-                    let phi_q = frozen_feature_matrix32(bank, &head.q);
-                    let phi_k = frozen_feature_matrix32(bank, &head.k);
-                    // Pre-refactor head boundary: v rounded to f32.
-                    let v32: Vec<f32> = head
-                        .v
-                        .data()
-                        .iter()
-                        .map(|&x| x as f32)
-                        .collect();
-                    let want = frozen_forward32(
-                        &phi_q, &phi_k, &v32, L, M, DV, chunk,
-                    );
-                    assert_eq!(
-                        got[h].data(),
-                        &want[..],
-                        "{mode} heads={n_heads} chunk={chunk} head={h}: \
-                         generic f32 path is not bitwise the pre-refactor \
-                         CausalState32 semantics"
-                    );
+    with_both_dispatch_modes(|dispatch| {
+        for (mode, est) in estimators() {
+            for n_heads in [1usize, 4] {
+                let banks =
+                    draw_head_banks(&est, n_heads, &mut Pcg64::seed(BANK_SEED));
+                let heads = head_inputs(n_heads);
+                for chunk in [1usize, 7, 64] {
+                    let cfg = EngineConfig { chunk, threads: 1 };
+                    let got =
+                        multi_head_causal_attention32(&banks, &heads, &cfg);
+                    for (h, (bank, head)) in
+                        banks.iter().zip(&heads).enumerate()
+                    {
+                        let phi_q = frozen_feature_matrix32(bank, &head.q);
+                        let phi_k = frozen_feature_matrix32(bank, &head.k);
+                        // Pre-refactor head boundary: v rounded to f32.
+                        let v32: Vec<f32> = head
+                            .v
+                            .data()
+                            .iter()
+                            .map(|&x| x as f32)
+                            .collect();
+                        let want = frozen_forward32(
+                            &phi_q, &phi_k, &v32, L, M, DV, chunk,
+                        );
+                        assert_eq!(
+                            got[h].data(),
+                            &want[..],
+                            "{mode} heads={n_heads} chunk={chunk} head={h} \
+                             ({dispatch} kernels): generic f32 path is not \
+                             bitwise the pre-refactor CausalState32 semantics"
+                        );
+                    }
                 }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn generic_feature_maps_match_frozen_pre_refactor_bitwise() {
     // The feature-map layer alone, both precisions: Mat<T> instantiations
     // vs the frozen `feature_matrix{,32}` bodies.
-    for (mode, est) in estimators() {
-        let bank = FeatureBank::draw(&est, &mut Pcg64::seed(BANK_SEED));
-        let xs = rows(33, D, 0.3, &mut Pcg64::seed(0xfea7));
-        let phi64 = bank.feature_matrix(&xs);
-        assert_eq!(
-            phi64.data(),
-            &frozen_feature_matrix64(&bank, &xs)[..],
-            "{mode}: generic f64 feature map drifted"
-        );
-        let phi32 = bank.feature_matrix32(&xs);
-        assert_eq!(
-            phi32.data(),
-            &frozen_feature_matrix32(&bank, &xs)[..],
-            "{mode}: generic f32 feature map drifted"
-        );
-    }
+    with_both_dispatch_modes(|dispatch| {
+        for (mode, est) in estimators() {
+            let bank = FeatureBank::draw(&est, &mut Pcg64::seed(BANK_SEED));
+            let xs = rows(33, D, 0.3, &mut Pcg64::seed(0xfea7));
+            let phi64 = bank.feature_matrix(&xs);
+            assert_eq!(
+                phi64.data(),
+                &frozen_feature_matrix64(&bank, &xs)[..],
+                "{mode} ({dispatch} kernels): generic f64 feature map drifted"
+            );
+            let phi32 = bank.feature_matrix32(&xs);
+            assert_eq!(
+                phi32.data(),
+                &frozen_feature_matrix32(&bank, &xs)[..],
+                "{mode} ({dispatch} kernels): generic f32 feature map drifted"
+            );
+        }
+    });
 }
