@@ -9,8 +9,8 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy bench bench-json bench-serving \
-	bench-diff bench-baseline pjrt-check clean
+.PHONY: verify build test lint fmt clippy chaos bench bench-json \
+	bench-serving bench-diff bench-baseline pjrt-check clean
 
 verify: build test lint
 
@@ -21,6 +21,13 @@ test:
 	$(CARGO) test -q
 
 lint: fmt clippy
+
+# Fault-injection suite for rfa::serve (rust/tests/rfa_chaos.rs), run at
+# both ends of the SIMD dispatch — chaos schedules, quarantine membership
+# and post-heal bitwise recovery must be ISA-independent.
+chaos:
+	$(CARGO) test -q --test rfa_chaos
+	RFA_SIMD=scalar $(CARGO) test -q --test rfa_chaos
 
 fmt:
 	$(CARGO) fmt --check

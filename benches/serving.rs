@@ -8,6 +8,11 @@
 //! at each concurrency), `serve_thread_scaling_s8_f32` (1 worker vs all
 //! cores on the same workload), `eviction_churn_slowdown_s8_f32`
 //! (sequential per-session drains with snapshot churn vs without),
+//! the fault-tolerance pair: `fault_recovery_overhead_f64` (the f64
+//! churn workload over a seeded transient-only fault stream vs clean —
+//! the price of the retry/backoff machinery) and
+//! `quarantine_isolation_tokens_per_sec` (healthy-session throughput
+//! with one session's snapshot path persistently dead and quarantined),
 //! and the covariance-drift pair: `online_vs_static_variance`
 //! (across-seed output variance of a static data-aware bank over the
 //! drifted half of the stream, divided by the online-resampling
@@ -28,8 +33,9 @@ use darkformer::rfa::gaussian::{
     anisotropic_covariance, MultivariateGaussian,
 };
 use darkformer::rfa::serve::{
-    BatchScheduler, Precision, ResampleConfig, ServeConfig, SessionPool,
-    StepRequest,
+    BatchScheduler, Fault, FaultRule, FaultyStore, FsStore, Precision,
+    ResampleConfig, SeededFaults, ServeConfig, SessionPool, StepRequest,
+    StoreOp,
 };
 use darkformer::rfa::PrfEstimator;
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -228,7 +234,7 @@ fn bench_round(
                     })
                     .unwrap();
             }
-            let responses = sched.run_until_idle().unwrap();
+            let responses = sched.run_until_idle().into_result().unwrap();
             assert_eq!(responses.len(), n_sessions);
             std::hint::black_box(responses);
         } else {
@@ -239,7 +245,9 @@ fn bench_round(
                         heads: heads.clone(),
                     })
                     .unwrap();
-                std::hint::black_box(sched.run_until_idle().unwrap());
+                std::hint::black_box(
+                    sched.run_until_idle().into_result().unwrap(),
+                );
             }
         }
     })
@@ -344,6 +352,111 @@ fn main() {
         "eviction/restore churn slowdown (8 sessions, 1-session budget): \
          {:.2}x",
         churn / no_churn
+    );
+
+    // Fault-injected recovery: the f64 sequential-churn workload (a
+    // one-session budget makes every drain snapshot one session out and
+    // fault the next in) over a seeded transient-only fault stream that
+    // fails roughly every 4th snapshot-store op. Transient faults never
+    // quarantine, so the ratio is the pure cost of the retry/backoff/
+    // deferred-budget machinery riding a flaky disk.
+    let probe64 = {
+        let mut pool = SessionPool::new(serve_config(Precision::F64, 1, 0));
+        let id = pool.create_session(0).unwrap();
+        pool.session_mut(id).unwrap().state_bytes()
+    };
+    let clean64 = bench_round(
+        &mut suite,
+        "serve/f64/s8/sequential_churn",
+        Precision::F64,
+        0,
+        probe64,
+        8,
+        false,
+        3,
+    );
+    let faulted64 = {
+        let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+        let handle = store.handle();
+        let mut pool = SessionPool::with_store(
+            serve_config(Precision::F64, 0, probe64),
+            Box::new(store),
+        );
+        let ids: Vec<u64> = (0..8)
+            .map(|s| pool.create_session(100 + s).unwrap())
+            .collect();
+        let inputs = session_inputs(8);
+        // Arm the stream only after the sessions exist, so setup cost
+        // never depends on the schedule.
+        handle.set_seeded(Some(SeededFaults {
+            seed: 0xFA17,
+            fault_every: 4,
+            transient_only: true,
+        }));
+        let mut sched = BatchScheduler::new(pool);
+        suite.bench("serve/f64/s8/sequential_churn_faulted", 1, 3, || {
+            for (id, heads) in ids.iter().zip(&inputs) {
+                sched
+                    .submit(StepRequest {
+                        session_id: *id,
+                        heads: heads.clone(),
+                    })
+                    .unwrap();
+                std::hint::black_box(
+                    sched.run_until_idle().into_result().unwrap(),
+                );
+            }
+        })
+    };
+    suite.metric("fault_recovery_overhead_f64", faulted64 / clean64);
+    println!(
+        "fault-injected churn overhead (f64, transient fault every ~4th \
+         store op): {:.2}x",
+        faulted64 / clean64
+    );
+
+    // Quarantine isolation: one session's snapshot path fails every
+    // read persistently, so the scheduler quarantines it during the
+    // warmup round; the seven healthy sessions keep the pipeline full
+    // afterwards. Tokens/sec over the healthy sessions only — carrying
+    // a dead session costs its few failed attempts, not ongoing drag.
+    let isolated_tps = {
+        let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+        let handle = store.handle();
+        let mut pool = SessionPool::with_store(
+            serve_config(Precision::F64, 0, probe64),
+            Box::new(store),
+        );
+        let ids: Vec<u64> = (0..8)
+            .map(|s| pool.create_session(100 + s).unwrap())
+            .collect();
+        let inputs = session_inputs(8);
+        handle.script(vec![FaultRule::on(StoreOp::Read, Fault::Persistent)
+            .on_path(format!("session-{}.dkft", ids[3]))]);
+        let mut sched = BatchScheduler::new(pool);
+        let ms = suite.bench("serve/f64/s8/quarantine_isolation", 1, 3, || {
+            for (id, heads) in ids.iter().zip(&inputs) {
+                if sched.is_quarantined(*id) {
+                    continue;
+                }
+                sched
+                    .submit(StepRequest {
+                        session_id: *id,
+                        heads: heads.clone(),
+                    })
+                    .unwrap();
+            }
+            let outcome = sched.run_until_idle();
+            assert!(outcome.error.is_none());
+            std::hint::black_box(outcome.responses);
+        });
+        assert_eq!(sched.quarantined_sessions(), vec![ids[3]]);
+        (7 * SEG) as f64 / (ms / 1e3)
+    };
+    suite.metric("quarantine_isolation_tokens_per_sec", isolated_tps);
+    println!(
+        "quarantine isolation (8 sessions, 1 quarantined): \
+         {isolated_tps:>12.0} healthy tokens/s"
     );
 
     // Covariance drift: the key distribution slides from Σ_A to Σ_B

@@ -93,7 +93,7 @@ fn main() {
                 .submit(StepRequest::broadcast(*id, n_heads, q, k, v))
                 .unwrap();
         }
-        for resp in sched.run_until_idle().unwrap() {
+        for resp in sched.run_until_idle().into_result().unwrap() {
             for out in &resp.outputs {
                 checksum += out.to_f64().data().iter().sum::<f64>();
                 served_rows += out.rows();

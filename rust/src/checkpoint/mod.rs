@@ -16,7 +16,12 @@
 //! snapshots — which is why the store carries an F64 dtype (bitwise f64
 //! round-trips) and typed `require_*` reads that turn a missing, renamed
 //! or reshaped tensor into a descriptive error instead of a panic.
+//!
+//! Writes are crash-safe: [`Checkpoint::save`] serializes with
+//! [`Checkpoint::to_bytes`] and lands the file via [`atomic_write`]
+//! (staging file + fsync + rename), so no crash or full-disk
+//! interleaving ever leaves a torn file at the final path.
 
 mod store;
 
-pub use store::{Checkpoint, DType, Tensor};
+pub use store::{atomic_write, staging_path, Checkpoint, DType, Tensor};

@@ -1,8 +1,8 @@
 //! Tensor store implementation. See format doc in `mod.rs`.
 
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -222,13 +222,12 @@ impl Checkpoint {
         self.tensors.is_empty()
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let file = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        let mut w = Crc32Writer::new(BufWriter::new(file));
+    /// Serialize to the DKFT wire format (magic..crc) without touching
+    /// the filesystem. [`Checkpoint::save`] writes exactly these bytes;
+    /// the `rfa::serve` snapshot store hands them to pluggable backends.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        let mut w = Crc32Writer::new(&mut buf);
         w.inner.write_all(MAGIC)?;
         w.write_u32(VERSION)?;
         w.write_u32(self.tensors.len() as u32)?;
@@ -250,25 +249,32 @@ impl Checkpoint {
         }
         let crc = w.crc();
         w.inner.write_all(&crc.to_le_bytes())?;
-        w.inner.flush()?;
-        Ok(())
+        Ok(buf)
     }
 
-    pub fn load(path: &Path) -> Result<Self> {
-        let file = std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
-        let mut r = BufReader::new(file);
-        let mut buf = Vec::new();
-        r.read_to_end(&mut buf)?;
+    /// Crash-safe save: serialize, then [`atomic_write`]. No crash or
+    /// full-disk interleaving can leave a torn file at `path` — either
+    /// the old contents survive or the new contents are complete.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        atomic_write(path, &bytes)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Parse the DKFT wire format. Every length and offset is bounds-
+    /// and overflow-checked, so a truncated or bit-flipped file (even
+    /// one whose CRC was re-fixed) yields a descriptive error — never a
+    /// panic or a wrapped-arithmetic misread.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
         if buf.len() < 16 || &buf[..4] != MAGIC {
-            bail!("not a DKFT checkpoint: {}", path.display());
+            bail!("not a DKFT checkpoint");
         }
         let body = &buf[4..buf.len() - 4];
         let stored_crc = u32::from_le_bytes(
             buf[buf.len() - 4..].try_into().unwrap(),
         );
         if crc32(body) != stored_crc {
-            bail!("checkpoint CRC mismatch: {}", path.display());
+            bail!("checkpoint CRC mismatch");
         }
         let mut pos = 0usize;
         let read_u32 = |pos: &mut usize| -> Result<u32> {
@@ -287,15 +293,19 @@ impl Checkpoint {
         let mut tensors = BTreeMap::new();
         for _ in 0..count {
             let name_len = read_u32(&mut pos)? as usize;
-            if pos + name_len + 2 > body.len() {
+            let header_end = pos
+                .checked_add(name_len)
+                .and_then(|p| p.checked_add(2))
+                .filter(|&p| p <= body.len());
+            let Some(header_end) = header_end else {
                 bail!("truncated tensor header");
-            }
+            };
             let name =
                 String::from_utf8(body[pos..pos + name_len].to_vec())?;
             pos += name_len;
             let dtype = DType::from_tag(body[pos])?;
             let rank = body[pos + 1] as usize;
-            pos += 2;
+            pos = header_end;
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
                 if pos + 8 > body.len() {
@@ -306,17 +316,77 @@ impl Checkpoint {
                 ) as usize);
                 pos += 8;
             }
-            let n_bytes =
-                shape.iter().product::<usize>() * dtype.size_bytes();
-            if pos + n_bytes > body.len() {
+            let n_bytes = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .and_then(|n| n.checked_mul(dtype.size_bytes()));
+            let Some(n_bytes) = n_bytes else {
+                bail!("tensor {name}: shape {shape:?} overflows");
+            };
+            let data_end =
+                pos.checked_add(n_bytes).filter(|&p| p <= body.len());
+            let Some(data_end) = data_end else {
                 bail!("truncated tensor data for {name}");
-            }
-            let data = body[pos..pos + n_bytes].to_vec();
-            pos += n_bytes;
+            };
+            let data = body[pos..data_end].to_vec();
+            pos = data_end;
             tensors.insert(name, Tensor { dtype, shape, data });
         }
         Ok(Self { tensors })
     }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::from_bytes(&buf)
+            .with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+// --- durable whole-file writes -----------------------------------------
+
+/// Where [`atomic_write`] stages its temporary copy: `<path>.tmp` in the
+/// same directory (rename must not cross a filesystem). A crash can leave
+/// this file behind; the final path is never exposed to partial writes.
+pub fn staging_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    path.with_file_name(format!("{name}.tmp"))
+}
+
+/// Crash-safe whole-file write: write to [`staging_path`], `sync_all`,
+/// atomically rename over `path`, then best-effort fsync the parent
+/// directory so the rename itself is durable. On any failure the
+/// destination is untouched (old contents, if any, remain loadable) and
+/// the staging file is cleaned up best-effort.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = staging_path(path);
+    let staged = (|| -> io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    })();
+    if let Err(e) = staged {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(parent) = path.parent() {
+        if let Ok(dir) = std::fs::File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
+    Ok(())
 }
 
 // --- CRC32 (IEEE, reflected) -------------------------------------------
@@ -522,6 +592,127 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = Checkpoint::load(&path).unwrap_err();
         assert!(format!("{err}").contains("CRC"), "got: {err}");
+    }
+
+    /// Recompute and patch the trailing CRC so corruption tests exercise
+    /// the *parser* (bounds/overflow checks), not just the CRC gate.
+    fn refix_crc(bytes: &mut [u8]) {
+        let n = bytes.len();
+        let crc = crc32(&bytes[4..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    fn two_tensor_bytes() -> Vec<u8> {
+        let mut ck = Checkpoint::new();
+        ck.insert("s", Tensor::from_f64(vec![2], &[1.5, -2.5]));
+        ck.insert("w", Tensor::from_f32(vec![3], &[1.0, 2.0, 3.0]));
+        ck.to_bytes().unwrap()
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_an_error_not_a_panic() {
+        // Covers every section boundary (magic, header, each tensor
+        // header/shape/data, CRC) by truncating at *every* prefix length.
+        let bytes = two_tensor_bytes();
+        for k in 0..bytes.len() {
+            let err = Checkpoint::from_bytes(&bytes[..k]);
+            assert!(err.is_err(), "prefix of {k} bytes parsed as valid");
+        }
+        assert!(Checkpoint::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn every_single_byte_flip_never_panics() {
+        // Without re-fixing the CRC: any flip is caught by the CRC gate
+        // (or the magic check) and reported, never a panic.
+        let bytes = two_tensor_bytes();
+        for i in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0xff;
+            assert!(
+                Checkpoint::from_bytes(&b).is_err(),
+                "flip at byte {i} parsed as valid"
+            );
+        }
+    }
+
+    #[test]
+    fn crc_refixed_region_corruption_is_described() {
+        // Even when the CRC is made consistent again, structural fields
+        // must be rejected with a descriptive error. Offsets for a file
+        // holding ("s", F64 [2]) then ("w", F32 [3]):
+        //   4 version | 8 count | 12 name_len | 16 name "s" | 17 dtype
+        //   18 rank | 19..27 dim | 27..43 data | ...
+        let bytes = two_tensor_bytes();
+        let check = |mutate: fn(&mut Vec<u8>), needle: &str| {
+            let mut b = bytes.clone();
+            mutate(&mut b);
+            refix_crc(&mut b);
+            let err = Checkpoint::from_bytes(&b).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "wanted {needle:?}, got: {msg}");
+        };
+        // Unsupported version.
+        check(|b| b[4] = 0x7f, "unsupported checkpoint version");
+        // Tensor count far beyond the payload.
+        check(|b| b[8..12].copy_from_slice(&u32::MAX.to_le_bytes()), "truncated");
+        // name_len pointing past EOF (checked add, no wraparound).
+        check(
+            |b| b[12..16].copy_from_slice(&u32::MAX.to_le_bytes()),
+            "truncated tensor header",
+        );
+        // Unknown dtype tag.
+        check(|b| b[17] = 0xee, "unknown dtype tag");
+        // A dim of u64::MAX: the element-count product must be
+        // overflow-checked, not wrapped into a tiny bogus size.
+        check(
+            |b| b[19..27].copy_from_slice(&u64::MAX.to_le_bytes()),
+            "overflows",
+        );
+        // Huge-but-not-overflowing dim: plain truncation error.
+        check(
+            |b| b[19..27].copy_from_slice(&(1u64 << 40).to_le_bytes()),
+            "truncated tensor data",
+        );
+    }
+
+    #[test]
+    fn crash_between_staging_and_rename_keeps_old_snapshot() {
+        // Simulate dying after the tmp write but before the rename: the
+        // staging file holds half of v2, while v1 sits at the final
+        // path. v1 must still load; completing the write must win.
+        let path = tmp("crash_consistency.dkft");
+        let mut v1 = Checkpoint::new();
+        v1.insert("s", Tensor::from_f64(vec![2], &[1.0, 2.0]));
+        v1.save(&path).unwrap();
+        let mut v2 = Checkpoint::new();
+        v2.insert("s", Tensor::from_f64(vec![2], &[9.0, 8.0]));
+        let v2_bytes = v2.to_bytes().unwrap();
+        let staging = staging_path(&path);
+        std::fs::write(&staging, &v2_bytes[..v2_bytes.len() / 2]).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.require_f64("s", &[2]).unwrap(), vec![1.0, 2.0]);
+        // Re-running the atomic write replaces the torn staging file and
+        // lands v2; no .tmp residue remains.
+        atomic_write(&path, &v2_bytes).unwrap();
+        assert!(!staging.exists(), "staging file left behind");
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.require_f64("s", &[2]).unwrap(), vec![9.0, 8.0]);
+    }
+
+    #[test]
+    fn save_is_atomic_over_existing_file() {
+        // Overwriting an existing snapshot goes through rename, so a
+        // reader can never observe a mix of old and new bytes; after the
+        // save only the new contents exist and no staging file remains.
+        let path = tmp("atomic_overwrite.dkft");
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![1], &[1.0]));
+        ck.save(&path).unwrap();
+        ck.insert("w2", Tensor::from_f32(vec![1], &[2.0]));
+        ck.save(&path).unwrap();
+        assert!(!staging_path(&path).exists());
+        assert_eq!(Checkpoint::load(&path).unwrap().len(), 2);
     }
 
     #[test]

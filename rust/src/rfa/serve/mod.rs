@@ -25,6 +25,10 @@
 //!   items across the same job runner as the variance/engine fan-outs.
 //! * [`snapshot`] — serialize/restore a session through the
 //!   [`crate::checkpoint::Checkpoint`] tensor store.
+//! * [`store`] — the [`store::SnapshotStore`] boundary all snapshot IO
+//!   crosses: crash-safe [`store::FsStore`] in production, the
+//!   deterministic [`store::FaultyStore`] injector in the chaos suite
+//!   (see the failure-semantics section below).
 //!
 //! # Precision dispatch: once, at the session boundary
 //!
@@ -147,14 +151,66 @@
 //! session continues its stream bitwise identically to an uninterrupted
 //! one. The covariance sum is an exact f64 accumulation, so this holds
 //! across resample epochs as well.
+//!
+//! # Failure semantics: retry, quarantine, degraded mode
+//!
+//! All snapshot IO flows through the [`store::SnapshotStore`] trait —
+//! [`store::FsStore`] in production (crash-safe writes: staging file +
+//! fsync + atomic rename, so no crash or ENOSPC interleaving ever
+//! leaves a torn file at a snapshot path), [`store::FaultyStore`] in
+//! the chaos suite (`rust/tests/rfa_chaos.rs`), a deterministic
+//! scripted injector. Faults are contained in three layers, none of
+//! which ever consults a wall clock:
+//!
+//! * **Per-session retry with tick-counted backoff.** A tick no longer
+//!   fails its batch on one session's snapshot error: the failing
+//!   session's request goes back to its queue front, the session backs
+//!   off for an exponentially growing, capped number of *ticks*
+//!   ([`scheduler::RetryPolicy`]), and every healthy session in the
+//!   same tick completes and queues its response as usual.
+//! * **Quarantine.** After `quarantine_persistent` consecutive
+//!   persistent-classified failures (or `quarantine_any` of any kind —
+//!   the termination backstop), the session is quarantined: its queued
+//!   requests surface as typed [`scheduler::FailedStep`]s via
+//!   [`scheduler::BatchScheduler::poll_failures`], new submits to it
+//!   are rejected, other sessions keep serving, and
+//!   [`scheduler::BatchScheduler::unquarantine`] re-admits it for an
+//!   operator retry (resubmit the failed requests in seq order).
+//! * **Degraded mode.** While the last snapshot *write* is failing, the
+//!   pool suspends eviction (residents overshoot the soft budget rather
+//!   than risking stream loss) and admission control rejects *new*
+//!   sessions once resident bytes reach the budget; the first
+//!   successful write clears the mode. Failed snapshot unlinks are
+//!   recorded as orphans and retried, never silently dropped.
+//!   [`store::HealthReport`] (on pool and scheduler) exposes all of it.
+//!
+//! What stays deterministic under faults: the fault schedule is part of
+//! the input. For a fixed schedule (in store-op/tick counts, as
+//! [`store::FaultyStore`] scripts it), the set of completed responses,
+//! the quarantine membership, and every output bit are invariant under
+//! thread count and precision-independent in structure — and once the
+//! store heals and abandoned requests are resubmitted in order, each
+//! session's concatenated output stream is bitwise identical to a
+//! never-faulted run. What is *not* deterministic: wall-clock-induced
+//! schedules against a real flaky filesystem (production `FsStore`
+//! faults arrive whenever they arrive) — determinism is with respect to
+//! the schedule, not a guarantee about nature.
 
 pub mod scheduler;
 pub mod session;
 pub mod snapshot;
+pub mod store;
 
-pub use scheduler::{BatchScheduler, StepRequest, StepResponse};
+pub use scheduler::{
+    BatchScheduler, DrainOutcome, FailedStep, RetryPolicy, StepRequest,
+    StepResponse,
+};
 pub use session::{
     FrozenEpoch, HeadSlot, OnlineState, Precision, ResampleConfig,
     ServeConfig, Session, SessionHeads, SessionPool, StepOutput,
 };
 pub use snapshot::{load_session, save_session};
+pub use store::{
+    Fault, FaultHandle, FaultRule, FaultyStore, FiredFault, FsStore,
+    HealthReport, SeededFaults, SnapshotStore, StoreError, StoreOp,
+};

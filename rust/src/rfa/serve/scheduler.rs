@@ -18,15 +18,25 @@
 //! unwraps each scheduled session's [`SessionHeads`] once, collects
 //! generic [`HeadJob`]s at the pool's storage precision, and runs one
 //! generic job loop — no per-head-step precision matching.
+//!
+//! Snapshot-IO failures are contained per session, never per batch: a
+//! failing fault-in sends that one request back to its queue front
+//! under a tick-counted backoff ([`RetryPolicy`]), repeated persistent
+//! failures quarantine the session (typed [`FailedStep`]s via
+//! [`BatchScheduler::poll_failures`], operator retry via
+//! [`BatchScheduler::unquarantine`]), and every other session in the
+//! same tick still completes. See the failure-semantics section of the
+//! [`super`] module docs.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::linalg::{Mat, Scalar};
 use crate::rfa::engine::Head;
 
 use super::session::{HeadSlot, SessionHeads, SessionPool, StepOutput};
+use super::store::{HealthReport, StoreError};
 
 /// One streaming step for one session: a segment of per-head (q, k, v)
 /// rows to append to the session's stream. All heads must cover the same
@@ -70,6 +80,98 @@ pub struct StepResponse {
     pub start_position: u64,
     /// One output per head, in head order, in the session's precision.
     pub outputs: Vec<StepOutput>,
+}
+
+/// Retry/quarantine policy for per-session snapshot-IO failures. Every
+/// quantity is counted in ticks or attempts — never wall-clock time —
+/// so fault handling stays inside the determinism contract.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Consecutive *persistent*-classified failures that quarantine the
+    /// session.
+    pub quarantine_persistent: u32,
+    /// Consecutive failures of any classification that quarantine the
+    /// session — the termination backstop for endless transient faults.
+    pub quarantine_any: u32,
+    /// Backoff after the first failure, in ticks; doubles per
+    /// consecutive failure.
+    pub backoff_base: u64,
+    /// Upper bound on the per-session backoff, in ticks.
+    pub backoff_cap: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            quarantine_persistent: 3,
+            quarantine_any: 12,
+            backoff_base: 1,
+            backoff_cap: 8,
+        }
+    }
+}
+
+/// A request the scheduler gave up on (its session was quarantined).
+/// Carries the original request so an operator can resubmit it after
+/// [`BatchScheduler::unquarantine`].
+pub struct FailedStep {
+    pub session_id: u64,
+    /// The seq [`BatchScheduler::submit`] assigned to the request.
+    pub seq: u64,
+    pub request: StepRequest,
+    /// Human-readable cause, ending in the store error's
+    /// transient/persistent classification.
+    pub error: String,
+}
+
+/// Everything a [`BatchScheduler::run_until_idle`] drain produced —
+/// lossless even when the drain did not finish cleanly: responses
+/// completed before a mid-drain error are returned alongside it, never
+/// dropped.
+pub struct DrainOutcome {
+    /// Responses completed during the drain, in completion order.
+    pub responses: Vec<StepResponse>,
+    /// Requests abandoned to quarantine during the drain.
+    pub failures: Vec<FailedStep>,
+    /// The error that stopped the drain, if it did not run to idle.
+    pub error: Option<anyhow::Error>,
+}
+
+impl DrainOutcome {
+    /// True when the drain finished with no error and no failed steps.
+    pub fn is_clean(&self) -> bool {
+        self.error.is_none() && self.failures.is_empty()
+    }
+
+    /// Collapse to the strict all-or-nothing view (what tests and
+    /// benches want): `Ok(responses)` only for a clean drain.
+    pub fn into_result(self) -> Result<Vec<StepResponse>> {
+        if let Some(e) = self.error {
+            return Err(e);
+        }
+        if let Some(first) = self.failures.first() {
+            return Err(anyhow!(
+                "drain abandoned {} request(s); first: session {} seq {}: {}",
+                self.failures.len(),
+                first.session_id,
+                first.seq,
+                first.error
+            ));
+        }
+        Ok(self.responses)
+    }
+}
+
+/// Per-session failure bookkeeping (absent = healthy).
+#[derive(Debug, Default, Clone, Copy)]
+struct SessionHealth {
+    /// Consecutive failed fault-in attempts.
+    consecutive: u32,
+    /// Trailing run of persistent-classified failures (a transient
+    /// failure resets it).
+    persistent_streak: u32,
+    /// The session's requests are not scheduled before this tick.
+    eligible_at: u64,
 }
 
 /// Work item of one scheduling tick: one head of one scheduled session,
@@ -121,10 +223,26 @@ pub struct BatchScheduler {
     /// at the start of the next tick; inspectable via
     /// [`Self::budget_error`]/[`Self::take_budget_error`].
     deferred_budget: Option<anyhow::Error>,
+    policy: RetryPolicy,
+    /// Monotone tick counter — the clock every backoff is measured in.
+    ticks: u64,
+    /// Failure bookkeeping for sessions with a live retry streak.
+    session_health: BTreeMap<u64, SessionHealth>,
+    /// Sessions the retry policy gave up on; their submits are rejected
+    /// until [`Self::unquarantine`].
+    quarantined: BTreeSet<u64>,
+    /// Typed failure records awaiting [`Self::poll_failures`].
+    failures: VecDeque<FailedStep>,
 }
 
 impl BatchScheduler {
     pub fn new(pool: SessionPool) -> Self {
+        Self::with_policy(pool, RetryPolicy::default())
+    }
+
+    /// A scheduler with an explicit [`RetryPolicy`] (the default suits
+    /// production; chaos tests shrink the windows).
+    pub fn with_policy(pool: SessionPool, policy: RetryPolicy) -> Self {
         Self {
             pool,
             queues: BTreeMap::new(),
@@ -133,6 +251,11 @@ impl BatchScheduler {
             responses: VecDeque::new(),
             next_seq: 0,
             deferred_budget: None,
+            policy,
+            ticks: 0,
+            session_health: BTreeMap::new(),
+            quarantined: BTreeSet::new(),
+            failures: VecDeque::new(),
         }
     }
 
@@ -166,6 +289,47 @@ impl BatchScheduler {
         self.deferred_budget.take()
     }
 
+    /// Combined serving health: the pool's degraded/failure/orphan state
+    /// plus the scheduler's quarantine count and deferred-budget flag.
+    pub fn health(&self) -> HealthReport {
+        let mut report = self.pool.health();
+        report.quarantined = self.quarantined.len();
+        report.deferred_budget = self.deferred_budget.is_some();
+        report
+    }
+
+    /// Ids of currently quarantined sessions, ascending.
+    pub fn quarantined_sessions(&self) -> Vec<u64> {
+        self.quarantined.iter().copied().collect()
+    }
+
+    pub fn is_quarantined(&self, id: u64) -> bool {
+        self.quarantined.contains(&id)
+    }
+
+    /// Operator retry: lift a session's quarantine and reset its failure
+    /// bookkeeping. The session's abandoned requests were surfaced via
+    /// [`Self::poll_failures`]; resubmit them (in seq order) to replay.
+    pub fn unquarantine(&mut self, id: u64) -> Result<()> {
+        ensure!(
+            self.quarantined.remove(&id),
+            "session {id} is not quarantined"
+        );
+        self.session_health.remove(&id);
+        Ok(())
+    }
+
+    /// Drain the typed records of abandoned requests (quarantined
+    /// sessions), in the order they were given up on.
+    pub fn poll_failures(&mut self) -> Vec<FailedStep> {
+        self.failures.drain(..).collect()
+    }
+
+    /// Ticks run so far — the clock backoffs are measured against.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
     /// The current ready-list, in tick batch order: one
     /// `(head-of-queue seq, session id)` pair per non-empty queue.
     /// Introspection for error-path determinism tests.
@@ -192,6 +356,8 @@ impl BatchScheduler {
             }
             self.pending -= queue.len();
         }
+        self.quarantined.remove(&id);
+        self.session_health.remove(&id);
         self.pool.close_session(id)
     }
 
@@ -201,6 +367,12 @@ impl BatchScheduler {
         ensure!(
             self.pool.contains(req.session_id),
             "no session with id {}",
+            req.session_id
+        );
+        ensure!(
+            !self.quarantined.contains(&req.session_id),
+            "session {} is quarantined after repeated snapshot failures; \
+             unquarantine it to retry",
             req.session_id
         );
         ensure!(
@@ -257,105 +429,178 @@ impl BatchScheduler {
     }
 
     /// Run one scheduling tick; returns the number of requests completed
-    /// (0 when the queue is empty). On a snapshot-IO error (eviction or
-    /// fault-in) *before* any state advanced, the batch goes back to the
-    /// front of its sessions' queues in arrival order and the error
-    /// propagates — no request is lost. A budget re-enforcement failure
-    /// *after* the batch completed is non-fatal: the responses are
-    /// already queued and `pending` decremented, so the tick returns
-    /// `Ok` and the error is deferred (see [`Self::budget_error`]) and
-    /// retried at the start of the next tick.
+    /// (0 when nothing was eligible). Snapshot-IO failures are contained
+    /// per session:
+    ///
+    /// * A session whose fault-in fails gets its request back at the
+    ///   queue front and a tick-counted backoff; every *other* session
+    ///   in the batch still runs and queues its response in this tick.
+    /// * After [`RetryPolicy::quarantine_persistent`] consecutive
+    ///   persistent failures (or [`RetryPolicy::quarantine_any`] of any
+    ///   kind), the session is quarantined: its requests surface as
+    ///   [`FailedStep`]s via [`Self::poll_failures`] and `pending`
+    ///   drops accordingly.
+    /// * A budget re-enforcement failure *after* the batch completed is
+    ///   non-fatal: the responses are already queued, so the tick
+    ///   returns `Ok` and the error is deferred (see
+    ///   [`Self::budget_error`]) and retried at the next tick.
+    ///
+    /// `Err` from a tick is reserved for non-containable conditions;
+    /// no request is ever lost on any path.
     pub fn tick(&mut self) -> Result<usize> {
+        self.ticks += 1;
         // Retry a deferred budget re-enforcement first, while nothing is
         // pinned. Still failing is still non-fatal — the pool simply
         // stays over budget until the snapshot dir heals.
         if self.deferred_budget.is_some() {
-            match self.pool.ensure_budget(&[]) {
+            match self.pool.try_heal() {
                 Ok(()) => self.deferred_budget = None,
                 Err(e) => self.deferred_budget = Some(e),
             }
         }
-        // Batch: pop the head request of every ready session. The
-        // ready-list is ordered by head seq, so the batch comes out in
-        // arrival order without touching any deferred request.
-        let picked: Vec<(u64, u64)> =
-            std::mem::take(&mut self.ready).into_iter().collect();
-        let mut batch: Vec<(u64, StepRequest)> =
+        // Pick the ready sessions that are past their backoff gate; the
+        // rest keep their ready entries for a later tick. The ready-list
+        // is ordered by head seq, so the batch comes out in arrival
+        // order without touching any deferred request.
+        let now = self.ticks;
+        let picked: Vec<(u64, u64)> = self
+            .ready
+            .iter()
+            .copied()
+            .filter(|&(_, sid)| {
+                self.session_health
+                    .get(&sid)
+                    .is_none_or(|h| h.eligible_at <= now)
+            })
+            .collect();
+        for key in &picked {
+            self.ready.remove(key);
+        }
+        // Phase A — snapshot IO, serial, in arrival order: pop each
+        // picked head request and fault its session in. One session's
+        // failure routes to the retry path instead of failing the batch.
+        let mut runnable: Vec<(u64, StepRequest)> =
             Vec::with_capacity(picked.len());
+        let mut faulted: Vec<(u64, StepRequest, StoreError)> = Vec::new();
         for &(seq, sid) in &picked {
             let queue =
                 self.queues.get_mut(&sid).expect("ready session has a queue");
             let (head_seq, req) =
                 queue.pop_front().expect("ready queue is non-empty");
             debug_assert_eq!(head_seq, seq, "ready-list out of sync");
-            batch.push((seq, req));
+            match self.pool.fault_in(sid) {
+                Ok(()) => runnable.push((seq, req)),
+                Err(e) => faulted.push((seq, req, e)),
+            }
         }
-        if batch.is_empty() {
+        if runnable.is_empty() && faulted.is_empty() {
             return Ok(0);
         }
-        match self.run_batch(&batch) {
-            Ok(responses) => {
-                let completed = responses.len();
-                self.pending -= completed;
-                self.responses.extend(responses);
-                // Re-arm the ready-list with each session's next queued
-                // request and prune emptied queues.
-                for (_, sid) in picked {
-                    if let Some(&(seq, _)) =
-                        self.queues.get(&sid).and_then(VecDeque::front)
-                    {
-                        self.ready.insert((seq, sid));
-                    }
-                }
-                self.queues.retain(|_, q| !q.is_empty());
-                // A tick pins its whole batch, so a many-session batch
-                // can legitimately overshoot the budget while running;
-                // re-enforce it now that nothing is pinned. A failure
-                // here must NOT fail the tick: every request already
-                // completed, its response is queued and `pending` was
-                // decremented — returning `Err` would make callers lose
-                // a fully-completed drain. Defer the error instead.
-                if let Err(e) = self.pool.ensure_budget(&[]) {
-                    self.deferred_budget = Some(e);
-                }
-                Ok(completed)
+        // Phase B — compute, infallible: every runnable session is
+        // resident. The batch may overshoot the memory budget while it
+        // runs (as it always did, when the whole batch was pinned);
+        // re-enforced below.
+        let completed = runnable.len();
+        if completed > 0 {
+            let responses = self.run_resident_batch(&runnable);
+            self.pending -= responses.len();
+            self.responses.extend(responses);
+            for (_, req) in &runnable {
+                self.session_health.remove(&req.session_id);
             }
-            Err(e) => {
-                // Each batch entry was its session's queue head; put it
-                // back in front and rebuild the ready-list from the
-                // (unchanged) queue heads.
-                for (seq, req) in batch {
-                    self.queues
-                        .entry(req.session_id)
-                        .or_default()
-                        .push_front((seq, req));
-                }
-                self.ready = self
-                    .queues
-                    .iter()
-                    .filter_map(|(sid, q)| {
-                        q.front().map(|&(seq, _)| (seq, *sid))
-                    })
-                    .collect();
-                Err(e)
+        }
+        // Phase C — failure bookkeeping: requeue-with-backoff or
+        // quarantine each faulted request.
+        for (seq, req, err) in faulted {
+            self.note_failure(seq, req, err);
+        }
+        // Re-arm the ready-list from the surviving queue heads (a
+        // requeued request re-enters here; its backoff gate keeps it out
+        // of the next pick until eligible) and prune emptied queues.
+        for &(_, sid) in &picked {
+            if let Some(&(seq, _)) =
+                self.queues.get(&sid).and_then(VecDeque::front)
+            {
+                self.ready.insert((seq, sid));
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        // A failure here must NOT fail the tick: every completed request
+        // already queued its response — returning `Err` would make
+        // callers lose a fully-completed batch. Defer the error instead.
+        if let Err(e) = self.pool.ensure_budget(&[]) {
+            self.deferred_budget = Some(e);
+        }
+        Ok(completed)
+    }
+
+    /// Record one failed fault-in: bump the session's streaks, arm the
+    /// (exponential, capped, tick-counted) backoff, requeue the request
+    /// at the queue front — or, past the policy's thresholds, quarantine
+    /// the session and surface its requests as [`FailedStep`]s.
+    fn note_failure(&mut self, seq: u64, req: StepRequest, err: StoreError) {
+        let sid = req.session_id;
+        let health = self.session_health.entry(sid).or_default();
+        health.consecutive += 1;
+        if err.is_transient() {
+            health.persistent_streak = 0;
+        } else {
+            health.persistent_streak += 1;
+        }
+        let exp = 1u64
+            .checked_shl(health.consecutive.saturating_sub(1))
+            .unwrap_or(u64::MAX);
+        let backoff = self
+            .policy
+            .backoff_base
+            .saturating_mul(exp)
+            .clamp(1, self.policy.backoff_cap.max(1));
+        health.eligible_at = self.ticks + backoff;
+        let quarantine = health.persistent_streak
+            >= self.policy.quarantine_persistent
+            || health.consecutive >= self.policy.quarantine_any;
+        if !quarantine {
+            self.queues.entry(sid).or_default().push_front((seq, req));
+            return;
+        }
+        let streak = health.consecutive;
+        self.session_health.remove(&sid);
+        self.quarantined.insert(sid);
+        self.pending -= 1;
+        self.failures.push_back(FailedStep {
+            session_id: sid,
+            seq,
+            request: req,
+            error: format!(
+                "session {sid} quarantined after {streak} consecutive \
+                 snapshot failures: {err}"
+            ),
+        });
+        // The rest of the session's queue can never run before an
+        // operator intervenes; abandon it as typed failures too.
+        if let Some(queue) = self.queues.remove(&sid) {
+            self.pending -= queue.len();
+            for (qseq, qreq) in queue {
+                self.failures.push_back(FailedStep {
+                    session_id: sid,
+                    seq: qseq,
+                    request: qreq,
+                    error: format!(
+                        "session {sid} quarantined; queued request \
+                         abandoned (unquarantine and resubmit to retry)"
+                    ),
+                });
             }
         }
     }
 
-    /// Fault the batch's sessions in and run every (session × head) item
-    /// on the worker pool. All fallible (IO) work happens before any
-    /// session state is touched, so an `Err` leaves every stream intact.
-    fn run_batch(
+    /// Run every (session × head) item of an already-resident batch on
+    /// the worker pool. Infallible: all IO happened in phase A.
+    fn run_resident_batch(
         &mut self,
         batch: &[(u64, StepRequest)],
-    ) -> Result<Vec<StepResponse>> {
-        // Fault every scheduled session in, serially, with the whole
-        // batch pinned so faulting one in never evicts another.
+    ) -> Vec<StepResponse> {
         let ids: Vec<u64> = batch.iter().map(|(_, r)| r.session_id).collect();
-        for &id in &ids {
-            self.pool.ensure_resident(id, &ids)?;
-        }
-
         // Fan out: jobs ordered by (request arrival, head index). The
         // pool is single-precision, so every session's heads land in the
         // same per-precision job list — the SessionHeads match below is
@@ -402,7 +647,7 @@ impl BatchScheduler {
                 outputs: head_outputs,
             });
         }
-        Ok(responses)
+        responses
     }
 
     /// Drain completed responses (in completion order; `seq` identifies
@@ -411,16 +656,50 @@ impl BatchScheduler {
         self.responses.drain(..).collect()
     }
 
-    /// Tick until the pending queues are empty, then drain every
-    /// response — the synchronous, wall-clock-free way to run a workload
-    /// to completion.
-    pub fn run_until_idle(&mut self) -> Result<Vec<StepResponse>> {
+    /// Tick until the pending queues are empty, then drain everything —
+    /// the synchronous, wall-clock-free way to run a workload to
+    /// completion. Lossless: responses and failures produced before a
+    /// mid-drain error are returned in the [`DrainOutcome`] alongside
+    /// it, never dropped. Backoff ticks complete zero requests without
+    /// being stalls; the drain only errors out after the retry policy's
+    /// worst-case no-progress window is exhausted.
+    pub fn run_until_idle(&mut self) -> DrainOutcome {
+        // Longest legitimate no-progress stretch: a session can fail
+        // `quarantine_any` times, each behind a backoff of at most
+        // `backoff_cap` idle ticks, before quarantine shrinks `pending`.
+        let max_stall = (self.policy.quarantine_any as u64 + 1)
+            * (self.policy.backoff_cap.max(1) + 1)
+            + 1;
+        let mut stalled = 0u64;
+        let mut error = None;
         while self.pending > 0 {
-            let done = self.tick()?;
-            if done == 0 {
-                bail!("scheduler made no progress with non-empty queue");
+            let before = self.pending;
+            match self.tick() {
+                Ok(done) => {
+                    if done > 0 || self.pending < before {
+                        stalled = 0;
+                    } else {
+                        stalled += 1;
+                    }
+                    if stalled > max_stall {
+                        error = Some(anyhow!(
+                            "scheduler stalled: {} request(s) pending with \
+                             no progress for {stalled} ticks",
+                            self.pending
+                        ));
+                        break;
+                    }
+                }
+                Err(e) => {
+                    error = Some(e);
+                    break;
+                }
             }
         }
-        Ok(self.poll_responses())
+        DrainOutcome {
+            responses: self.poll_responses(),
+            failures: self.poll_failures(),
+            error,
+        }
     }
 }

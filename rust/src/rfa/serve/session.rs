@@ -14,8 +14,8 @@
 //! once before running generic [`crate::linalg::Scalar`] code. Nothing
 //! below the session matches on [`Precision`] again.
 
-use std::collections::{BTreeMap, VecDeque};
-use std::path::PathBuf;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -28,6 +28,7 @@ use crate::rfa::gaussian::{MultivariateGaussian, SecondMomentAccumulator};
 use crate::rng::Pcg64;
 
 use super::snapshot;
+use super::store::{FsStore, HealthReport, SnapshotStore, StoreError};
 
 /// Numeric precision of a session's forward path. The running state is
 /// f64 either way (the engine's `Scalar::Accum` contract); `F32` runs
@@ -697,10 +698,28 @@ pub struct SessionPool {
     /// goes through explicit [`super::save_session`] paths.)
     pool_tag: u64,
     stats: PoolStats,
+    /// The snapshot-IO backend; all durable traffic goes through it.
+    store: Box<dyn SnapshotStore>,
+    /// The last snapshot write failed and none has succeeded since.
+    /// While set: eviction is suspended (residents overshoot the soft
+    /// budget instead of risking data loss) and admission control
+    /// rejects new sessions once resident bytes reach the budget.
+    degraded: bool,
+    /// Cumulative failed store ops (writes, reads, non-NotFound removes).
+    snapshot_failures: u64,
+    /// Snapshot files whose unlink failed; retried at the next
+    /// eviction/close/heal so a flaky FS can't accrete files invisibly.
+    orphans: BTreeSet<PathBuf>,
 }
 
 impl SessionPool {
     pub fn new(cfg: ServeConfig) -> Self {
+        Self::with_store(cfg, Box::new(FsStore))
+    }
+
+    /// A pool over an explicit snapshot backend — how the chaos suite
+    /// injects a [`super::store::FaultyStore`].
+    pub fn with_store(cfg: ServeConfig, store: Box<dyn SnapshotStore>) -> Self {
         static POOL_COUNTER: AtomicU64 = AtomicU64::new(0);
         Self {
             cfg,
@@ -711,6 +730,10 @@ impl SessionPool {
             next_id: 0,
             pool_tag: POOL_COUNTER.fetch_add(1, Ordering::Relaxed),
             stats: PoolStats::default(),
+            store,
+            degraded: false,
+            snapshot_failures: 0,
+            orphans: BTreeSet::new(),
         }
     }
 
@@ -722,23 +745,144 @@ impl SessionPool {
         self.stats
     }
 
+    /// Pool-level health: degraded flag, failure counter, orphan count.
+    /// (`quarantined`/`deferred_budget` are scheduler-level; the
+    /// scheduler's `health()` fills them in.)
+    pub fn health(&self) -> HealthReport {
+        HealthReport {
+            degraded: self.degraded,
+            quarantined: 0,
+            deferred_budget: false,
+            snapshot_failures: self.snapshot_failures,
+            orphaned_snapshots: self.orphans.len(),
+        }
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    // Store-op wrappers: every outcome feeds the health counters, and a
+    // write success is the (only) signal that clears degraded mode.
+    fn store_write(
+        &mut self,
+        path: &Path,
+        bytes: &[u8],
+    ) -> Result<(), StoreError> {
+        match self.store.write(path, bytes) {
+            Ok(()) => {
+                self.degraded = false;
+                Ok(())
+            }
+            Err(e) => {
+                self.degraded = true;
+                self.snapshot_failures += 1;
+                Err(e)
+            }
+        }
+    }
+
+    fn store_read(&mut self, path: &Path) -> Result<Vec<u8>, StoreError> {
+        self.store.read(path).map_err(|e| {
+            self.snapshot_failures += 1;
+            e
+        })
+    }
+
+    fn store_remove(&mut self, path: &Path) -> Result<(), StoreError> {
+        self.store.remove(path).map_err(|e| {
+            if !e.is_not_found() {
+                self.snapshot_failures += 1;
+            }
+            e
+        })
+    }
+
+    /// Retry every recorded failed unlink; called from eviction, close
+    /// and heal paths so orphans drain as soon as the FS recovers.
+    fn retry_orphan_unlinks(&mut self) {
+        if self.orphans.is_empty() {
+            return;
+        }
+        let paths: Vec<PathBuf> = self.orphans.iter().cloned().collect();
+        for path in paths {
+            match self.store_remove(&path) {
+                Ok(()) => {
+                    self.orphans.remove(&path);
+                }
+                Err(e) if e.is_not_found() => {
+                    self.orphans.remove(&path);
+                }
+                Err(_) => {}
+            }
+        }
+    }
+
+    /// Operator/scheduler heal probe: retry orphaned unlinks and
+    /// re-enforce the budget. A successful eviction write clears
+    /// degraded mode (the store-op hooks observe it); if the budget
+    /// needs no eviction, a tiny probe write stands in — degraded mode
+    /// must not outlive the outage just because nothing happened to be
+    /// evicted.
+    pub fn try_heal(&mut self) -> Result<()> {
+        self.retry_orphan_unlinks();
+        self.ensure_budget(&[])?;
+        if self.degraded {
+            let probe = self.cfg.snapshot_dir.join(format!(
+                "pool{}-{}-health-probe.tmp",
+                std::process::id(),
+                self.pool_tag
+            ));
+            self.store_write(&probe, b"darkformer snapshot-store probe")
+                .with_context(|| {
+                    format!("health probe write {}", probe.display())
+                })?;
+            if let Err(e) = self.store_remove(&probe) {
+                if !e.is_not_found() {
+                    self.orphans.insert(probe);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Allocate an id and create a fresh session for `seed`, evicting
     /// LRU sessions if the budget demands it.
+    ///
+    /// Degraded mode changes the budget behavior, not the API: while the
+    /// snapshot store is unhealthy, admission control rejects new
+    /// sessions once resident bytes already reach the (soft) budget, and
+    /// an admitted session skips the eviction pass rather than risking
+    /// another failed write — residents keep serving, memory overshoots.
     pub fn create_session(&mut self, seed: u64) -> Result<u64> {
         if let Some(rc) = &self.cfg.resample {
             rc.validate()?;
+        }
+        if self.degraded
+            && self.cfg.memory_budget > 0
+            && self.resident_bytes() >= self.cfg.memory_budget
+        {
+            bail!(
+                "admission control: snapshot store is degraded and resident \
+                 bytes ({}) already reach the budget ({}); heal the store or \
+                 close sessions before admitting new ones",
+                self.resident_bytes(),
+                self.cfg.memory_budget
+            );
         }
         let id = self.next_id;
         self.next_id += 1;
         let session = Session::new(id, seed, &self.cfg);
         self.resident.insert(id, session);
         self.touch(id);
-        if let Err(e) = self.ensure_budget(&[id]) {
-            // Roll the (still-fresh, stateless) session back so a failed
-            // eviction write cannot leak an unreachable resident session.
-            self.resident.remove(&id);
-            self.last_used.remove(&id);
-            return Err(e);
+        if !self.degraded {
+            if let Err(e) = self.ensure_budget(&[id]) {
+                // Roll the (still-fresh, stateless) session back so a failed
+                // eviction write cannot leak an unreachable resident session.
+                self.resident.remove(&id);
+                self.last_used.remove(&id);
+                return Err(e);
+            }
         }
         Ok(id)
     }
@@ -776,6 +920,16 @@ impl SessionPool {
         id: u64,
         pinned: &[u64],
     ) -> Result<()> {
+        self.fault_in(id)?;
+        self.ensure_budget(pinned)
+    }
+
+    /// Restore `id` from its snapshot if it is evicted (a no-op beyond a
+    /// touch when it is already resident). Returns the classified
+    /// [`StoreError`] so the scheduler's retry policy can distinguish
+    /// transient from persistent failures; does *not* enforce the
+    /// budget — callers re-balance once per batch.
+    pub(crate) fn fault_in(&mut self, id: u64) -> Result<(), StoreError> {
         if self.resident.contains_key(&id) {
             self.touch(id);
             return Ok(());
@@ -783,57 +937,51 @@ impl SessionPool {
         // Leave the evicted entry in place until the load succeeds: a
         // transient IO failure must not orphan the session.
         let Some(path) = self.evicted.get(&id).cloned() else {
-            bail!("no session with id {id}");
+            return Err(StoreError::persistent(format!(
+                "no session with id {id}"
+            )));
         };
-        let session = snapshot::load_session(&path)
-            .with_context(|| format!("faulting in session {id}"))?;
-        ensure!(
-            session.id() == id,
-            "snapshot {} holds session {}, expected {id}",
-            path.display(),
-            session.id()
-        );
-        ensure!(
-            session.n_heads() == self.cfg.n_heads
-                && session.dv() == self.cfg.dv
-                && session.precision() == self.cfg.precision,
-            "snapshot geometry (heads={}, dv={}, {:?}) does not match the \
-             pool config (heads={}, dv={}, {:?})",
-            session.n_heads(),
-            session.dv(),
-            session.precision(),
-            self.cfg.n_heads,
-            self.cfg.dv,
-            self.cfg.precision
-        );
-        ensure!(
-            session.resample_config() == self.cfg.resample.as_ref(),
-            "snapshot resample policy {:?} does not match the pool \
-             config {:?}",
-            session.resample_config(),
-            self.cfg.resample
-        );
+        let bytes = self
+            .store_read(&path)
+            .map_err(|e| e.context(format!("faulting in session {id}")))?;
+        let session = match restored_session(&self.cfg, id, &path, &bytes) {
+            Ok(s) => s,
+            Err(e) => {
+                // Parse/validation failures are persistent: the bytes on
+                // disk will not get better by retrying.
+                self.snapshot_failures += 1;
+                return Err(StoreError::persistent(format!(
+                    "faulting in session {id}: {e:#}"
+                )));
+            }
+        };
         // The snapshot is consumed: the resident session is now the only
-        // truth, so a stale file can never shadow newer state.
+        // truth, so a stale file can never shadow newer state. A failed
+        // unlink is recorded and retried later, never silently dropped.
         self.evicted.remove(&id);
-        let _ = std::fs::remove_file(&path);
+        if let Err(e) = self.store_remove(&path) {
+            if !e.is_not_found() {
+                self.orphans.insert(path.clone());
+            }
+        }
         self.resident.insert(id, session);
         self.stats.restores += 1;
         self.touch(id);
-        self.ensure_budget(pinned)?;
         Ok(())
     }
 
     /// Evict one session now (snapshot + drop from memory). Exposed for
     /// orderly shutdown; the budget path calls it internally.
     pub fn evict(&mut self, id: u64) -> Result<()> {
+        self.retry_orphan_unlinks();
         // Snapshot first, drop from memory only once the bytes are on
         // disk — a failed write must not lose the stream.
         let Some(session) = self.resident.get(&id) else {
             bail!("session {id} is not resident");
         };
         let path = self.snapshot_path(id);
-        snapshot::save_session(session, &path)
+        let bytes = snapshot::session_to_bytes(session)?;
+        self.store_write(&path, &bytes)
             .with_context(|| format!("evicting session {id}"))?;
         self.resident.remove(&id);
         self.evicted.insert(id, path);
@@ -845,22 +993,20 @@ impl SessionPool {
     /// End a session's life: drop its resident state, or — if it was
     /// evicted — remove the `evicted` entry *and* unlink its snapshot
     /// file, so closed sessions never accrete snapshot files on disk.
-    /// An already-gone snapshot file is tolerated (the close still wins);
-    /// an unknown id is an error.
+    /// The close always wins: an already-gone snapshot file is
+    /// tolerated, and a failed unlink is recorded as an orphan (retried
+    /// later, visible in [`SessionPool::health`]) rather than failing
+    /// the close. An unknown id is an error.
     pub fn close_session(&mut self, id: u64) -> Result<()> {
+        self.retry_orphan_unlinks();
         let was_resident = self.resident.remove(&id).is_some();
         self.last_used.remove(&id);
         if let Some(path) = self.evicted.remove(&id) {
-            match std::fs::remove_file(&path) {
+            match self.store_remove(&path) {
                 Ok(()) => {}
-                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-                Err(e) => {
-                    return Err(e).with_context(|| {
-                        format!(
-                            "removing snapshot {} of closed session {id}",
-                            path.display()
-                        )
-                    });
+                Err(e) if e.is_not_found() => {}
+                Err(_) => {
+                    self.orphans.insert(path);
                 }
             }
             return Ok(());
@@ -919,4 +1065,44 @@ impl SessionPool {
         self.clock += 1;
         self.last_used.insert(id, self.clock);
     }
+}
+
+/// Parse snapshot bytes and validate them against the pool config — the
+/// fallible middle of `fault_in`, split out so the caller can classify
+/// any failure here as persistent.
+fn restored_session(
+    cfg: &ServeConfig,
+    id: u64,
+    path: &Path,
+    bytes: &[u8],
+) -> Result<Session> {
+    let session = snapshot::session_from_bytes(bytes)
+        .with_context(|| format!("restoring from {}", path.display()))?;
+    ensure!(
+        session.id() == id,
+        "snapshot {} holds session {}, expected {id}",
+        path.display(),
+        session.id()
+    );
+    ensure!(
+        session.n_heads() == cfg.n_heads
+            && session.dv() == cfg.dv
+            && session.precision() == cfg.precision,
+        "snapshot geometry (heads={}, dv={}, {:?}) does not match the \
+         pool config (heads={}, dv={}, {:?})",
+        session.n_heads(),
+        session.dv(),
+        session.precision(),
+        cfg.n_heads,
+        cfg.dv,
+        cfg.precision
+    );
+    ensure!(
+        session.resample_config() == cfg.resample.as_ref(),
+        "snapshot resample policy {:?} does not match the pool \
+         config {:?}",
+        session.resample_config(),
+        cfg.resample
+    );
+    Ok(session)
 }

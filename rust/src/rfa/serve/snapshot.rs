@@ -344,8 +344,25 @@ pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
     Ok(Session::from_parts(id, seed, position, dv, resample, heads))
 }
 
+/// Serialize a session to DKFT wire bytes — the form the serve layer
+/// hands to its [`super::store::SnapshotStore`] backend.
+pub fn session_to_bytes(session: &Session) -> Result<Vec<u8>> {
+    session_checkpoint(session).to_bytes().with_context(|| {
+        format!("serializing session {} snapshot", session.id())
+    })
+}
+
+/// Rebuild a session from DKFT wire bytes (the dual of
+/// [`session_to_bytes`]), validating structure before anything numeric.
+pub fn session_from_bytes(bytes: &[u8]) -> Result<Session> {
+    let ck = Checkpoint::from_bytes(bytes)
+        .context("parsing session snapshot")?;
+    session_from_checkpoint(&ck)
+}
+
 /// Snapshot a session to `path` (DKFT: magic, version, crc — see
-/// [`crate::checkpoint`]).
+/// [`crate::checkpoint`]). Crash-safe via the checkpoint layer's
+/// atomic write.
 pub fn save_session(session: &Session, path: &Path) -> Result<()> {
     session_checkpoint(session)
         .save(path)

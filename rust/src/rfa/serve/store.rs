@@ -1,0 +1,460 @@
+//! Pluggable snapshot IO: durable filesystem writes and deterministic
+//! fault injection.
+//!
+//! All serve-layer snapshot traffic flows through [`SnapshotStore`], so
+//! the pool never touches `std::fs` directly. Production uses
+//! [`FsStore`], whose writes are crash-safe via
+//! [`crate::checkpoint::atomic_write`] (staging file + fsync + rename).
+//! The chaos suite wraps any store in [`FaultyStore`], a scripted
+//! injector whose fault schedule is a pure function of the operation
+//! sequence (rule windows counted in store ops, seeded faults keyed by
+//! op index) — never of wall-clock time — so every chaos run is
+//! reproducible bit-for-bit and thread-count independent.
+//!
+//! Errors carry a transient/persistent classification
+//! ([`StoreError::is_transient`]) that drives the scheduler's retry
+//! policy: transient errors reset the quarantine streak, persistent
+//! ones count toward it.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::checkpoint;
+use crate::rng::Pcg64;
+
+// --- errors ------------------------------------------------------------
+
+/// A classified snapshot-storage error. Implements `std::error::Error`,
+/// so it flows into `anyhow` chains unchanged; the classification
+/// survives as text (`[transient]` / `[persistent]`) and as typed
+/// accessors while the error is still concrete.
+#[derive(Debug, Clone)]
+pub struct StoreError {
+    transient: bool,
+    not_found: bool,
+    msg: String,
+}
+
+impl StoreError {
+    /// An error worth retrying (EINTR-like): the same op may succeed on
+    /// the next tick without operator intervention.
+    pub fn transient(msg: impl Into<String>) -> Self {
+        Self { transient: true, not_found: false, msg: msg.into() }
+    }
+
+    /// An error that will keep happening until something outside the
+    /// scheduler changes (bad media, corrupt snapshot, ENOSPC).
+    pub fn persistent(msg: impl Into<String>) -> Self {
+        Self { transient: false, not_found: false, msg: msg.into() }
+    }
+
+    /// Classify an `io::Error`: interrupted/contended kinds are
+    /// transient, everything else (including ENOSPC and EIO) persistent.
+    pub fn from_io(op: &str, path: &Path, e: io::Error) -> Self {
+        let transient = matches!(
+            e.kind(),
+            io::ErrorKind::Interrupted
+                | io::ErrorKind::WouldBlock
+                | io::ErrorKind::TimedOut
+        );
+        Self {
+            transient,
+            not_found: e.kind() == io::ErrorKind::NotFound,
+            msg: format!("{op} {}: {e}", path.display()),
+        }
+    }
+
+    /// Prepend context, preserving the classification.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.msg = format!("{ctx}: {}", self.msg);
+        self
+    }
+
+    pub fn is_transient(&self) -> bool {
+        self.transient
+    }
+
+    /// True when the underlying op failed because the path is absent —
+    /// tolerated by unlink paths, fatal for reads.
+    pub fn is_not_found(&self) -> bool {
+        self.not_found
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let class = if self.transient { "transient" } else { "persistent" };
+        write!(f, "{} [{class}]", self.msg)
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+// --- the store trait ---------------------------------------------------
+
+/// Whole-file snapshot IO, the only door between `rfa::serve` and
+/// durable storage. Methods take `&self`; fault injectors use interior
+/// mutability so a store can be shared with its control handle.
+pub trait SnapshotStore: Send {
+    /// Durably replace the contents of `path`. Implementations must be
+    /// atomic: a failure (or crash) never leaves a torn file at `path`.
+    fn write(&self, path: &Path, bytes: &[u8]) -> Result<(), StoreError>;
+
+    /// Read the full contents of `path`.
+    fn read(&self, path: &Path) -> Result<Vec<u8>, StoreError>;
+
+    /// Delete `path`. Absence is reported (`is_not_found`), not hidden.
+    fn remove(&self, path: &Path) -> Result<(), StoreError>;
+}
+
+/// Production store: real filesystem, crash-safe writes.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FsStore;
+
+impl SnapshotStore for FsStore {
+    fn write(&self, path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        checkpoint::atomic_write(path, bytes)
+            .map_err(|e| StoreError::from_io("writing snapshot", path, e))
+    }
+
+    fn read(&self, path: &Path) -> Result<Vec<u8>, StoreError> {
+        std::fs::read(path)
+            .map_err(|e| StoreError::from_io("reading snapshot", path, e))
+    }
+
+    fn remove(&self, path: &Path) -> Result<(), StoreError> {
+        std::fs::remove_file(path)
+            .map_err(|e| StoreError::from_io("removing snapshot", path, e))
+    }
+}
+
+// --- health ------------------------------------------------------------
+
+/// Operator-facing health summary, assembled by
+/// `SessionPool::health` / `BatchScheduler::health`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    /// The last snapshot *write* failed and none has succeeded since:
+    /// eviction is suspended and admission control applies past the
+    /// soft budget.
+    pub degraded: bool,
+    /// Sessions currently quarantined by the scheduler.
+    pub quarantined: usize,
+    /// A post-batch budget enforcement failed and is being retried at
+    /// tick boundaries.
+    pub deferred_budget: bool,
+    /// Cumulative count of failed snapshot-store operations.
+    pub snapshot_failures: u64,
+    /// Snapshot files whose unlink failed; retried at the next
+    /// eviction/close instead of being silently leaked.
+    pub orphaned_snapshots: usize,
+}
+
+// --- fault injection ---------------------------------------------------
+
+/// Which store operation a [`FaultRule`] matches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Write,
+    Read,
+    Remove,
+}
+
+/// What an armed rule does to the matched operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail with a transient-classified error; no filesystem effect.
+    Transient,
+    /// Fail with a persistent-classified error; no filesystem effect.
+    Persistent,
+    /// Fail persistently with an ENOSPC-shaped message.
+    Enospc,
+    /// Write ops only: leave half the payload at the *staging* path and
+    /// report a crash — the final path is never touched, which is
+    /// exactly the guarantee `atomic_write` makes about real crashes.
+    /// Degrades to [`Fault::Persistent`] on non-write ops.
+    TornWrite,
+    /// Write ops only: flip one byte mid-payload and report *success* —
+    /// the damage only surfaces later as a CRC failure at fault-in. The
+    /// pristine bytes are kept for [`FaultHandle::repair`]. Degrades to
+    /// [`Fault::Persistent`] on non-write ops.
+    CorruptWrite,
+}
+
+/// One scripted fault: fires on matching operations numbered
+/// `skip+1 ..= skip+fires` (counted per rule, over ops that match `op`
+/// and `path_contains`). Purely op-sequence based — reproducible.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// Restrict to one operation kind; `None` matches all.
+    pub op: Option<StoreOp>,
+    /// Restrict to paths whose string form contains this needle.
+    pub path_contains: Option<String>,
+    /// Matching ops to let through before firing.
+    pub skip: usize,
+    /// How many subsequent matching ops to fault (`usize::MAX` = forever).
+    pub fires: usize,
+    pub fault: Fault,
+}
+
+impl FaultRule {
+    /// Rule matching every op of `op` from the first occurrence on.
+    pub fn on(op: StoreOp, fault: Fault) -> Self {
+        Self { op: Some(op), path_contains: None, skip: 0, fires: usize::MAX, fault }
+    }
+
+    pub fn skip(mut self, skip: usize) -> Self {
+        self.skip = skip;
+        self
+    }
+
+    pub fn fires(mut self, fires: usize) -> Self {
+        self.fires = fires;
+        self
+    }
+
+    pub fn on_path(mut self, needle: impl Into<String>) -> Self {
+        self.path_contains = Some(needle.into());
+        self
+    }
+}
+
+/// Seeded background fault stream: on store op `i`, a
+/// `Pcg64::seed_stream(seed, i)` draw faults the op with probability
+/// `1/fault_every`. Keyed by op index, so a schedule replays exactly.
+/// `transient_only` confines the stream to retryable errors (no
+/// quarantine, no degraded mode) — what the recovery bench wants.
+#[derive(Debug, Clone, Copy)]
+pub struct SeededFaults {
+    pub seed: u64,
+    pub fault_every: u64,
+    pub transient_only: bool,
+}
+
+/// A fault that actually fired, for schedule-determinism assertions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FiredFault {
+    pub op_index: u64,
+    pub op: StoreOp,
+    pub path: PathBuf,
+    pub fault: Fault,
+}
+
+#[derive(Default)]
+struct FaultState {
+    /// (rule, how many matching ops seen so far).
+    rules: Vec<(FaultRule, usize)>,
+    seeded: Option<SeededFaults>,
+    op_index: u64,
+    fired: Vec<FiredFault>,
+    /// Pristine payloads of `CorruptWrite` victims, for `repair`.
+    pristine: BTreeMap<PathBuf, Vec<u8>>,
+}
+
+/// Deterministic scripted fault injector around any inner store.
+///
+/// Keep a [`FaultHandle`] (from [`FaultyStore::handle`]) before boxing
+/// the store into the pool: it heals the schedule, repairs corrupted
+/// files and exposes the fired-fault log mid-run.
+pub struct FaultyStore {
+    inner: Box<dyn SnapshotStore>,
+    state: Arc<Mutex<FaultState>>,
+}
+
+/// Control handle for a [`FaultyStore`] already owned by a pool.
+#[derive(Clone)]
+pub struct FaultHandle {
+    state: Arc<Mutex<FaultState>>,
+}
+
+fn lock(state: &Mutex<FaultState>) -> MutexGuard<'_, FaultState> {
+    state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl FaultyStore {
+    pub fn new(inner: Box<dyn SnapshotStore>, rules: Vec<FaultRule>) -> Self {
+        Self {
+            inner,
+            state: Arc::new(Mutex::new(FaultState {
+                rules: rules.into_iter().map(|r| (r, 0)).collect(),
+                ..FaultState::default()
+            })),
+        }
+    }
+
+    pub fn seeded(
+        inner: Box<dyn SnapshotStore>,
+        seeded: SeededFaults,
+        rules: Vec<FaultRule>,
+    ) -> Self {
+        let store = Self::new(inner, rules);
+        lock(&store.state).seeded = Some(seeded);
+        store
+    }
+
+    pub fn handle(&self) -> FaultHandle {
+        FaultHandle { state: Arc::clone(&self.state) }
+    }
+
+    /// Consume one op index and decide whether (and how) to fault it.
+    fn decide(&self, op: StoreOp, path: &Path) -> Option<Fault> {
+        let mut st = lock(&self.state);
+        let op_index = st.op_index;
+        st.op_index += 1;
+        let mut chosen = None;
+        for (rule, matched) in &mut st.rules {
+            let op_ok = rule.op.is_none_or(|o| o == op);
+            let path_ok = rule
+                .path_contains
+                .as_deref()
+                .is_none_or(|needle| path.to_string_lossy().contains(needle));
+            if !(op_ok && path_ok) {
+                continue;
+            }
+            *matched += 1;
+            let in_window = *matched > rule.skip
+                && *matched <= rule.skip.saturating_add(rule.fires);
+            if chosen.is_none() && in_window {
+                chosen = Some(rule.fault);
+            }
+        }
+        if chosen.is_none() {
+            if let Some(sf) = st.seeded {
+                let mut rng = Pcg64::seed_stream(sf.seed, op_index);
+                if sf.fault_every > 0 && rng.next_range(sf.fault_every) == 0 {
+                    chosen = Some(if sf.transient_only {
+                        Fault::Transient
+                    } else {
+                        match rng.next_range(3) {
+                            0 => Fault::Transient,
+                            1 => Fault::Persistent,
+                            _ if op == StoreOp::Write => Fault::TornWrite,
+                            _ => Fault::Transient,
+                        }
+                    });
+                }
+            }
+        }
+        if let Some(fault) = chosen {
+            st.fired.push(FiredFault {
+                op_index,
+                op,
+                path: path.to_path_buf(),
+                fault,
+            });
+        }
+        chosen
+    }
+}
+
+impl FaultHandle {
+    /// Stop injecting: clears every rule and the seeded stream. Already-
+    /// corrupted files stay corrupted — see [`FaultHandle::repair`].
+    pub fn heal(&self) {
+        let mut st = lock(&self.state);
+        st.rules.clear();
+        st.seeded = None;
+    }
+
+    /// Replace the scripted rules (per-rule match counters reset). Lets
+    /// a test build its pool and sessions over a clean store, then arm
+    /// the fault schedule for exactly the ops it wants to reason about.
+    pub fn script(&self, rules: Vec<FaultRule>) {
+        lock(&self.state).rules = rules.into_iter().map(|r| (r, 0)).collect();
+    }
+
+    /// Install (or clear) the seeded background fault stream. The op
+    /// index keeps counting across the swap, so a re-armed stream still
+    /// keys its draws off absolute op positions.
+    pub fn set_seeded(&self, seeded: Option<SeededFaults>) {
+        lock(&self.state).seeded = seeded;
+    }
+
+    /// Undo `CorruptWrite` damage by rewriting the pristine payloads
+    /// (direct filesystem writes — the operator fixing the media).
+    pub fn repair(&self) {
+        let pristine = std::mem::take(&mut lock(&self.state).pristine);
+        for (path, bytes) in pristine {
+            let _ = checkpoint::atomic_write(&path, &bytes);
+        }
+    }
+
+    /// Total store ops observed so far.
+    pub fn ops(&self) -> u64 {
+        lock(&self.state).op_index
+    }
+
+    /// Log of every fault that fired, in op order.
+    pub fn fired(&self) -> Vec<FiredFault> {
+        lock(&self.state).fired.clone()
+    }
+}
+
+impl SnapshotStore for FaultyStore {
+    fn write(&self, path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        match self.decide(StoreOp::Write, path) {
+            None => self.inner.write(path, bytes),
+            Some(Fault::Transient) => Err(StoreError::transient(format!(
+                "injected transient fault writing {}",
+                path.display()
+            ))),
+            Some(Fault::Persistent) => Err(StoreError::persistent(format!(
+                "injected write fault on {}",
+                path.display()
+            ))),
+            Some(Fault::Enospc) => Err(StoreError::persistent(format!(
+                "injected ENOSPC: no space left on device writing {}",
+                path.display()
+            ))),
+            Some(Fault::TornWrite) => {
+                let staging = checkpoint::staging_path(path);
+                let _ = std::fs::write(&staging, &bytes[..bytes.len() / 2]);
+                Err(StoreError::persistent(format!(
+                    "injected crash mid-write: torn staging file at {}",
+                    staging.display()
+                )))
+            }
+            Some(Fault::CorruptWrite) => {
+                lock(&self.state)
+                    .pristine
+                    .insert(path.to_path_buf(), bytes.to_vec());
+                let mut damaged = bytes.to_vec();
+                if let Some(b) = damaged.get_mut(bytes.len() / 2) {
+                    *b ^= 0x01;
+                }
+                self.inner.write(path, &damaged)
+            }
+        }
+    }
+
+    fn read(&self, path: &Path) -> Result<Vec<u8>, StoreError> {
+        match self.decide(StoreOp::Read, path) {
+            None => self.inner.read(path),
+            Some(Fault::Transient) => Err(StoreError::transient(format!(
+                "injected transient fault reading {}",
+                path.display()
+            ))),
+            Some(_) => Err(StoreError::persistent(format!(
+                "injected read fault on {}",
+                path.display()
+            ))),
+        }
+    }
+
+    fn remove(&self, path: &Path) -> Result<(), StoreError> {
+        match self.decide(StoreOp::Remove, path) {
+            None => self.inner.remove(path),
+            Some(Fault::Transient) => Err(StoreError::transient(format!(
+                "injected transient fault removing {}",
+                path.display()
+            ))),
+            Some(_) => Err(StoreError::persistent(format!(
+                "injected unlink fault on {}",
+                path.display()
+            ))),
+        }
+    }
+}

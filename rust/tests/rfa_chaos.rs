@@ -1,0 +1,613 @@
+//! Chaos harness for `rfa::serve`: scripted and seeded fault schedules
+//! against the full serving stack, swept over worker thread counts and
+//! precisions, pinning the three robustness properties of the failure
+//! semantics contract (see the `rfa/serve` module docs):
+//!
+//! 1. **No request is ever lost.** Every submitted request ends as a
+//!    completed response or a typed `FailedStep` — under every
+//!    schedule, on every path.
+//! 2. **Quarantine is schedule-deterministic.** For a fixed fault
+//!    schedule, the quarantined-session set, the abandoned-request
+//!    count and the fired-fault log are identical across worker thread
+//!    counts.
+//! 3. **Post-heal recovery is bitwise.** After healing the store,
+//!    repairing corrupt-write damage, unquarantining and resubmitting
+//!    the abandoned requests in seq order, each session's reassembled
+//!    output stream is bitwise identical to a never-faulted serial
+//!    reference.
+//!
+//! Alongside the sweep, targeted tests pin the degraded-mode admission
+//! control, orphaned-unlink accounting, quarantine submit gating, and
+//! the never-a-torn-final-file guarantee of crash-safe snapshot writes.
+
+use std::path::PathBuf;
+
+use darkformer::checkpoint::{staging_path, Checkpoint};
+use darkformer::linalg::Matrix;
+use darkformer::rfa::engine::{
+    draw_head_banks, multi_head_causal_attention,
+    multi_head_causal_attention32, EngineConfig, Head,
+};
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::serve::{
+    BatchScheduler, DrainOutcome, Fault, FaultHandle, FaultRule,
+    FaultyStore, FsStore, Precision, RetryPolicy, SeededFaults, ServeConfig,
+    SessionPool, StepRequest, StepResponse, StoreOp,
+};
+use darkformer::rfa::PrfEstimator;
+use darkformer::rng::{GaussianExt, Pcg64};
+
+const D: usize = 4;
+const M: usize = 16;
+const N_HEADS: usize = 2;
+const DV: usize = 3;
+const CHUNK: usize = 8;
+const N_REQUESTS: usize = 4;
+const L: usize = CHUNK * N_REQUESTS;
+
+/// Session seeds for the three simulated users of every chaos run.
+const SESSION_SEEDS: [u64; 3] = [101, 202, 303];
+
+fn iso_est() -> PrfEstimator {
+    PrfEstimator::new(D, M, Sampling::Isotropic)
+}
+
+/// Fresh per-test snapshot directory (tests run concurrently in one
+/// process; stale files from an earlier run must not leak in).
+fn snapshot_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rfa_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg(
+    precision: Precision,
+    threads: usize,
+    memory_budget: usize,
+    dir: PathBuf,
+) -> ServeConfig {
+    ServeConfig {
+        est: iso_est(),
+        n_heads: N_HEADS,
+        dv: DV,
+        precision,
+        chunk: CHUNK,
+        threads,
+        memory_budget,
+        snapshot_dir: dir,
+        resample: None,
+    }
+}
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+/// The full L-position stream for one simulated user, one entry per head.
+fn stream_inputs(input_seed: u64) -> Vec<Head> {
+    let mut rng = Pcg64::seed(input_seed);
+    (0..N_HEADS)
+        .map(|_| Head {
+            q: rows(L, D, 0.3, &mut rng),
+            k: rows(L, D, 0.3, &mut rng),
+            v: Matrix::from_rows(&rows(L, DV, 1.0, &mut rng)),
+        })
+        .collect()
+}
+
+/// Rows `[b, e)` of every head — one streaming request segment.
+fn slice_heads(heads: &[Head], b: usize, e: usize) -> Vec<Head> {
+    heads
+        .iter()
+        .map(|h| Head {
+            q: h.q[b..e].to_vec(),
+            k: h.k[b..e].to_vec(),
+            v: h.v.row_block(b, e),
+        })
+        .collect()
+}
+
+/// Serial single-tenant reference: same bank seeding as the pool, one
+/// monolithic multi-head forward over the whole stream, widened to f64
+/// (widening is exact, so f64 equality is bitwise equality).
+fn serial_reference(
+    bank_seed: u64,
+    heads: &[Head],
+    precision: Precision,
+) -> Vec<Matrix> {
+    let banks =
+        draw_head_banks(&iso_est(), N_HEADS, &mut Pcg64::seed(bank_seed));
+    let cfg = EngineConfig { chunk: CHUNK, threads: 1 };
+    match precision {
+        Precision::F64 => multi_head_causal_attention(&banks, heads, &cfg),
+        Precision::F32 => {
+            multi_head_causal_attention32(&banks, heads, &cfg)
+                .into_iter()
+                .map(|m| m.to_f64())
+                .collect()
+        }
+    }
+}
+
+/// Reassemble drained responses into per-session, per-head output
+/// matrices in stream order, asserting in-order application.
+fn reassemble_streams(
+    mut responses: Vec<StepResponse>,
+    ids: &[u64],
+) -> Vec<Vec<Matrix>> {
+    responses.sort_by_key(|r| r.seq);
+    let mut per_session: Vec<Vec<Vec<f64>>> =
+        vec![vec![Vec::new(); N_HEADS]; ids.len()];
+    let mut next_pos: Vec<u64> = vec![0; ids.len()];
+    for resp in &responses {
+        let s = ids.iter().position(|id| *id == resp.session_id).unwrap();
+        assert_eq!(
+            resp.start_position, next_pos[s],
+            "session {} saw out-of-order application",
+            resp.session_id
+        );
+        next_pos[s] += resp.outputs[0].rows() as u64;
+        for (h, out) in resp.outputs.iter().enumerate() {
+            per_session[s][h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    per_session
+        .into_iter()
+        .map(|heads| {
+            heads
+                .into_iter()
+                .map(|data| Matrix::from_vec(L, DV, data))
+                .collect()
+        })
+        .collect()
+}
+
+/// Resident bytes of one fresh session at `precision` — the probe every
+/// chaos pool sizes its one-session budget with (a tight budget keeps
+/// eviction/fault-in churn, and therefore store traffic, constant).
+fn one_session_bytes(precision: Precision, tag: &str) -> usize {
+    let dir = snapshot_dir(tag);
+    let mut pool = SessionPool::new(cfg(precision, 1, 0, dir));
+    let id = pool.create_session(1).unwrap();
+    pool.session_mut(id).unwrap().state_bytes()
+}
+
+/// Tight retry windows so chaos runs quarantine (and terminate) fast.
+fn tight_policy() -> RetryPolicy {
+    RetryPolicy {
+        quarantine_persistent: 2,
+        quarantine_any: 6,
+        backoff_base: 1,
+        backoff_cap: 2,
+    }
+}
+
+/// The fired-fault log with pool-unique path prefixes stripped (each run
+/// uses its own pool tag and snapshot dir), leaving only the
+/// schedule-relevant identity: op index, op, fault kind, which session.
+fn normalize_fired(handle: &FaultHandle) -> Vec<(u64, StoreOp, Fault, String)> {
+    handle
+        .fired()
+        .iter()
+        .map(|f| {
+            let name = f.path.file_name().unwrap().to_string_lossy();
+            let target = name
+                .split_once("-session-")
+                .map(|(_, s)| format!("session-{s}"))
+                .unwrap_or_else(|| "probe".to_string());
+            (f.op_index, f.op, f.fault, target)
+        })
+        .collect()
+}
+
+/// Everything one faulted run produced, for cross-run determinism and
+/// bitwise-recovery assertions.
+struct ChaosRun {
+    /// Per-session, per-head output rows, reassembled post-heal.
+    streams: Vec<Vec<Matrix>>,
+    /// Sessions quarantined during the faulted drain, ascending.
+    quarantined: Vec<u64>,
+    /// Normalized fired-fault log (see [`normalize_fired`]).
+    fired: Vec<(u64, StoreOp, Fault, String)>,
+    /// Requests abandoned to quarantine during the faulted drain.
+    abandoned: usize,
+}
+
+/// Drive the full three-session workload through a faulty store, then
+/// heal, repair, unquarantine, resubmit the abandoned requests in seq
+/// order and drain to completion. Asserts the no-loss property and the
+/// no-torn-snapshot property inline; returns the rest for the caller.
+fn run_chaos(
+    precision: Precision,
+    threads: usize,
+    rules: Vec<FaultRule>,
+    seeded: Option<SeededFaults>,
+    tag: &str,
+) -> ChaosRun {
+    let budget = one_session_bytes(precision, &format!("{tag}_probe"));
+    let dir = snapshot_dir(tag);
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_store(
+        cfg(precision, threads, budget, dir.clone()),
+        Box::new(store),
+    );
+    let ids: Vec<u64> = SESSION_SEEDS
+        .iter()
+        .map(|s| pool.create_session(*s).unwrap())
+        .collect();
+    // Sessions exist (the budget already evicted two); only now arm the
+    // schedule, so the scripted op counts start at the workload's start.
+    handle.script(rules);
+    handle.set_seeded(seeded);
+    let mut sched = BatchScheduler::with_policy(pool, tight_policy());
+    let streams: Vec<Vec<Head>> =
+        (0..ids.len() as u64).map(|s| stream_inputs(7000 + s)).collect();
+    let mut submitted = 0usize;
+    for r in 0..N_REQUESTS {
+        for (id, stream) in ids.iter().zip(&streams) {
+            let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+            sched.submit(StepRequest { session_id: *id, heads }).unwrap();
+            submitted += 1;
+        }
+    }
+    let DrainOutcome { mut responses, mut failures, error } =
+        sched.run_until_idle();
+    assert!(
+        error.is_none(),
+        "schedule {tag}: drain must quarantine, not stall: {error:?}"
+    );
+    // Property 1: nothing lost — every submitted request either
+    // completed or surfaced as a typed failure.
+    assert_eq!(
+        responses.len() + failures.len(),
+        submitted,
+        "schedule {tag} lost requests"
+    );
+    let quarantined = sched.quarantined_sessions();
+    assert_eq!(
+        quarantined.is_empty(),
+        failures.is_empty(),
+        "schedule {tag}: failed steps and quarantine appear together"
+    );
+    let abandoned = failures.len();
+
+    // Heal the store, repair corrupt-write damage, release quarantined
+    // sessions and replay their abandoned requests in seq order.
+    handle.heal();
+    handle.set_seeded(None);
+    handle.repair();
+    for &id in &quarantined {
+        sched.unquarantine(id).unwrap();
+    }
+    failures.sort_by_key(|f| f.seq);
+    for f in failures {
+        sched.submit(f.request).unwrap();
+    }
+    responses.extend(sched.run_until_idle().into_result().unwrap());
+    assert_eq!(responses.len(), submitted, "schedule {tag}: replay lost work");
+    assert!(sched.quarantined_sessions().is_empty());
+
+    // Atomic-write guarantee: whatever the schedule injected, no final
+    // snapshot path ever holds a torn file — every *.dkft parses and
+    // passes its CRC (torn-write artifacts only ever live at *.tmp).
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|e| e == "dkft") {
+            Checkpoint::load(&path).unwrap_or_else(|e| {
+                panic!("torn snapshot at {}: {e:#}", path.display())
+            });
+        }
+    }
+
+    ChaosRun {
+        streams: reassemble_streams(responses, &ids),
+        quarantined,
+        fired: normalize_fired(&handle),
+        abandoned,
+    }
+}
+
+/// The scripted schedules the sweep runs: transient blips, a
+/// path-targeted persistent outage, a write outage (ENOSPC then a torn
+/// crash), a silent corruption, and a seeded mixed background stream.
+fn schedules() -> Vec<(&'static str, Vec<FaultRule>, Option<SeededFaults>)> {
+    vec![
+        (
+            "transient_reads",
+            vec![FaultRule::on(StoreOp::Read, Fault::Transient).fires(5)],
+            None,
+        ),
+        (
+            "persistent_read_s1",
+            vec![FaultRule::on(StoreOp::Read, Fault::Persistent)
+                .on_path("session-1.dkft")],
+            None,
+        ),
+        (
+            "write_outage",
+            vec![
+                FaultRule::on(StoreOp::Write, Fault::Enospc).fires(3),
+                FaultRule::on(StoreOp::Write, Fault::TornWrite)
+                    .skip(3)
+                    .fires(1),
+            ],
+            None,
+        ),
+        (
+            "corrupt_first_evict",
+            vec![FaultRule::on(StoreOp::Write, Fault::CorruptWrite).fires(1)],
+            None,
+        ),
+        (
+            "seeded_mixed",
+            Vec::new(),
+            Some(SeededFaults {
+                seed: 0xC0FFEE,
+                fault_every: 3,
+                transient_only: false,
+            }),
+        ),
+    ]
+}
+
+/// The sweep: every schedule × both precisions × worker threads {1, 4}.
+/// Pins properties 1–3 of the module contract in one pass.
+#[test]
+fn chaos_sweep_no_loss_deterministic_and_bitwise_after_heal() {
+    for &precision in &[Precision::F64, Precision::F32] {
+        let ptag = match precision {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        };
+        let expected: Vec<Vec<Matrix>> = SESSION_SEEDS
+            .iter()
+            .enumerate()
+            .map(|(s, seed)| {
+                serial_reference(
+                    *seed,
+                    &stream_inputs(7000 + s as u64),
+                    precision,
+                )
+            })
+            .collect();
+        for (name, rules, seeded) in schedules() {
+            let runs: Vec<ChaosRun> = [1usize, 4]
+                .iter()
+                .map(|&threads| {
+                    run_chaos(
+                        precision,
+                        threads,
+                        rules.clone(),
+                        seeded,
+                        &format!("{name}_{ptag}_t{threads}"),
+                    )
+                })
+                .collect();
+            // Property 2: for a fixed schedule, the quarantine set, the
+            // abandoned count and the fired-fault log are pure functions
+            // of the schedule — the worker count must not show through.
+            assert_eq!(
+                runs[0].quarantined, runs[1].quarantined,
+                "schedule {name}/{ptag}: quarantine set depends on threads"
+            );
+            assert_eq!(
+                runs[0].abandoned, runs[1].abandoned,
+                "schedule {name}/{ptag}: abandoned count depends on threads"
+            );
+            assert_eq!(
+                runs[0].fired, runs[1].fired,
+                "schedule {name}/{ptag}: fired-fault log depends on threads"
+            );
+            // Property 3: post-heal, every session's reassembled stream
+            // is bitwise the never-faulted serial reference.
+            for (t, run) in runs.iter().enumerate() {
+                for (s, heads) in run.streams.iter().enumerate() {
+                    for (h, out) in heads.iter().enumerate() {
+                        assert_eq!(
+                            out.data(),
+                            expected[s][h].data(),
+                            "schedule {name}/{ptag} threads run {t}: \
+                             session {s} head {h} diverged after heal"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A quarantined session rejects new submits, surfaces its backlog as
+/// typed failures, and replays in order after `unquarantine`.
+#[test]
+fn quarantine_blocks_submits_until_unquarantined() {
+    let budget = one_session_bytes(Precision::F64, "qsubmit_probe");
+    let dir = snapshot_dir("qsubmit");
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_store(
+        cfg(Precision::F64, 1, budget, dir),
+        Box::new(store),
+    );
+    let s0 = pool.create_session(11).unwrap();
+    let s1 = pool.create_session(22).unwrap(); // evicts s0
+    handle.script(vec![FaultRule::on(StoreOp::Read, Fault::Persistent)
+        .on_path("session-0.dkft")]);
+    let policy =
+        RetryPolicy { quarantine_persistent: 1, ..RetryPolicy::default() };
+    let mut sched = BatchScheduler::with_policy(pool, policy);
+    let streams = [stream_inputs(8100), stream_inputs(8200)];
+    for (id, stream) in [s0, s1].iter().zip(&streams) {
+        for r in 0..2 {
+            let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+            sched.submit(StepRequest { session_id: *id, heads }).unwrap();
+        }
+    }
+    let outcome = sched.run_until_idle();
+    assert!(outcome.error.is_none());
+    assert!(!outcome.is_clean());
+    assert_eq!(sched.quarantined_sessions(), vec![s0]);
+    assert!(sched.is_quarantined(s0));
+    // Isolation: every healthy request still completed.
+    assert_eq!(outcome.responses.len(), 2);
+    assert!(outcome.responses.iter().all(|r| r.session_id == s1));
+    assert_eq!(outcome.failures.len(), 2);
+    assert!(outcome.failures.iter().all(|f| f.session_id == s0));
+    assert!(
+        outcome.failures[0].error.contains("quarantined"),
+        "got: {}",
+        outcome.failures[0].error
+    );
+    // Submits to a quarantined session are rejected with the story.
+    let heads = slice_heads(&streams[0], 0, CHUNK);
+    let err =
+        sched.submit(StepRequest { session_id: s0, heads }).unwrap_err();
+    assert!(format!("{err:#}").contains("quarantined"), "got {err:#}");
+    assert_eq!(sched.health().quarantined, 1);
+    // Unquarantining a healthy session is an error, not a no-op.
+    assert!(sched.unquarantine(s1).is_err());
+    // Heal + unquarantine: the abandoned requests replay in seq order,
+    // resuming the stream exactly where it never started.
+    handle.heal();
+    sched.unquarantine(s0).unwrap();
+    assert_eq!(sched.health().quarantined, 0);
+    let mut failures = outcome.failures;
+    failures.sort_by_key(|f| f.seq);
+    for f in failures {
+        sched.submit(f.request).unwrap();
+    }
+    let mut replay = sched.run_until_idle().into_result().unwrap();
+    assert_eq!(replay.len(), 2);
+    assert!(replay.iter().all(|r| r.session_id == s0));
+    replay.sort_by_key(|r| r.seq);
+    assert_eq!(replay[0].start_position, 0);
+    assert_eq!(replay[1].start_position, CHUNK as u64);
+}
+
+/// Degraded mode: a failed eviction write rolls back the admit and trips
+/// degraded mode; while degraded and at budget, admission control
+/// rejects without touching the store; a heal probe clears it.
+#[test]
+fn degraded_pool_applies_admission_control_and_heals() {
+    let budget = one_session_bytes(Precision::F64, "admission_probe");
+    let dir = snapshot_dir("admission");
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_store(
+        cfg(Precision::F64, 1, budget, dir),
+        Box::new(store),
+    );
+    let s0 = pool.create_session(1).unwrap();
+    handle.script(vec![FaultRule::on(StoreOp::Write, Fault::Enospc)]);
+    // Admitting a second session needs an eviction write, which fails:
+    // the admit rolls back whole and the pool enters degraded mode.
+    let err = pool.create_session(2).unwrap_err();
+    assert!(format!("{err:#}").contains("evicting session"), "got {err:#}");
+    assert!(pool.is_degraded());
+    assert_eq!(pool.resident_count(), 1);
+    // While degraded at budget, admission is rejected outright — no
+    // further doomed writes are even attempted.
+    let ops_before = handle.ops();
+    let err = pool.create_session(3).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("admission control"),
+        "got {err:#}"
+    );
+    assert_eq!(
+        handle.ops(),
+        ops_before,
+        "a degraded admit must not touch the store"
+    );
+    let health = pool.health();
+    assert!(health.degraded);
+    assert!(health.snapshot_failures >= 1);
+    assert_eq!(health.orphaned_snapshots, 0);
+    // Residents keep serving while degraded.
+    pool.session_mut(s0).unwrap();
+    // Heal the media; the probe write in try_heal clears degraded mode.
+    handle.heal();
+    pool.try_heal().unwrap();
+    assert!(!pool.is_degraded());
+    // Admission works again, and the eviction write now succeeds.
+    let s2 = pool.create_session(4).unwrap();
+    assert!(pool.contains(s0) && pool.contains(s2));
+    assert_eq!(pool.resident_count(), 1);
+    assert_eq!(pool.evicted_count(), 1);
+}
+
+/// A failed snapshot unlink is recorded as an orphan (visible in the
+/// health report) and drained by the next heal — never silently leaked.
+#[test]
+fn orphaned_unlinks_are_retried_and_reported() {
+    let budget = one_session_bytes(Precision::F64, "orphan_probe");
+    let dir = snapshot_dir("orphan");
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_store(
+        cfg(Precision::F64, 1, budget, dir),
+        Box::new(store),
+    );
+    let s0 = pool.create_session(1).unwrap();
+    let _s1 = pool.create_session(2).unwrap(); // evicts s0
+    let snap0 = pool.snapshot_path(s0);
+    assert!(snap0.exists());
+    // Every unlink fails: faulting s0 back in restores fine but cannot
+    // consume the snapshot file — it must be recorded, not leaked.
+    handle.script(vec![FaultRule::on(StoreOp::Remove, Fault::Persistent)]);
+    pool.session_mut(s0).unwrap();
+    assert!(snap0.exists(), "the injected unlink failure left the file");
+    assert_eq!(pool.health().orphaned_snapshots, 1);
+    assert!(pool.health().snapshot_failures >= 1);
+    // Heal; the next heal pass drains the orphan list.
+    handle.heal();
+    pool.try_heal().unwrap();
+    assert_eq!(pool.health().orphaned_snapshots, 0);
+    assert!(!snap0.exists(), "a healed orphan must finally be unlinked");
+}
+
+/// The injected mid-write crash leaves only a staging file: the final
+/// path is never torn, the session survives resident, and a later
+/// healthy write replaces the staging leftovers atomically.
+#[test]
+fn torn_write_crash_keeps_the_final_path_clean() {
+    let budget = one_session_bytes(Precision::F64, "torn_probe");
+    let dir = snapshot_dir("torn");
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_store(
+        cfg(Precision::F64, 1, budget, dir),
+        Box::new(store),
+    );
+    let s0 = pool.create_session(1).unwrap();
+    let _s1 = pool.create_session(2).unwrap(); // evicts s0
+    let snap0 = pool.snapshot_path(s0);
+    // Fault s0 back in (consumes its snapshot, evicts s1 for budget).
+    pool.session_mut(s0).unwrap();
+    assert!(!snap0.exists());
+    handle
+        .script(vec![FaultRule::on(StoreOp::Write, Fault::TornWrite).fires(1)]);
+    let err = pool.evict(s0).unwrap_err();
+    assert!(format!("{err:#}").contains("torn staging"), "got {err:#}");
+    let staging = staging_path(&snap0);
+    assert!(staging.exists(), "the injected crash leaves a staging file");
+    assert!(!snap0.exists(), "a torn write must never touch the final path");
+    assert!(pool.is_degraded());
+    assert_eq!(
+        pool.resident_count(),
+        1,
+        "a failed evict must keep the session resident"
+    );
+    // The rule is exhausted; a heal pass probes the store and recovers.
+    pool.try_heal().unwrap();
+    assert!(!pool.is_degraded());
+    pool.evict(s0).unwrap();
+    assert!(snap0.exists());
+    assert!(!staging.exists(), "a completed write consumes the staging file");
+    Checkpoint::load(&snap0).unwrap();
+    // And the snapshot round-trips: the session faults back in.
+    pool.session_mut(s0).unwrap();
+}
