@@ -24,10 +24,15 @@ lint: fmt clippy
 
 # Fault-injection suite for rfa::serve (rust/tests/rfa_chaos.rs), run at
 # both ends of the SIMD dispatch — chaos schedules, quarantine membership
-# and post-heal bitwise recovery must be ISA-independent.
+# and post-heal bitwise recovery must be ISA-independent — and again at
+# full observability verbosity: max-verbosity telemetry must not change
+# one bit of any chaos outcome (the rfa::obs write-only rule), and the
+# obs suite itself (rust/tests/rfa_obs.rs) pins that contract directly.
 chaos:
 	$(CARGO) test -q --test rfa_chaos
 	RFA_SIMD=scalar $(CARGO) test -q --test rfa_chaos
+	RFA_OBS=full $(CARGO) test -q --test rfa_chaos
+	$(CARGO) test -q --test rfa_obs
 
 fmt:
 	$(CARGO) fmt --check

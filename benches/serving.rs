@@ -18,15 +18,19 @@
 //! drifted half of the stream, divided by the online-resampling
 //! variance — > 1 means adapting the bank beats freezing it) with
 //! `online_resample_overhead_f64` (wall-clock cost of the resampling
-//! machinery on the same workload), and
+//! machinery on the same workload),
 //! `simd_vs_scalar_serve_s8_{f64,f32}` (one scheduling round under the
 //! forced-scalar fallback vs the dispatched SIMD kernels, with the
-//! effective ISA recorded as `active_isa`).
+//! effective ISA recorded as `active_isa`), and the observability
+//! readout: `tick_latency_p50_ms`/`tick_latency_p99_ms` (from the obs
+//! registry's tick histogram over a resampling 8-session round) with
+//! `ess_mean` (mean per-head importance-weight effective sample size).
 //!
 //! Run: `cargo bench --bench serving`.
 
 use darkformer::bench::BenchSuite;
 use darkformer::linalg::{simd, Matrix};
+use darkformer::obs::{ObsConfig, ObsLevel};
 use darkformer::rfa::engine::Head;
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{
@@ -564,6 +568,54 @@ fn main() {
         scalar32 / simd32
     );
     suite.metric_str("active_isa", simd::active_isa());
+
+    // Observability readout: an 8-session resampling workload against a
+    // pinned Basic-level registry (histograms + gauges live, no ring).
+    // Tick-latency quantiles come from the obs histogram itself — the
+    // same numbers a Prometheus scrape would see — and ess_mean is the
+    // kernel-quality headline: the mean per-head importance-weight
+    // effective sample size after the banks have adapted to the keys.
+    let (tick_p50, tick_p99, ess_mean) = {
+        let mut cfg = serve_config(Precision::F32, 0, 0);
+        cfg.resample = Some(ResampleConfig::every(64));
+        let mut pool = SessionPool::with_obs(
+            cfg,
+            Box::new(FsStore),
+            ObsConfig::at(ObsLevel::Basic),
+        );
+        let ids: Vec<u64> = (0..8)
+            .map(|s| pool.create_session(100 + s).unwrap())
+            .collect();
+        let inputs = session_inputs(8);
+        let mut sched = BatchScheduler::new(pool);
+        for _ in 0..4 {
+            for (id, heads) in ids.iter().zip(&inputs) {
+                sched
+                    .submit(StepRequest {
+                        session_id: *id,
+                        heads: heads.clone(),
+                    })
+                    .unwrap();
+            }
+            std::hint::black_box(
+                sched.run_until_idle().into_result().unwrap(),
+            );
+        }
+        let obs = sched.obs();
+        (
+            obs.tick_ms.quantile(0.5),
+            obs.tick_ms.quantile(0.99),
+            obs.ess_mean(),
+        )
+    };
+    suite.metric("tick_latency_p50_ms", tick_p50);
+    suite.metric("tick_latency_p99_ms", tick_p99);
+    suite.metric("ess_mean", ess_mean);
+    println!(
+        "\nobs readout (8 sessions, resample K=64): tick p50 \
+         {tick_p50:.3} ms, p99 {tick_p99:.3} ms, ess_mean {ess_mean:.2} \
+         of m={M}"
+    );
 
     if let Err(e) = suite.write() {
         eprintln!("could not write bench json: {e}");

@@ -1,7 +1,10 @@
 //! Streaming serving demo: N simulated user streams through the
 //! `rfa::serve` stack — session pool with a deliberately small memory
 //! budget (so LRU eviction-to-snapshot and fault-in actually exercise),
-//! session-batched scheduler, resumable state.
+//! session-batched scheduler, online bank resampling, resumable state —
+//! ending with the full observability surface: a Prometheus metric dump
+//! (tick-latency histogram, per-head kernel-quality gauges) and the
+//! structured event log.
 //!
 //! This is the serving entry point of the pure-Rust stack: the chunked
 //! engine demo (`examples/chunked_attention.rs`) shows the raw forward;
@@ -12,9 +15,11 @@
 use std::time::Instant;
 
 use darkformer::linalg::Matrix;
+use darkformer::obs::ObsConfig;
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::serve::{
-    BatchScheduler, Precision, ServeConfig, SessionPool, StepRequest,
+    BatchScheduler, FsStore, Precision, ResampleConfig, ServeConfig,
+    SessionPool, StepRequest,
 };
 use darkformer::rfa::PrfEstimator;
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -30,6 +35,9 @@ fn main() {
     let (n_sessions, rounds, seg) = (6usize, 8usize, 128usize);
     let snapshot_dir = std::env::temp_dir()
         .join(format!("serve_demo_{}", std::process::id()));
+    // Epoch length 64 < seg: every segment crosses resample boundaries,
+    // so the kernel-quality telemetry has real epochs to report.
+    let resample = Some(ResampleConfig::every(64));
 
     // Budget ≈ 2 sessions: with 6 streams the pool must keep evicting
     // and faulting back in — outputs are unaffected (snapshots are
@@ -44,9 +52,10 @@ fn main() {
             threads: 0,
             memory_budget: 0,
             snapshot_dir: snapshot_dir.clone(),
-            resample: None,
+            resample: resample.clone(),
         };
-        let mut pool = SessionPool::new(cfg);
+        let mut pool =
+            SessionPool::with_obs(cfg, Box::new(FsStore), ObsConfig::off());
         let id = pool.create_session(0).unwrap();
         pool.session_mut(id).unwrap().state_bytes()
     };
@@ -61,7 +70,7 @@ fn main() {
         threads: 0,
         memory_budget: budget,
         snapshot_dir,
-        resample: None,
+        resample,
     };
     println!(
         "serve demo: {n_sessions} streams × {rounds} rounds × {seg} \
@@ -69,7 +78,10 @@ fn main() {
          {probe} B)\n"
     );
 
-    let mut pool = SessionPool::new(cfg);
+    // Full observability: histograms + gauges + the structured event
+    // ring (identical outputs either way — obs is write-only).
+    let mut pool =
+        SessionPool::with_obs(cfg, Box::new(FsStore), ObsConfig::full());
     let ids: Vec<u64> = (0..n_sessions)
         .map(|s| pool.create_session(1000 + s as u64).unwrap())
         .collect();
@@ -124,4 +136,41 @@ fn main() {
         "the demo budget should force eviction/restore churn"
     );
     assert!(checksum.is_finite());
+
+    // --- the observability surface ----------------------------------
+    let obs = sched.obs().clone();
+    let events = obs.drain_events();
+    println!("\n=== event log ({} events) ===", events.len());
+    for event in events.iter().take(12) {
+        println!("  {event}");
+    }
+    if events.len() > 12 {
+        println!("  … {} more", events.len() - 12);
+    }
+
+    let dump = obs.prometheus_text();
+    println!("\n=== prometheus metrics ===\n{dump}");
+
+    // The dump must carry real signal: ticked latency buckets, per-head
+    // ESS gauges, and at least one resample epoch in the event log.
+    assert!(
+        obs.tick_ms.count() > 0 && dump.contains("rfa_tick_ms_bucket"),
+        "tick-latency histogram should have recorded ticks"
+    );
+    assert!(
+        dump.contains("rfa_head_ess{"),
+        "per-head ESS gauges should be registered"
+    );
+    assert!(
+        events.iter().any(|e| matches!(
+            e.kind,
+            darkformer::obs::EventKind::ResampleEpoch { .. }
+        )),
+        "resampling every 64 positions should emit epoch events"
+    );
+    println!(
+        "ess_mean={:.2} (isotropic epoch-0 banks read m={m}; data-aware \
+         epochs reweight)",
+        obs.ess_mean()
+    );
 }

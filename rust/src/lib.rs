@@ -30,6 +30,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod rfa;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,142 @@
+//! Exporters: Prometheus text exposition and a flat JSON metric
+//! snapshot matching the `BENCH_*.json` conventions.
+//!
+//! Both walk the [`Registry`] in registration order, so for a fixed
+//! metric vocabulary the output is byte-stable — the exporter golden
+//! test in `rust/tests/rfa_obs.rs` pins the exact format.
+
+use crate::ser::{Json, JsonObj};
+
+use super::registry::Registry;
+
+/// Render `v` the way Prometheus text exposition expects: shortest
+/// round-trip decimal (Rust's `Display` for f64), `+Inf`/`-Inf`/`NaN`
+/// spelled out.
+fn num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Prometheus text exposition (format version 0.0.4) of every metric in
+/// the registry: counters, then gauges (label families kept contiguous),
+/// then histograms with cumulative `_bucket{le=…}` series plus `_sum`
+/// and `_count`.
+pub fn prometheus_text(registry: &Registry) -> String {
+    let mut out = String::new();
+    for c in registry.counters() {
+        out.push_str(&format!("# HELP {} {}\n", c.name(), c.help()));
+        out.push_str(&format!("# TYPE {} counter\n", c.name()));
+        out.push_str(&format!("{} {}\n", c.name(), c.get()));
+    }
+    // Gauges of one family must be contiguous in the exposition; emit
+    // each family at its first appearance in registration order.
+    let gauges = registry.gauges();
+    let mut emitted: Vec<&str> = Vec::new();
+    for g in &gauges {
+        if emitted.contains(&g.name()) {
+            continue;
+        }
+        emitted.push(g.name());
+        out.push_str(&format!("# HELP {} {}\n", g.name(), g.help()));
+        out.push_str(&format!("# TYPE {} gauge\n", g.name()));
+        for member in gauges.iter().filter(|m| m.name() == g.name()) {
+            if member.labels().is_empty() {
+                out.push_str(&format!(
+                    "{} {}\n",
+                    member.name(),
+                    num(member.get())
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{}{{{}}} {}\n",
+                    member.name(),
+                    member.labels(),
+                    num(member.get())
+                ));
+            }
+        }
+    }
+    for h in registry.histograms() {
+        out.push_str(&format!("# HELP {} {}\n", h.name(), h.help()));
+        out.push_str(&format!("# TYPE {} histogram\n", h.name()));
+        let counts = h.bucket_counts();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            let le = if i < h.bounds().len() {
+                num(h.bounds()[i])
+            } else {
+                "+Inf".to_string()
+            };
+            out.push_str(&format!(
+                "{}_bucket{{le=\"{le}\"}} {cum}\n",
+                h.name()
+            ));
+        }
+        out.push_str(&format!("{}_sum {}\n", h.name(), num(h.sum())));
+        out.push_str(&format!("{}_count {}\n", h.name(), h.count()));
+    }
+    out
+}
+
+/// Flat metric map in the `BENCH_*.json` convention:
+/// `{"suite": <name>, "metrics": {<key>: <number>, …}}`. Counters and
+/// gauges export under their metric name (labeled gauges as
+/// `name{labels}`); each histogram contributes `_count`, `_sum`,
+/// `_p50` and `_p99` entries.
+pub fn json_snapshot(suite: &str, registry: &Registry) -> Json {
+    let mut metrics = JsonObj::new();
+    for c in registry.counters() {
+        metrics.insert(c.name(), Json::Num(c.get() as f64));
+    }
+    for g in registry.gauges() {
+        let key = if g.labels().is_empty() {
+            g.name().to_string()
+        } else {
+            format!("{}{{{}}}", g.name(), g.labels())
+        };
+        metrics.insert(key, Json::Num(g.get()));
+    }
+    for h in registry.histograms() {
+        metrics
+            .insert(format!("{}_count", h.name()), Json::Num(h.count() as f64));
+        metrics.insert(format!("{}_sum", h.name()), Json::Num(h.sum()));
+        metrics
+            .insert(format!("{}_p50", h.name()), Json::Num(h.quantile(0.5)));
+        metrics
+            .insert(format!("{}_p99", h.name()), Json::Num(h.quantile(0.99)));
+    }
+    let mut root = JsonObj::new();
+    root.insert("suite", Json::Str(suite.to_string()));
+    root.insert("metrics", Json::Obj(metrics));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_snapshot_shape() {
+        let reg = Registry::new();
+        reg.counter("a_total", "a").add(2);
+        reg.gauge_labeled("g", "k=\"1\"", "g").set(0.5);
+        reg.histogram("h_ms", "h", &[1.0]).observe(0.25);
+        let json = json_snapshot("obs", &reg);
+        let metrics = json.field("metrics").unwrap();
+        assert_eq!(metrics.field("a_total").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            metrics.field("g{k=\"1\"}").unwrap().as_f64(),
+            Some(0.5)
+        );
+        assert_eq!(metrics.field("h_ms_count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(json.field("suite").unwrap().as_str(), Some("obs"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Zero-dependency observability for the serving stack: counters,
+//! gauges, fixed-bucket histograms, scoped span timers, a bounded
+//! structured event ring, and Prometheus/JSON exporters.
+//!
+//! The paper's core claim is statistical — data-aligned importance
+//! sampling cuts Monte-Carlo variance when queries/keys are anisotropic
+//! — and this module is how a running server *sees* it: per-head
+//! effective sample size of the importance weights, a Σ̂ anisotropy
+//! proxy, resample-epoch cadence ([`serve::ServeObs`]), alongside the
+//! latency and fault signals (tick/forward/snapshot-IO spans,
+//! eviction/restore churn, quarantine transitions) a deployment needs.
+//!
+//! # The write-only rule
+//!
+//! Observability is **write-only from the hot path**:
+//!
+//! * no control flow anywhere reads a metric, gauge, or the event ring
+//!   — telemetry influences nothing;
+//! * wall-clock time appears only *inside* telemetry values (span
+//!   timers), never in any decision;
+//! * a run with obs at maximum verbosity is bitwise-identical in its
+//!   outputs to a run with obs disabled.
+//!
+//! This extends the `rfa::serve` determinism contract; see
+//! "Observability and the determinism contract" in
+//! [`crate::rfa::serve`] and the pins in `rust/tests/rfa_obs.rs`.
+//!
+//! # Verbosity levels
+//!
+//! [`ObsLevel`] has three settings, read from `RFA_OBS` by default:
+//!
+//! * `Off` — counters only (they back [`crate::rfa::serve`]'s
+//!   `PoolStats`/`HealthReport` views and cost one relaxed `fetch_add`
+//!   per event); no clock reads, no histograms, no gauges, no ring.
+//! * `Basic` (default) — adds span timers, histograms, and the
+//!   pool/kernel-quality gauges.
+//! * `Full` — adds the structured [`ring::EventRing`].
+//!
+//! Events, gauge updates and registrations happen only on serial
+//! pool/scheduler paths; worker threads touch nothing but sharded
+//! counter cells — that is what makes every exported artifact
+//! thread-count-invariant for deterministic quantities.
+
+pub mod export;
+pub mod registry;
+pub mod ring;
+pub mod serve;
+
+pub use export::{json_snapshot, prometheus_text};
+pub use registry::{Counter, Gauge, Histogram, Registry, Span};
+pub use ring::{Event, EventKind, EventRing};
+pub use serve::ServeObs;
+
+/// Verbosity of the observability layer. Ordered: each level is a
+/// superset of the previous one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// Counters only — the always-on substrate behind `PoolStats` and
+    /// `HealthReport`. No clock reads.
+    Off,
+    /// Plus span timers, histograms and gauges.
+    Basic,
+    /// Plus the structured event ring.
+    Full,
+}
+
+impl ObsLevel {
+    /// Parse the `RFA_OBS` environment variable:
+    /// `off`/`0`/`none` → `Off`, `full`/`2` → `Full`, anything else
+    /// (including unset) → `Basic`.
+    pub fn from_env() -> Self {
+        match std::env::var("RFA_OBS") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "off" | "0" | "none" => ObsLevel::Off,
+                "full" | "2" => ObsLevel::Full,
+                _ => ObsLevel::Basic,
+            },
+            Err(_) => ObsLevel::Basic,
+        }
+    }
+}
+
+/// Observability configuration, fixed at pool construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsConfig {
+    pub level: ObsLevel,
+    /// Event-ring capacity (drop-oldest beyond it); only allocated at
+    /// [`ObsLevel::Full`].
+    pub ring_capacity: usize,
+}
+
+impl ObsConfig {
+    pub const DEFAULT_RING_CAPACITY: usize = 1024;
+
+    /// Level from `RFA_OBS`, default ring capacity — what
+    /// `SessionPool::new`/`with_store` use.
+    pub fn from_env() -> Self {
+        Self::at(ObsLevel::from_env())
+    }
+
+    pub fn at(level: ObsLevel) -> Self {
+        Self { level, ring_capacity: Self::DEFAULT_RING_CAPACITY }
+    }
+
+    /// Counters-only mode (the disabled arm of the bitwise tests).
+    pub fn off() -> Self {
+        Self::at(ObsLevel::Off)
+    }
+
+    /// Maximum verbosity: timers, histograms, gauges and the event ring.
+    pub fn full() -> Self {
+        Self::at(ObsLevel::Full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(ObsLevel::Off < ObsLevel::Basic);
+        assert!(ObsLevel::Basic < ObsLevel::Full);
+    }
+
+    #[test]
+    fn config_constructors() {
+        assert_eq!(ObsConfig::off().level, ObsLevel::Off);
+        assert_eq!(ObsConfig::full().level, ObsLevel::Full);
+        assert_eq!(
+            ObsConfig::full().ring_capacity,
+            ObsConfig::DEFAULT_RING_CAPACITY
+        );
+    }
+}

@@ -1,0 +1,465 @@
+//! Metric primitives and the registry that owns them.
+//!
+//! Three metric kinds, all lock-free on the write path:
+//!
+//! * [`Counter`] — monotone u64, sharded across cache-line-padded atomic
+//!   cells so concurrent workers never contend on one line; one relaxed
+//!   `fetch_add` per event.
+//! * [`Gauge`] — a single f64 stored as atomic bits; last write wins.
+//! * [`Histogram`] — fixed bucket bounds chosen at registration, one
+//!   atomic bucket increment plus a count/sum update per observation,
+//!   and bucket-interpolated quantiles ([`Histogram::quantile`]) for
+//!   p50/p99 readouts.
+//!
+//! The [`Registry`] hands out `Arc` handles, deduplicated by name (and
+//! labels, for gauges), and remembers registration order — exporters
+//! iterate that order, so two runs that register metrics in the same
+//! order export byte-identical text. Registration takes a mutex and is
+//! meant for setup/serial paths; the hot path only touches the handles.
+//!
+//! [`Span`] is the scoped wall-clock timer: it reads `Instant::now()`
+//! only when constructed enabled, and records elapsed milliseconds into
+//! its histogram on drop. Wall-clock therefore appears *inside* metric
+//! values and nowhere else — the write-only rule of the serve-layer
+//! determinism contract.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Counter shard count; power of two so the thread-id fold is a mask.
+const SHARDS: usize = 8;
+
+/// One counter cell on its own cache line (no false sharing between
+/// shards of the same counter or neighbouring counters).
+#[repr(align(64))]
+struct CacheCell(AtomicU64);
+
+impl CacheCell {
+    fn zero() -> Self {
+        Self(AtomicU64::new(0))
+    }
+}
+
+static NEXT_THREAD_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// This thread's counter shard: assigned round-robin on first use so
+/// worker pools spread across shards regardless of OS thread ids.
+fn shard_index() -> usize {
+    THREAD_SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT_THREAD_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+        s.set(v);
+        v
+    })
+}
+
+/// Add `v` to an f64 stored as atomic bits (CAS loop; used for histogram
+/// sums, which are observed at tick rate, not per-row rate).
+fn add_f64_bits(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(
+            cur,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotone event counter, sharded per thread.
+pub struct Counter {
+    name: String,
+    help: String,
+    shards: [CacheCell; SHARDS],
+}
+
+impl Counter {
+    fn new(name: String, help: String) -> Self {
+        Self {
+            name,
+            help,
+            shards: std::array::from_fn(|_| CacheCell::zero()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn help(&self) -> &str {
+        &self.help
+    }
+
+    /// One relaxed `fetch_add` on this thread's shard.
+    pub fn add(&self, n: u64) {
+        self.shards[shard_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sum across shards (reader-side; not a hot path).
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Last-write-wins f64 gauge, optionally labeled
+/// (`name{labels}` in the Prometheus exposition).
+pub struct Gauge {
+    name: String,
+    labels: String,
+    help: String,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new(name: String, labels: String, help: String) -> Self {
+        Self { name, labels, help, bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Label pairs as rendered between braces (empty = unlabeled).
+    pub fn labels(&self) -> &str {
+        &self.labels
+    }
+
+    pub fn help(&self) -> &str {
+        &self.help
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are ascending inclusive upper bounds
+/// with an implicit final +Inf bucket.
+pub struct Histogram {
+    name: String,
+    help: String,
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` buckets; the last one is +Inf.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(name: String, help: String, bounds: &[f64]) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Self {
+            name,
+            help,
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn help(&self) -> &str {
+        &self.help
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| v > b);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        add_f64_bits(&self.sum_bits, v);
+    }
+
+    /// Per-bucket counts (not cumulative), +Inf bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Bucket-interpolated quantile `q ∈ [0, 1]`: find the bucket holding
+    /// the q-th observation and interpolate linearly inside it. The +Inf
+    /// bucket reports its lower bound (there is nothing to interpolate
+    /// toward). Returns 0 when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil()).max(1.0);
+        let target = (target as u64).min(total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum >= target {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                if i >= self.bounds.len() {
+                    return lo; // +Inf bucket
+                }
+                let hi = self.bounds[i];
+                let into = (target - (cum - c)) as f64 / c as f64;
+                return lo + (hi - lo) * into;
+            }
+        }
+        // Unreachable: cum reaches total >= target.
+        self.bounds.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Scoped wall-clock timer: created enabled it records elapsed
+/// milliseconds into its histogram on drop; created disabled it never
+/// touches the clock. See [`Registry`] module docs for the write-only
+/// rule this upholds.
+pub struct Span {
+    armed: Option<(Arc<Histogram>, Instant)>,
+}
+
+impl Span {
+    /// An armed span: reads the clock now, records on drop.
+    pub fn start(hist: &Arc<Histogram>) -> Self {
+        Self { armed: Some((Arc::clone(hist), Instant::now())) }
+    }
+
+    /// A disarmed span: no clock read, no record — the disabled mode's
+    /// zero-cost stand-in.
+    pub fn disabled() -> Self {
+        Self { armed: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((hist, start)) = self.armed.take() {
+            hist.observe(start.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Vec<Arc<Counter>>,
+    gauges: Vec<Arc<Gauge>>,
+    histograms: Vec<Arc<Histogram>>,
+}
+
+/// Owns every metric of one serving stack, in registration order.
+/// Handles are deduplicated by name (gauges by name + labels), so
+/// re-registration returns the existing metric — restores and re-created
+/// vocabularies cannot double-count.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+fn lock(m: &Mutex<RegistryInner>) -> MutexGuard<'_, RegistryInner> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(
+        &self,
+        name: impl Into<String>,
+        help: impl Into<String>,
+    ) -> Arc<Counter> {
+        let name = name.into();
+        let mut inner = lock(&self.inner);
+        if let Some(c) = inner.counters.iter().find(|c| c.name == name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(Counter::new(name, help.into()));
+        inner.counters.push(Arc::clone(&c));
+        c
+    }
+
+    pub fn gauge(
+        &self,
+        name: impl Into<String>,
+        help: impl Into<String>,
+    ) -> Arc<Gauge> {
+        self.gauge_labeled(name, "", help)
+    }
+
+    /// A labeled gauge: `labels` is the rendered pair list, e.g.
+    /// `session="3",head="0"` (empty for an unlabeled gauge).
+    pub fn gauge_labeled(
+        &self,
+        name: impl Into<String>,
+        labels: impl Into<String>,
+        help: impl Into<String>,
+    ) -> Arc<Gauge> {
+        let (name, labels) = (name.into(), labels.into());
+        let mut inner = lock(&self.inner);
+        if let Some(g) = inner
+            .gauges
+            .iter()
+            .find(|g| g.name == name && g.labels == labels)
+        {
+            return Arc::clone(g);
+        }
+        let g = Arc::new(Gauge::new(name, labels, help.into()));
+        inner.gauges.push(Arc::clone(&g));
+        g
+    }
+
+    pub fn histogram(
+        &self,
+        name: impl Into<String>,
+        help: impl Into<String>,
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        let name = name.into();
+        let mut inner = lock(&self.inner);
+        if let Some(h) = inner.histograms.iter().find(|h| h.name == name) {
+            return Arc::clone(h);
+        }
+        let h = Arc::new(Histogram::new(name, help.into(), bounds));
+        inner.histograms.push(Arc::clone(&h));
+        h
+    }
+
+    /// Every counter, in registration order.
+    pub fn counters(&self) -> Vec<Arc<Counter>> {
+        lock(&self.inner).counters.clone()
+    }
+
+    /// Every gauge, in registration order.
+    pub fn gauges(&self) -> Vec<Arc<Gauge>> {
+        lock(&self.inner).gauges.clone()
+    }
+
+    /// Every histogram, in registration order.
+    pub fn histograms(&self) -> Vec<Arc<Histogram>> {
+        lock(&self.inner).histograms.clone()
+    }
+
+    /// Current values of every gauge in a family (e.g. all
+    /// `rfa_head_ess{…}` gauges), in registration order.
+    pub fn gauge_family_values(&self, name: &str) -> Vec<f64> {
+        lock(&self.inner)
+            .gauges
+            .iter()
+            .filter(|g| g.name == name)
+            .map(|g| g.get())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_shards() {
+        let reg = Registry::new();
+        let c = reg.counter("test_total", "t");
+        c.add(3);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        // Re-registration returns the same counter.
+        assert_eq!(reg.counter("test_total", "t").get(), 4);
+        assert_eq!(reg.counters().len(), 1);
+    }
+
+    #[test]
+    fn counter_concurrent_adds_are_exact() {
+        let reg = Registry::new();
+        let c = reg.counter("conc_total", "t");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat_ms", "t", &[1.0, 2.0, 4.0]);
+        for v in [0.5, 0.5, 1.5, 3.0, 10.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 15.5).abs() < 1e-12);
+        // p50 = 3rd of 5 observations -> the (1, 2] bucket, fully through.
+        assert!((h.quantile(0.5) - 2.0).abs() < 1e-12);
+        // p100 lands in the +Inf bucket -> reports its lower bound.
+        assert!((h.quantile(1.0) - 4.0).abs() < 1e-12);
+        assert_eq!(Registry::new().histogram("e", "t", &[1.0]).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let reg = Registry::new();
+        let g = reg.gauge_labeled("ess", "head=\"0\"", "t");
+        g.set(12.5);
+        g.set(3.25);
+        assert_eq!(g.get(), 3.25);
+        assert_eq!(reg.gauge_family_values("ess"), vec![3.25]);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let reg = Registry::new();
+        let h = reg.histogram("span_ms", "t", &[1.0]);
+        {
+            let _s = Span::disabled();
+        }
+        assert_eq!(h.count(), 0);
+        {
+            let _s = Span::start(&h);
+        }
+        assert_eq!(h.count(), 1);
+    }
+}

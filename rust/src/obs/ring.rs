@@ -1,0 +1,188 @@
+//! Bounded structured event ring for the serving stack.
+//!
+//! Every state transition an operator would want on a dashboard —
+//! eviction, restore, resample epoch, store fault, quarantine,
+//! degraded-mode edges, orphan-unlink retries — is pushed as a typed
+//! [`Event`] onto a bounded ring. The ring drops oldest on overflow
+//! (counting drops, never blocking a serving path) and is drained
+//! wholesale by exporters, dashboards and the determinism tests.
+//!
+//! Events carry **no timestamps**: they are pushed only from serial
+//! scheduler/pool paths, so for a fixed workload and fault schedule the
+//! drained sequence is identical across thread counts — the property
+//! `rust/tests/rfa_obs.rs` pins. (`seq` is a per-ring push index, not a
+//! clock.)
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Mutex, MutexGuard};
+
+/// What happened. Payloads are the quantities an operator would filter
+/// or alert on; paths are stringified store paths (pool-unique prefixes
+/// and all — tests normalize them, dashboards show them raw).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// A session was written out to its snapshot to stay under budget.
+    Eviction { session: u64, bytes: u64 },
+    /// A session was faulted back in from its snapshot.
+    Restore { session: u64, bytes: u64 },
+    /// Head `head` of `session` crossed resample-epoch boundary `epoch`
+    /// (froze its triple and redrew its bank).
+    ResampleEpoch { session: u64, head: usize, epoch: u64 },
+    /// A snapshot-store operation failed (injected or real IO error).
+    StoreFault { op: &'static str, path: String },
+    /// The retry policy gave up on a session after `failures`
+    /// consecutive snapshot failures.
+    Quarantine { session: u64, failures: u32 },
+    /// An operator lifted a session's quarantine.
+    Unquarantine { session: u64 },
+    /// A snapshot write failed with no success since: eviction is
+    /// suspended, admission control tightens.
+    DegradedEnter,
+    /// A snapshot write succeeded again; normal budget behavior resumes.
+    DegradedExit,
+    /// A previously failed snapshot unlink was retried.
+    OrphanRetry { path: String, recovered: bool },
+}
+
+impl fmt::Display for EventKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EventKind::Eviction { session, bytes } => {
+                write!(f, "eviction session={session} bytes={bytes}")
+            }
+            EventKind::Restore { session, bytes } => {
+                write!(f, "restore session={session} bytes={bytes}")
+            }
+            EventKind::ResampleEpoch { session, head, epoch } => write!(
+                f,
+                "resample-epoch session={session} head={head} epoch={epoch}"
+            ),
+            EventKind::StoreFault { op, path } => {
+                write!(f, "store-fault op={op} path={path}")
+            }
+            EventKind::Quarantine { session, failures } => write!(
+                f,
+                "quarantine session={session} failures={failures}"
+            ),
+            EventKind::Unquarantine { session } => {
+                write!(f, "unquarantine session={session}")
+            }
+            EventKind::DegradedEnter => write!(f, "degraded-enter"),
+            EventKind::DegradedExit => write!(f, "degraded-exit"),
+            EventKind::OrphanRetry { path, recovered } => {
+                write!(f, "orphan-retry recovered={recovered} path={path}")
+            }
+        }
+    }
+}
+
+/// One ring entry: a push-order sequence number plus the typed payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Monotone push index (gaps never occur; dropped events were the
+    /// *oldest*, so surviving seqs stay contiguous at the tail).
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{} {}", self.seq, self.kind)
+    }
+}
+
+#[derive(Default)]
+struct RingInner {
+    next_seq: u64,
+    dropped: u64,
+    events: VecDeque<Event>,
+}
+
+/// Bounded drop-oldest event buffer. Push is a short mutex hold on
+/// serial paths only; the worker-thread hot path never touches it.
+pub struct EventRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+}
+
+fn lock(m: &Mutex<RingInner>) -> MutexGuard<'_, RingInner> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl EventRing {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(RingInner::default()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn push(&self, kind: EventKind) {
+        let mut inner = lock(&self.inner);
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if inner.events.len() == self.capacity {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        inner.events.push_back(Event { seq, kind });
+    }
+
+    /// Remove and return every buffered event, oldest first.
+    pub fn drain(&self) -> Vec<Event> {
+        lock(&self.inner).events.drain(..).collect()
+    }
+
+    /// Copy of the buffered events without consuming them.
+    pub fn snapshot(&self) -> Vec<Event> {
+        lock(&self.inner).events.iter().cloned().collect()
+    }
+
+    /// Buffered event count.
+    pub fn len(&self) -> usize {
+        lock(&self.inner).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by overflow since creation.
+    pub fn dropped(&self) -> u64 {
+        lock(&self.inner).dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let ring = EventRing::new(2);
+        ring.push(EventKind::DegradedEnter);
+        ring.push(EventKind::DegradedExit);
+        ring.push(EventKind::Unquarantine { session: 7 });
+        assert_eq!(ring.dropped(), 1);
+        let events = ring.drain();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].seq, 1);
+        assert_eq!(events[0].kind, EventKind::DegradedExit);
+        assert_eq!(events[1].seq, 2);
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped(), 1);
+    }
+
+    #[test]
+    fn event_display_is_compact() {
+        let ring = EventRing::new(4);
+        ring.push(EventKind::ResampleEpoch { session: 3, head: 1, epoch: 2 });
+        let shown = format!("{}", ring.snapshot()[0]);
+        assert_eq!(shown, "#0 resample-epoch session=3 head=1 epoch=2");
+    }
+}

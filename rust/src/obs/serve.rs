@@ -1,0 +1,438 @@
+//! The serving stack's metric vocabulary, pre-registered so hot paths
+//! touch handles, never name lookups — plus the kernel-quality helpers
+//! tied to the paper (importance-weight ESS, Σ̂ anisotropy).
+//!
+//! One [`ServeObs`] is shared (via `Arc`) by a `SessionPool`, its
+//! `BatchScheduler`, and every `Session` the pool owns; `pool.obs()` /
+//! `scheduler.obs()` hand it out for export. All counters are live at
+//! every [`ObsLevel`]; histograms/gauges require `Basic`, the event ring
+//! `Full` — see the [`super`] module docs for the write-only rule all of
+//! it obeys.
+
+use std::sync::Arc;
+
+use crate::rfa::features::FeatureBank;
+
+use super::registry::{Counter, Gauge, Histogram, Registry, Span};
+use super::ring::{Event, EventKind, EventRing};
+use super::{ObsConfig, ObsLevel};
+
+/// Latency histogram bounds in milliseconds: sub-100µs ticks through
+/// multi-second outliers.
+const LATENCY_BOUNDS_MS: [f64; 12] =
+    [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0];
+
+/// Batch-size histogram bounds (sessions per tick) — powers of two.
+const BATCH_BOUNDS: [f64; 8] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Request-size histogram bounds (rows per request).
+const ROW_BOUNDS: [f64; 8] =
+    [16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 4096.0];
+
+/// Pre-registered metric vocabulary of one serving stack.
+///
+/// Counter fields are public: call sites do `obs.evictions.inc()` — one
+/// relaxed `fetch_add`, no map lookup. Everything level-gated goes
+/// through the helper methods so the gating logic lives in one place.
+pub struct ServeObs {
+    level: ObsLevel,
+    registry: Arc<Registry>,
+    ring: EventRing,
+
+    // --- counters (always live; back PoolStats/HealthReport) --------
+    /// Sessions written out to snapshots to stay under the budget.
+    pub evictions: Arc<Counter>,
+    /// Sessions faulted back in from snapshots.
+    pub restores: Arc<Counter>,
+    /// Bytes of snapshot payload successfully written through the store.
+    pub snapshot_bytes_written: Arc<Counter>,
+    /// Bytes of snapshot payload successfully read through the store.
+    pub snapshot_bytes_read: Arc<Counter>,
+    /// Failed snapshot-store operations (plus decode failures at
+    /// fault-in) — the `HealthReport::snapshot_failures` source.
+    pub snapshot_failures: Arc<Counter>,
+    /// Sessions the retry policy quarantined.
+    pub quarantines: Arc<Counter>,
+    /// Operator unquarantine calls that lifted a quarantine.
+    pub unquarantines: Arc<Counter>,
+    /// Retries of previously failed snapshot unlinks.
+    pub orphan_retries: Arc<Counter>,
+    /// Healthy→degraded transitions of the snapshot store.
+    pub degraded_transitions: Arc<Counter>,
+    /// Requests completed by scheduler ticks.
+    pub requests_completed: Arc<Counter>,
+    /// Stream rows (positions) served by scheduler ticks.
+    pub rows_served: Arc<Counter>,
+    /// Scheduler ticks run.
+    pub ticks: Arc<Counter>,
+    /// Resample-epoch boundaries crossed (bank redraws), across all
+    /// sessions and heads.
+    pub resample_epochs: Arc<Counter>,
+
+    // --- gauges (Basic+) ---------------------------------------------
+    pub resident_sessions: Arc<Gauge>,
+    pub evicted_sessions: Arc<Gauge>,
+    pub resident_bytes: Arc<Gauge>,
+    pub quarantined_sessions: Arc<Gauge>,
+    /// 1 while the snapshot store is degraded, else 0.
+    pub degraded: Arc<Gauge>,
+    pub orphaned_snapshots: Arc<Gauge>,
+
+    // --- histograms (Basic+) ------------------------------------------
+    /// Wall-clock per scheduler tick (ms).
+    pub tick_ms: Arc<Histogram>,
+    /// Wall-clock per tick's threaded forward fan-out (ms).
+    pub forward_ms: Arc<Histogram>,
+    /// Wall-clock per snapshot-store write/read (ms).
+    pub snapshot_io_ms: Arc<Histogram>,
+    /// Wall-clock per post-epoch kernel-quality recompute (ms) — the
+    /// serial telemetry half of the resample phase (the redraw itself
+    /// runs on workers, inside the forward span).
+    pub resample_ms: Arc<Histogram>,
+    /// Requests per tick batch (deterministic values).
+    pub batch_sessions: Arc<Histogram>,
+    /// Rows per completed request (deterministic values).
+    pub request_rows: Arc<Histogram>,
+}
+
+impl ServeObs {
+    pub fn new(cfg: ObsConfig) -> Arc<Self> {
+        let reg = Arc::new(Registry::new());
+        let c = |name: &str, help: &str| reg.counter(name, help);
+        let g = |name: &str, help: &str| reg.gauge(name, help);
+        let h = |name: &str, help: &str, bounds: &[f64]| {
+            reg.histogram(name, help, bounds)
+        };
+        Arc::new(Self {
+            level: cfg.level,
+            ring: EventRing::new(cfg.ring_capacity),
+            evictions: c(
+                "rfa_evictions_total",
+                "Sessions snapshotted out to stay under the memory budget",
+            ),
+            restores: c(
+                "rfa_restores_total",
+                "Sessions faulted back in from snapshots",
+            ),
+            snapshot_bytes_written: c(
+                "rfa_snapshot_bytes_written_total",
+                "Snapshot bytes successfully written through the store",
+            ),
+            snapshot_bytes_read: c(
+                "rfa_snapshot_bytes_read_total",
+                "Snapshot bytes successfully read through the store",
+            ),
+            snapshot_failures: c(
+                "rfa_snapshot_failures_total",
+                "Failed snapshot-store operations (incl. decode failures)",
+            ),
+            quarantines: c(
+                "rfa_quarantines_total",
+                "Sessions quarantined by the retry policy",
+            ),
+            unquarantines: c(
+                "rfa_unquarantines_total",
+                "Quarantines lifted by operator retry",
+            ),
+            orphan_retries: c(
+                "rfa_orphan_retries_total",
+                "Retries of previously failed snapshot unlinks",
+            ),
+            degraded_transitions: c(
+                "rfa_degraded_transitions_total",
+                "Healthy-to-degraded transitions of the snapshot store",
+            ),
+            requests_completed: c(
+                "rfa_requests_completed_total",
+                "Step requests completed by scheduler ticks",
+            ),
+            rows_served: c(
+                "rfa_rows_served_total",
+                "Stream rows served by scheduler ticks",
+            ),
+            ticks: c("rfa_ticks_total", "Scheduler ticks run"),
+            resample_epochs: c(
+                "rfa_resample_epochs_total",
+                "Resample-epoch boundaries crossed (bank redraws)",
+            ),
+            resident_sessions: g(
+                "rfa_resident_sessions",
+                "Sessions currently resident in memory",
+            ),
+            evicted_sessions: g(
+                "rfa_evicted_sessions",
+                "Sessions currently living as snapshots",
+            ),
+            resident_bytes: g(
+                "rfa_resident_bytes",
+                "Resident session-state bytes (the budgeted quantity)",
+            ),
+            quarantined_sessions: g(
+                "rfa_quarantined_sessions",
+                "Sessions currently quarantined",
+            ),
+            degraded: g(
+                "rfa_degraded",
+                "1 while the snapshot store is degraded, else 0",
+            ),
+            orphaned_snapshots: g(
+                "rfa_orphaned_snapshots",
+                "Snapshot files whose unlink failed, awaiting retry",
+            ),
+            tick_ms: h(
+                "rfa_tick_ms",
+                "Scheduler tick wall-clock (ms)",
+                &LATENCY_BOUNDS_MS,
+            ),
+            forward_ms: h(
+                "rfa_forward_ms",
+                "Threaded forward fan-out wall-clock per tick (ms)",
+                &LATENCY_BOUNDS_MS,
+            ),
+            snapshot_io_ms: h(
+                "rfa_snapshot_io_ms",
+                "Snapshot-store write/read wall-clock (ms)",
+                &LATENCY_BOUNDS_MS,
+            ),
+            resample_ms: h(
+                "rfa_resample_ms",
+                "Post-epoch kernel-quality recompute wall-clock (ms)",
+                &LATENCY_BOUNDS_MS,
+            ),
+            batch_sessions: h(
+                "rfa_batch_sessions",
+                "Requests per tick batch",
+                &BATCH_BOUNDS,
+            ),
+            request_rows: h(
+                "rfa_request_rows",
+                "Rows per completed request",
+                &ROW_BOUNDS,
+            ),
+            registry: reg,
+        })
+    }
+
+    pub fn level(&self) -> ObsLevel {
+        self.level
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Span timers and value histograms are recorded at `Basic` and up.
+    pub fn timing_enabled(&self) -> bool {
+        self.level >= ObsLevel::Basic
+    }
+
+    /// Pool and kernel-quality gauges are maintained at `Basic` and up.
+    pub fn gauges_enabled(&self) -> bool {
+        self.level >= ObsLevel::Basic
+    }
+
+    /// The structured event ring is live only at `Full`.
+    pub fn ring_enabled(&self) -> bool {
+        self.level >= ObsLevel::Full
+    }
+
+    /// Push a structured event (no-op below `Full`). Serial paths only.
+    pub fn event(&self, kind: EventKind) {
+        if self.ring_enabled() {
+            self.ring.push(kind);
+        }
+    }
+
+    /// A scoped wall-clock timer over `hist` — armed (one
+    /// `Instant::now`) only when timing is enabled.
+    pub fn span(&self, hist: &Arc<Histogram>) -> Span {
+        if self.timing_enabled() {
+            Span::start(hist)
+        } else {
+            Span::disabled()
+        }
+    }
+
+    /// Record a tick's batch size (requests scheduled together).
+    pub fn observe_batch(&self, sessions: usize) {
+        if self.timing_enabled() {
+            self.batch_sessions.observe(sessions as f64);
+        }
+    }
+
+    /// Record one completed request's row count.
+    pub fn observe_rows(&self, rows: usize) {
+        if self.timing_enabled() {
+            self.request_rows.observe(rows as f64);
+        }
+    }
+
+    /// Update the four per-head kernel-quality gauges of `(session,
+    /// head)`: importance-weight ESS, Σ̂ anisotropy proxy, completed
+    /// resample epochs, and frozen-epoch resident bytes. Registers the
+    /// labeled gauges on first touch (serial paths only).
+    pub fn set_head_gauges(
+        &self,
+        session: u64,
+        head: usize,
+        ess: f64,
+        anisotropy: f64,
+        epochs: u64,
+        frozen_bytes: u64,
+    ) {
+        if !self.gauges_enabled() {
+            return;
+        }
+        let labels = format!("session=\"{session}\",head=\"{head}\"");
+        self.registry
+            .gauge_labeled(
+                "rfa_head_ess",
+                labels.clone(),
+                "Effective sample size of the head's importance weights",
+            )
+            .set(ess);
+        self.registry
+            .gauge_labeled(
+                "rfa_head_sigma_anisotropy",
+                labels.clone(),
+                "Anisotropy proxy of the head's bank covariance: \
+                 ln(trace/d) - logdet/d (0 = isotropic)",
+            )
+            .set(anisotropy);
+        self.registry
+            .gauge_labeled(
+                "rfa_head_epochs",
+                labels.clone(),
+                "Completed resample epochs of the head",
+            )
+            .set(epochs as f64);
+        self.registry
+            .gauge_labeled(
+                "rfa_head_frozen_bytes",
+                labels,
+                "Resident bytes of the head's retained frozen epochs",
+            )
+            .set(frozen_bytes as f64);
+    }
+
+    /// Mean of every per-head ESS gauge (0 when none registered) — the
+    /// bench's `ess_mean` headline.
+    pub fn ess_mean(&self) -> f64 {
+        let values = self.registry.gauge_family_values("rfa_head_ess");
+        if values.is_empty() {
+            return 0.0;
+        }
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+
+    /// Drain the event ring (oldest first).
+    pub fn drain_events(&self) -> Vec<Event> {
+        self.ring.drain()
+    }
+
+    /// Copy of the buffered events without consuming them.
+    pub fn events_snapshot(&self) -> Vec<Event> {
+        self.ring.snapshot()
+    }
+
+    /// Events lost to ring overflow.
+    pub fn events_dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    /// Prometheus text exposition of every registered metric.
+    pub fn prometheus_text(&self) -> String {
+        super::export::prometheus_text(&self.registry)
+    }
+
+    /// Flat JSON metric snapshot (`BENCH_*.json` conventions).
+    pub fn json_snapshot(&self) -> crate::ser::Json {
+        super::export::json_snapshot("rfa_serve_obs", &self.registry)
+    }
+}
+
+/// Anisotropy proxy of a bank's normalizer covariance Σ:
+/// `ln(trace(Σ)/d) − logdet(Σ)/d`, the log of the arithmetic-to-
+/// geometric mean ratio of Σ's eigenvalues — 0 iff Σ is a multiple of
+/// the identity, growing as the spectrum spreads. Computed from the
+/// existing Cholesky (one O(d³) factor per call; called only on serial
+/// post-epoch paths). Isotropic banks (no Σ) report 0; a non-SPD Σ
+/// (never produced by the shrinkage path) reports 0 rather than NaN.
+pub fn bank_anisotropy(bank: &FeatureBank) -> f64 {
+    let Some(sigma) = bank.norm_sigma() else {
+        return 0.0;
+    };
+    let d = sigma.rows();
+    let trace: f64 = (0..d).map(|i| sigma[(i, i)]).sum();
+    let Some(chol) = sigma.cholesky() else {
+        return 0.0;
+    };
+    if trace <= 0.0 {
+        return 0.0;
+    }
+    let logdet: f64 = 2.0 * (0..d).map(|i| chol[(i, i)].ln()).sum::<f64>();
+    let df = d as f64;
+    ((trace / df).ln() - logdet / df).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rfa::estimators::{PrfEstimator, Sampling};
+    use crate::rfa::gaussian::MultivariateGaussian;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn isotropic_bank_has_zero_anisotropy_and_full_ess() {
+        let est = PrfEstimator::new(4, 16, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&est, &mut Pcg64::seed(7));
+        assert_eq!(bank_anisotropy(&bank), 0.0);
+        // Unweighted bank: all w_i = 1, so ESS = n.
+        assert!((bank.effective_sample_size() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn anisotropy_grows_with_spectrum_spread() {
+        let mk = |scale: f64| {
+            let mut sigma = Matrix::identity(3);
+            sigma[(0, 0)] = scale;
+            let est = PrfEstimator::new(
+                3,
+                8,
+                Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+            );
+            FeatureBank::draw(&est, &mut Pcg64::seed(11))
+        };
+        let near_iso = bank_anisotropy(&mk(1.0));
+        let spread = bank_anisotropy(&mk(9.0));
+        assert!(near_iso.abs() < 1e-12, "identity Σ must read 0");
+        assert!(spread > 0.1, "spread spectrum must read > 0, got {spread}");
+    }
+
+    #[test]
+    fn level_gating() {
+        let off = ServeObs::new(ObsConfig::off());
+        off.evictions.inc(); // counters always live
+        off.observe_batch(4);
+        off.set_head_gauges(0, 0, 1.0, 0.0, 0, 0);
+        off.event(EventKind::DegradedEnter);
+        assert_eq!(off.evictions.get(), 1);
+        assert_eq!(off.batch_sessions.count(), 0);
+        assert!(off.registry.gauge_family_values("rfa_head_ess").is_empty());
+        assert!(off.events_snapshot().is_empty());
+
+        let full = ServeObs::new(ObsConfig::full());
+        full.observe_batch(4);
+        full.set_head_gauges(0, 1, 2.5, 0.0, 3, 64);
+        full.event(EventKind::DegradedEnter);
+        assert_eq!(full.batch_sessions.count(), 1);
+        assert_eq!(
+            full.registry.gauge_family_values("rfa_head_ess"),
+            vec![2.5]
+        );
+        assert_eq!(full.events_snapshot().len(), 1);
+        assert!((full.ess_mean() - 2.5).abs() < 1e-12);
+    }
+}

@@ -138,6 +138,21 @@ impl FeatureBank {
         self.norm_sigma.as_ref()
     }
 
+    /// Effective sample size of the importance weights,
+    /// `ESS = (Σw)²/Σw²` — in `(0, n]`, exactly `n` for an unweighted
+    /// bank, collapsing toward 1 as a few draws dominate. A low ESS
+    /// means the data-aware proposal is fighting the integrand and the
+    /// m-sample average behaves like far fewer effective draws; the
+    /// serving layer exports it per head as the `rfa_head_ess` gauge.
+    pub fn effective_sample_size(&self) -> f64 {
+        let sum: f64 = self.weights.iter().sum();
+        let sum_sq: f64 = self.weights.iter().map(|w| w * w).sum();
+        if sum_sq <= 0.0 {
+            return 0.0;
+        }
+        (sum * sum) / sum_sq
+    }
+
     /// Rebuild a bank from snapshotted parts ([`Self::omegas`],
     /// [`Self::weights`], [`Self::norm_sigma`]) — the restore half of the
     /// `rfa::serve` snapshot surface. `√w_i` is recomputed; IEEE `sqrt`
@@ -412,6 +427,33 @@ mod tests {
             let g32 = bank.gram32(&xs, &xs).to_f64();
             assert!(g64.max_abs_diff(&g32) < 1e-3 * g64.frobenius_norm());
         }
+    }
+
+    #[test]
+    fn effective_sample_size_bounds() {
+        // Unweighted (isotropic) bank: every w_i = 1 → ESS = n exactly.
+        let iso = PrfEstimator::new(3, 20, Sampling::Isotropic);
+        let bank = FeatureBank::draw(&iso, &mut Pcg64::seed(907));
+        assert!((bank.effective_sample_size() - 20.0).abs() < 1e-12);
+
+        // Weighted bank: 1 ≤ ESS ≤ n, and a hand-built degenerate
+        // weight vector collapses toward 1.
+        let mut rng = Pcg64::seed(908);
+        let sigma = anisotropic_covariance(3, 0.8, 0.6, &mut rng);
+        let da = PrfEstimator::new(
+            3,
+            20,
+            Sampling::DataAware(MultivariateGaussian::new(sigma).unwrap()),
+        );
+        let ess = FeatureBank::draw(&da, &mut rng).effective_sample_size();
+        assert!(ess >= 1.0 && ess <= 20.0, "ess={ess}");
+
+        let skewed = FeatureBank::from_parts(
+            Matrix::from_vec(2, 1, vec![0.0, 0.0]),
+            vec![1.0, 1e-9],
+            None,
+        );
+        assert!((skewed.effective_sample_size() - 1.0).abs() < 1e-6);
     }
 
     #[test]

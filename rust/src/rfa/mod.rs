@@ -37,6 +37,11 @@
 //!   eviction-to-snapshot, a session-batched [`serve::BatchScheduler`]
 //!   fanning (session × head) work across workers, and bitwise-resumable
 //!   KV-state snapshots through the [`crate::checkpoint`] store.
+//! * [`obs`] (re-export of [`crate::obs`]) — zero-dependency serving
+//!   telemetry: counters/gauges/histograms, span timers, a structured
+//!   event ring, kernel-quality gauges (per-head ESS, Σ̂ anisotropy),
+//!   and Prometheus/JSON exporters — write-only from the hot path, so
+//!   max verbosity is bitwise-identical in outputs to disabled.
 //! * [`proposal`] — the closed-form optimal proposal of Theorem 3.2,
 //!   `Sigma* = (I + 2L)(I - 2L)^{-1}`, plus its validity condition.
 //! * [`variance`] — scalar-reference Monte-Carlo and closed-form
@@ -71,6 +76,10 @@ pub mod orthogonal;
 pub mod proposal;
 pub mod serve;
 pub mod variance;
+
+/// Serving observability lives at the crate root ([`crate::obs`]); this
+/// alias keeps the `rfa::obs` path working alongside `rfa::serve`.
+pub use crate::obs;
 
 pub use attention::{
     causal_linear_attention, linear_attention, prf_attention,

@@ -195,19 +195,60 @@
 //! schedules against a real flaky filesystem (production `FsStore`
 //! faults arrive whenever they arrive) — determinism is with respect to
 //! the schedule, not a guarantee about nature.
+//!
+//! # Observability and the determinism contract
+//!
+//! The whole stack is instrumented through [`crate::obs`]: the pool and
+//! scheduler share one [`crate::obs::ServeObs`]
+//! ([`session::SessionPool::obs`] / [`scheduler::BatchScheduler::obs`])
+//! holding always-on counters (eviction/restore churn, snapshot bytes
+//! and failures, quarantine transitions, requests/rows/ticks, resample
+//! epochs), span-timed latency histograms (tick, forward fan-out,
+//! snapshot IO, post-epoch kernel-quality recompute), pool gauges, the
+//! per-head kernel-quality gauges (importance-weight ESS, Σ̂ anisotropy,
+//! epoch count, frozen-epoch bytes), and — at full verbosity — a
+//! bounded structured event ring. Prometheus text and flat-JSON
+//! exporters read the shared registry.
+//!
+//! Telemetry is **write-only from the hot path**, which is how it
+//! coexists with every guarantee above:
+//!
+//! * no control flow reads a metric, gauge, or the ring — the degraded
+//!   flag, backoff clocks and budgets remain plain fields that telemetry
+//!   only mirrors;
+//! * wall-clock time appears solely *inside* histogram values (span
+//!   timers); nothing branches on it;
+//! * worker threads touch nothing but sharded counter cells — events,
+//!   gauges and metric registration happen on serial pool/scheduler
+//!   paths only. Resample epochs cross *inside* the worker fan-out, so
+//!   the serial paths diff each session's epoch counters afterwards
+//!   (`drain_epoch_telemetry`) instead of emitting from workers;
+//! * therefore a run at [`crate::obs::ObsLevel::Full`] is
+//!   bitwise-identical in its outputs to one at `Off`, and the event
+//!   sequence, deterministic histograms (batch sizes, request rows) and
+//!   counters are thread-count-invariant for a fixed workload and fault
+//!   schedule — all pinned by `rust/tests/rfa_obs.rs`.
+//!
+//! Verbosity comes from `RFA_OBS` (`off`/`basic`/`full`) by default, or
+//! explicitly via [`session::SessionPool::with_obs`]. `Off` still keeps
+//! the counters ([`session::PoolStats`] and [`store::HealthReport`] are
+//! views over them) at ~one relaxed `fetch_add` per event.
 
 pub mod scheduler;
 pub mod session;
 pub mod snapshot;
 pub mod store;
 
+pub use crate::obs::{ObsConfig, ObsLevel, ServeObs};
+
 pub use scheduler::{
     BatchScheduler, DrainOutcome, FailedStep, RetryPolicy, StepRequest,
     StepResponse,
 };
 pub use session::{
-    FrozenEpoch, HeadSlot, OnlineState, Precision, ResampleConfig,
-    ServeConfig, Session, SessionHeads, SessionPool, StepOutput,
+    FrozenEpoch, HeadSlot, OnlineState, PoolStats, Precision,
+    ResampleConfig, ServeConfig, Session, SessionHeads, SessionPool,
+    StepOutput,
 };
 pub use snapshot::{load_session, save_session};
 pub use store::{

@@ -29,10 +29,12 @@
 //! [`super`] module docs.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::linalg::{Mat, Scalar};
+use crate::obs::{EventKind, ServeObs};
 use crate::rfa::engine::Head;
 
 use super::session::{HeadSlot, SessionHeads, SessionPool, StepOutput};
@@ -233,6 +235,10 @@ pub struct BatchScheduler {
     quarantined: BTreeSet<u64>,
     /// Typed failure records awaiting [`Self::poll_failures`].
     failures: VecDeque<FailedStep>,
+    /// The pool's observability handle (same `Arc`): tick/forward spans,
+    /// batch/row histograms, quarantine counters and events. Write-only
+    /// — no scheduling decision reads it.
+    obs: Arc<ServeObs>,
 }
 
 impl BatchScheduler {
@@ -243,6 +249,7 @@ impl BatchScheduler {
     /// A scheduler with an explicit [`RetryPolicy`] (the default suits
     /// production; chaos tests shrink the windows).
     pub fn with_policy(pool: SessionPool, policy: RetryPolicy) -> Self {
+        let obs = pool.obs().clone();
         Self {
             pool,
             queues: BTreeMap::new(),
@@ -256,11 +263,18 @@ impl BatchScheduler {
             session_health: BTreeMap::new(),
             quarantined: BTreeSet::new(),
             failures: VecDeque::new(),
+            obs,
         }
     }
 
     pub fn pool(&self) -> &SessionPool {
         &self.pool
+    }
+
+    /// The serving stack's observability handle (shared with the pool):
+    /// registry, event ring, exporters.
+    pub fn obs(&self) -> &Arc<ServeObs> {
+        &self.obs
     }
 
     pub fn pool_mut(&mut self) -> &mut SessionPool {
@@ -316,6 +330,13 @@ impl BatchScheduler {
             "session {id} is not quarantined"
         );
         self.session_health.remove(&id);
+        self.obs.unquarantines.inc();
+        self.obs.event(EventKind::Unquarantine { session: id });
+        if self.obs.gauges_enabled() {
+            self.obs
+                .quarantined_sessions
+                .set(self.quarantined.len() as f64);
+        }
         Ok(())
     }
 
@@ -449,6 +470,11 @@ impl BatchScheduler {
     /// no request is ever lost on any path.
     pub fn tick(&mut self) -> Result<usize> {
         self.ticks += 1;
+        // Telemetry only: the `ticks` *field* above is the backoff clock
+        // control flow reads; the counter and span are write-only
+        // mirrors (the span records on every exit path when it drops).
+        self.obs.ticks.inc();
+        let _tick_span = self.obs.span(&self.obs.tick_ms);
         // Retry a deferred budget re-enforcement first, while nothing is
         // pinned. Still failing is still non-fatal — the pool simply
         // stays over budget until the snapshot dir heals.
@@ -502,7 +528,9 @@ impl BatchScheduler {
         // re-enforced below.
         let completed = runnable.len();
         if completed > 0 {
+            self.obs.observe_batch(completed);
             let responses = self.run_resident_batch(&runnable);
+            self.obs.requests_completed.add(responses.len() as u64);
             self.pending -= responses.len();
             self.responses.extend(responses);
             for (_, req) in &runnable {
@@ -531,6 +559,7 @@ impl BatchScheduler {
         if let Err(e) = self.pool.ensure_budget(&[]) {
             self.deferred_budget = Some(e);
         }
+        self.pool.refresh_gauges();
         Ok(completed)
     }
 
@@ -566,6 +595,16 @@ impl BatchScheduler {
         let streak = health.consecutive;
         self.session_health.remove(&sid);
         self.quarantined.insert(sid);
+        self.obs.quarantines.inc();
+        self.obs.event(EventKind::Quarantine {
+            session: sid,
+            failures: streak,
+        });
+        if self.obs.gauges_enabled() {
+            self.obs
+                .quarantined_sessions
+                .set(self.quarantined.len() as f64);
+        }
         self.pending -= 1;
         self.failures.push_back(FailedStep {
             session_id: sid,
@@ -607,6 +646,11 @@ impl BatchScheduler {
         // the once-per-session dispatch of the serve contract.
         let chunk = self.pool.cfg().chunk;
         let workers = self.pool.cfg().worker_count();
+        // Request-size telemetry on the serial path, before the fan-out.
+        for (_, req) in batch {
+            self.obs.observe_rows(req.rows());
+            self.obs.rows_served.add(req.rows() as u64);
+        }
         let sessions = self.pool.sessions_mut(&ids);
         let mut starts = Vec::with_capacity(batch.len());
         let mut jobs64: Vec<HeadJob<'_, f64>> = Vec::new();
@@ -627,12 +671,21 @@ impl BatchScheduler {
                 }
             }
         }
-        let outputs: Vec<StepOutput> = if jobs32.is_empty() {
-            fan_out(jobs64, workers, chunk, StepOutput::F64)
-        } else {
-            debug_assert!(jobs64.is_empty(), "pool precision is uniform");
-            fan_out(jobs32, workers, chunk, StepOutput::F32)
+        let outputs: Vec<StepOutput> = {
+            let _fwd = self.obs.span(&self.obs.forward_ms);
+            if jobs32.is_empty() {
+                fan_out(jobs64, workers, chunk, StepOutput::F64)
+            } else {
+                debug_assert!(jobs64.is_empty(), "pool precision is uniform");
+                fan_out(jobs32, workers, chunk, StepOutput::F32)
+            }
         };
+        // Epoch crossings happened inside the fan-out (on workers);
+        // surface them now, serially, in batch order — event sequence
+        // and gauge registration stay thread-count-invariant.
+        for session in self.pool.sessions_mut(&ids) {
+            session.drain_epoch_telemetry();
+        }
 
         // Reassemble responses in batch order.
         let mut outputs = outputs.into_iter();

@@ -17,10 +17,13 @@
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::linalg::{Mat, Matrix, Matrix32, Scalar};
+use crate::obs::serve::bank_anisotropy;
+use crate::obs::{EventKind, ObsConfig, ServeObs};
 use crate::rfa::engine::{draw_head_banks, CausalState, Head};
 use crate::rfa::estimators::PrfEstimator;
 use crate::rfa::features::FeatureBank;
@@ -471,6 +474,32 @@ fn fresh_slots<T: Scalar>(
         .collect()
 }
 
+/// Per-head kernel-quality readout for the obs gauges: importance-weight
+/// ESS, Σ̂ anisotropy, completed epochs, and resident bytes of the
+/// retained frozen epochs. Pure reads — called only from serial
+/// telemetry paths, never from the worker fan-out.
+fn slot_quality<T: Scalar>(
+    slot: &HeadSlot<T>,
+    dv: usize,
+) -> (f64, f64, u64, u64) {
+    const F64_BYTES: usize = std::mem::size_of::<f64>();
+    let frozen_bytes = slot.online.as_ref().map_or(0, |o| {
+        o.frozen
+            .iter()
+            .map(|fe| {
+                let n = fe.bank.n_features();
+                (bank_floats(&fe.bank) + n * dv + n) * F64_BYTES
+            })
+            .sum::<usize>()
+    }) as u64;
+    (
+        slot.bank.effective_sample_size(),
+        bank_anisotropy(&slot.bank),
+        slot.epoch(),
+        frozen_bytes,
+    )
+}
+
 /// Advance every slot by one request segment, serially, heads in order.
 fn step_slots<T: Scalar>(
     slots: &mut [HeadSlot<T>],
@@ -528,6 +557,13 @@ pub struct Session {
     dv: usize,
     resample: Option<ResampleConfig>,
     heads: SessionHeads,
+    /// Last epoch per head already surfaced to telemetry; epoch crossings
+    /// happen inside the worker fan-out, so the serial paths diff against
+    /// this to emit counters/events without touching worker code.
+    reported_epochs: Vec<u64>,
+    /// The pool's observability handle (attached by the pool at create
+    /// and restore). Write-only: nothing in the session reads it back.
+    obs: Option<Arc<ServeObs>>,
 }
 
 impl Session {
@@ -557,10 +593,23 @@ impl Session {
                 resample.as_ref(),
             )),
         };
-        Self { id, seed, position: 0, dv: cfg.dv, resample, heads }
+        let reported_epochs = vec![0; heads.len()];
+        Self {
+            id,
+            seed,
+            position: 0,
+            dv: cfg.dv,
+            resample,
+            heads,
+            reported_epochs,
+            obs: None,
+        }
     }
 
     /// Reassemble a session from restored parts (the snapshot path).
+    /// Epochs completed before the snapshot were already reported by the
+    /// pre-eviction incarnation, so telemetry resumes from the restored
+    /// epoch counters rather than re-emitting old boundary events.
     pub(crate) fn from_parts(
         id: u64,
         seed: u64,
@@ -569,7 +618,24 @@ impl Session {
         resample: Option<ResampleConfig>,
         heads: SessionHeads,
     ) -> Self {
-        Self { id, seed, position, dv, resample, heads }
+        let reported_epochs = match &heads {
+            SessionHeads::F64(slots) => {
+                slots.iter().map(HeadSlot::epoch).collect()
+            }
+            SessionHeads::F32(slots) => {
+                slots.iter().map(HeadSlot::epoch).collect()
+            }
+        };
+        Self {
+            id,
+            seed,
+            position,
+            dv,
+            resample,
+            heads,
+            reported_epochs,
+            obs: None,
+        }
     }
 
     pub fn id(&self) -> u64 {
@@ -624,6 +690,67 @@ impl Session {
         self.position += rows;
     }
 
+    /// Hook the session up to its pool's observability handle and publish
+    /// the initial per-head kernel-quality gauges. Serial paths only
+    /// (create and restore).
+    pub(crate) fn attach_obs(&mut self, obs: Arc<ServeObs>) {
+        if obs.gauges_enabled() {
+            for h in 0..self.heads.len() {
+                let (ess, aniso, epochs, frozen) = self.head_quality(h);
+                obs.set_head_gauges(self.id, h, ess, aniso, epochs, frozen);
+            }
+        }
+        self.obs = Some(obs);
+    }
+
+    fn head_quality(&self, h: usize) -> (f64, f64, u64, u64) {
+        match &self.heads {
+            SessionHeads::F64(slots) => slot_quality(&slots[h], self.dv),
+            SessionHeads::F32(slots) => slot_quality(&slots[h], self.dv),
+        }
+    }
+
+    /// Surface resample-epoch crossings that happened since the last
+    /// call: one counter bump + event per crossed boundary, then a
+    /// refresh of the changed heads' kernel-quality gauges (timed as the
+    /// `rfa_resample_ms` span). Epoch crossings occur inside the worker
+    /// fan-out; this diff runs on serial paths only (end of
+    /// [`Session::step`], end of a scheduler batch), which is what keeps
+    /// event order and gauge registration thread-count-invariant. Pure
+    /// reads of head state — outputs are unaffected (the write-only
+    /// rule).
+    pub(crate) fn drain_epoch_telemetry(&mut self) {
+        let Some(obs) = self.obs.clone() else {
+            return;
+        };
+        let epochs = self.head_epochs();
+        let mut crossed = Vec::new();
+        for (h, (&cur, reported)) in
+            epochs.iter().zip(&mut self.reported_epochs).enumerate()
+        {
+            if cur == *reported {
+                continue;
+            }
+            for e in *reported + 1..=cur {
+                obs.resample_epochs.inc();
+                obs.event(EventKind::ResampleEpoch {
+                    session: self.id,
+                    head: h,
+                    epoch: e,
+                });
+            }
+            *reported = cur;
+            crossed.push(h);
+        }
+        if !crossed.is_empty() && obs.gauges_enabled() {
+            let _span = obs.span(&obs.resample_ms);
+            for h in crossed {
+                let (ess, aniso, ep, frozen) = self.head_quality(h);
+                obs.set_head_gauges(self.id, h, ess, aniso, ep, frozen);
+            }
+        }
+    }
+
     /// Start one request of `rows` positions: bumps the position counter
     /// and hands out the head slots for the scheduler's fan-out. Returns
     /// the stream position of the request's first row.
@@ -666,11 +793,14 @@ impl Session {
                 .collect(),
         };
         self.advance(rows as u64);
+        self.drain_epoch_telemetry();
         out
     }
 }
 
-/// Eviction/restore counters, exposed for observability and tests.
+/// Eviction/restore counters — a cheap point-in-time view over the
+/// pool's [`ServeObs`] registry (the counters themselves live there, at
+/// every [`crate::obs::ObsLevel`]).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct PoolStats {
     /// Sessions written out to snapshots to stay under the budget.
@@ -697,19 +827,22 @@ pub struct SessionPool {
     /// (Eviction snapshots are a pool-private cache; durable archival
     /// goes through explicit [`super::save_session`] paths.)
     pool_tag: u64,
-    stats: PoolStats,
     /// The snapshot-IO backend; all durable traffic goes through it.
     store: Box<dyn SnapshotStore>,
     /// The last snapshot write failed and none has succeeded since.
     /// While set: eviction is suspended (residents overshoot the soft
     /// budget instead of risking data loss) and admission control
     /// rejects new sessions once resident bytes reach the budget.
+    /// Control flow reads this field — the obs `rfa_degraded` gauge only
+    /// mirrors it (the write-only rule).
     degraded: bool,
-    /// Cumulative failed store ops (writes, reads, non-NotFound removes).
-    snapshot_failures: u64,
     /// Snapshot files whose unlink failed; retried at the next
     /// eviction/close/heal so a flaky FS can't accrete files invisibly.
     orphans: BTreeSet<PathBuf>,
+    /// Observability: counters (always live — they back [`PoolStats`]
+    /// and [`HealthReport`]), spans/gauges/events per its configured
+    /// level. Shared with the scheduler and every session.
+    obs: Arc<ServeObs>,
 }
 
 impl SessionPool {
@@ -718,8 +851,20 @@ impl SessionPool {
     }
 
     /// A pool over an explicit snapshot backend — how the chaos suite
-    /// injects a [`super::store::FaultyStore`].
+    /// injects a [`super::store::FaultyStore`]. Observability verbosity
+    /// comes from `RFA_OBS`; use [`Self::with_obs`] to pin it.
     pub fn with_store(cfg: ServeConfig, store: Box<dyn SnapshotStore>) -> Self {
+        Self::with_obs(cfg, store, ObsConfig::from_env())
+    }
+
+    /// A pool with an explicit snapshot backend *and* observability
+    /// configuration — how the determinism tests run the same workload
+    /// at [`crate::obs::ObsLevel::Off`] and `Full` side by side.
+    pub fn with_obs(
+        cfg: ServeConfig,
+        store: Box<dyn SnapshotStore>,
+        obs_cfg: ObsConfig,
+    ) -> Self {
         static POOL_COUNTER: AtomicU64 = AtomicU64::new(0);
         Self {
             cfg,
@@ -729,11 +874,10 @@ impl SessionPool {
             clock: 0,
             next_id: 0,
             pool_tag: POOL_COUNTER.fetch_add(1, Ordering::Relaxed),
-            stats: PoolStats::default(),
             store,
             degraded: false,
-            snapshot_failures: 0,
             orphans: BTreeSet::new(),
+            obs: ServeObs::new(obs_cfg),
         }
     }
 
@@ -741,8 +885,16 @@ impl SessionPool {
         &self.cfg
     }
 
+    /// The pool's observability handle: registry, event ring, exporters.
+    pub fn obs(&self) -> &Arc<ServeObs> {
+        &self.obs
+    }
+
     pub fn stats(&self) -> PoolStats {
-        self.stats
+        PoolStats {
+            evictions: self.obs.evictions.get(),
+            restores: self.obs.restores.get(),
+        }
     }
 
     /// Pool-level health: degraded flag, failure counter, orphan count.
@@ -753,7 +905,7 @@ impl SessionPool {
             degraded: self.degraded,
             quarantined: 0,
             deferred_budget: false,
-            snapshot_failures: self.snapshot_failures,
+            snapshot_failures: self.obs.snapshot_failures.get(),
             orphaned_snapshots: self.orphans.len(),
         }
     }
@@ -763,36 +915,67 @@ impl SessionPool {
     }
 
     // Store-op wrappers: every outcome feeds the health counters, and a
-    // write success is the (only) signal that clears degraded mode.
+    // write success is the (only) signal that clears degraded mode. The
+    // obs layer sees the same outcomes — bytes/failure counters, the
+    // snapshot-IO span, degraded-edge and store-fault events — but is
+    // never consulted for the decision (write-only rule).
     fn store_write(
         &mut self,
         path: &Path,
         bytes: &[u8],
     ) -> Result<(), StoreError> {
+        let _io = self.obs.span(&self.obs.snapshot_io_ms);
         match self.store.write(path, bytes) {
             Ok(()) => {
+                self.obs.snapshot_bytes_written.add(bytes.len() as u64);
+                if self.degraded {
+                    self.obs.event(EventKind::DegradedExit);
+                }
                 self.degraded = false;
                 Ok(())
             }
             Err(e) => {
+                self.obs.snapshot_failures.inc();
+                self.obs.event(EventKind::StoreFault {
+                    op: "write",
+                    path: path.display().to_string(),
+                });
+                if !self.degraded {
+                    self.obs.degraded_transitions.inc();
+                    self.obs.event(EventKind::DegradedEnter);
+                }
                 self.degraded = true;
-                self.snapshot_failures += 1;
                 Err(e)
             }
         }
     }
 
     fn store_read(&mut self, path: &Path) -> Result<Vec<u8>, StoreError> {
-        self.store.read(path).map_err(|e| {
-            self.snapshot_failures += 1;
-            e
-        })
+        let _io = self.obs.span(&self.obs.snapshot_io_ms);
+        match self.store.read(path) {
+            Ok(bytes) => {
+                self.obs.snapshot_bytes_read.add(bytes.len() as u64);
+                Ok(bytes)
+            }
+            Err(e) => {
+                self.obs.snapshot_failures.inc();
+                self.obs.event(EventKind::StoreFault {
+                    op: "read",
+                    path: path.display().to_string(),
+                });
+                Err(e)
+            }
+        }
     }
 
     fn store_remove(&mut self, path: &Path) -> Result<(), StoreError> {
         self.store.remove(path).map_err(|e| {
             if !e.is_not_found() {
-                self.snapshot_failures += 1;
+                self.obs.snapshot_failures.inc();
+                self.obs.event(EventKind::StoreFault {
+                    op: "remove",
+                    path: path.display().to_string(),
+                });
             }
             e
         })
@@ -806,15 +989,22 @@ impl SessionPool {
         }
         let paths: Vec<PathBuf> = self.orphans.iter().cloned().collect();
         for path in paths {
-            match self.store_remove(&path) {
+            self.obs.orphan_retries.inc();
+            let recovered = match self.store_remove(&path) {
                 Ok(()) => {
                     self.orphans.remove(&path);
+                    true
                 }
                 Err(e) if e.is_not_found() => {
                     self.orphans.remove(&path);
+                    true
                 }
-                Err(_) => {}
-            }
+                Err(_) => false,
+            };
+            self.obs.event(EventKind::OrphanRetry {
+                path: path.display().to_string(),
+                recovered,
+            });
         }
     }
 
@@ -843,7 +1033,22 @@ impl SessionPool {
                 }
             }
         }
+        self.refresh_gauges();
         Ok(())
+    }
+
+    /// Republish the pool-level gauges (resident/evicted counts, bytes,
+    /// orphan count, degraded mirror). Called from serial lifecycle
+    /// paths; a no-op below [`crate::obs::ObsLevel::Basic`].
+    pub(crate) fn refresh_gauges(&self) {
+        if !self.obs.gauges_enabled() {
+            return;
+        }
+        self.obs.resident_sessions.set(self.resident.len() as f64);
+        self.obs.evicted_sessions.set(self.evicted.len() as f64);
+        self.obs.resident_bytes.set(self.resident_bytes() as f64);
+        self.obs.orphaned_snapshots.set(self.orphans.len() as f64);
+        self.obs.degraded.set(if self.degraded { 1.0 } else { 0.0 });
     }
 
     /// Allocate an id and create a fresh session for `seed`, evicting
@@ -872,7 +1077,8 @@ impl SessionPool {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let session = Session::new(id, seed, &self.cfg);
+        let mut session = Session::new(id, seed, &self.cfg);
+        session.attach_obs(self.obs.clone());
         self.resident.insert(id, session);
         self.touch(id);
         if !self.degraded {
@@ -884,6 +1090,7 @@ impl SessionPool {
                 return Err(e);
             }
         }
+        self.refresh_gauges();
         Ok(id)
     }
 
@@ -944,17 +1151,23 @@ impl SessionPool {
         let bytes = self
             .store_read(&path)
             .map_err(|e| e.context(format!("faulting in session {id}")))?;
-        let session = match restored_session(&self.cfg, id, &path, &bytes) {
+        let mut session = match restored_session(&self.cfg, id, &path, &bytes)
+        {
             Ok(s) => s,
             Err(e) => {
                 // Parse/validation failures are persistent: the bytes on
                 // disk will not get better by retrying.
-                self.snapshot_failures += 1;
+                self.obs.snapshot_failures.inc();
+                self.obs.event(EventKind::StoreFault {
+                    op: "decode",
+                    path: path.display().to_string(),
+                });
                 return Err(StoreError::persistent(format!(
                     "faulting in session {id}: {e:#}"
                 )));
             }
         };
+        session.attach_obs(self.obs.clone());
         // The snapshot is consumed: the resident session is now the only
         // truth, so a stale file can never shadow newer state. A failed
         // unlink is recorded and retried later, never silently dropped.
@@ -965,8 +1178,13 @@ impl SessionPool {
             }
         }
         self.resident.insert(id, session);
-        self.stats.restores += 1;
+        self.obs.restores.inc();
+        self.obs.event(EventKind::Restore {
+            session: id,
+            bytes: bytes.len() as u64,
+        });
         self.touch(id);
+        self.refresh_gauges();
         Ok(())
     }
 
@@ -986,7 +1204,12 @@ impl SessionPool {
         self.resident.remove(&id);
         self.evicted.insert(id, path);
         self.last_used.remove(&id);
-        self.stats.evictions += 1;
+        self.obs.evictions.inc();
+        self.obs.event(EventKind::Eviction {
+            session: id,
+            bytes: bytes.len() as u64,
+        });
+        self.refresh_gauges();
         Ok(())
     }
 
@@ -1009,9 +1232,11 @@ impl SessionPool {
                     self.orphans.insert(path);
                 }
             }
+            self.refresh_gauges();
             return Ok(());
         }
         ensure!(was_resident, "no session with id {id}");
+        self.refresh_gauges();
         Ok(())
     }
 

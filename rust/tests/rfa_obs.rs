@@ -1,0 +1,498 @@
+//! Observability determinism suite: pins the write-only contract of
+//! `crate::obs` against the full serving stack (see "Observability and
+//! the determinism contract" in the `rfa/serve` module docs):
+//!
+//! 1. **Obs never changes outputs.** The same workload (resampling,
+//!    eviction churn) at maximum verbosity is bitwise-identical in its
+//!    responses to the same workload with obs disabled — across worker
+//!    thread counts and both precisions.
+//! 2. **Telemetry artifacts are thread-count-invariant.** For a fixed
+//!    workload and scripted fault schedule: the normalized event-ring
+//!    sequence, the deterministic histograms (batch sizes, request
+//!    rows), the latency histograms' *counts* (values are wall-clock,
+//!    counts are schedule), and every counter agree across thread
+//!    counts.
+//! 3. **The exporters are byte-stable** — a golden test pins the
+//!    Prometheus text exposition exactly.
+//!
+//! Plus: `PoolStats`/snapshot-byte counters as registry views, the
+//! quarantine/unquarantine counter+event pair, and the per-head
+//! kernel-quality gauges (ESS, Σ̂ anisotropy, epochs, frozen bytes)
+//! after real resample epochs.
+
+use std::path::PathBuf;
+
+use darkformer::linalg::Matrix;
+use darkformer::obs::{
+    prometheus_text, Event, EventKind, ObsConfig, Registry,
+};
+use darkformer::rfa::engine::Head;
+use darkformer::rfa::estimators::Sampling;
+use darkformer::rfa::serve::{
+    BatchScheduler, Fault, FaultRule, FaultyStore, FsStore, Precision,
+    ResampleConfig, RetryPolicy, ServeConfig, SessionPool, StepRequest,
+    StepResponse, StoreOp,
+};
+use darkformer::rfa::PrfEstimator;
+use darkformer::rng::{GaussianExt, Pcg64};
+
+const D: usize = 4;
+const M: usize = 16;
+const N_HEADS: usize = 2;
+const DV: usize = 3;
+const CHUNK: usize = 8;
+const N_REQUESTS: usize = 4;
+const L: usize = CHUNK * N_REQUESTS;
+/// Resample epoch length: two boundaries inside every L-position stream.
+const K_EPOCH: u64 = 16;
+
+const SESSION_SEEDS: [u64; 3] = [101, 202, 303];
+
+fn snapshot_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rfa_obs_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg(
+    precision: Precision,
+    threads: usize,
+    memory_budget: usize,
+    dir: PathBuf,
+) -> ServeConfig {
+    ServeConfig {
+        est: PrfEstimator::new(D, M, Sampling::Isotropic),
+        n_heads: N_HEADS,
+        dv: DV,
+        precision,
+        chunk: CHUNK,
+        threads,
+        memory_budget,
+        snapshot_dir: dir,
+        resample: Some(ResampleConfig::every(K_EPOCH)),
+    }
+}
+
+fn rows(l: usize, d: usize, scale: f64, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..l)
+        .map(|_| rng.gaussian_vec(d).iter().map(|x| scale * x).collect())
+        .collect()
+}
+
+fn stream_inputs(input_seed: u64) -> Vec<Head> {
+    let mut rng = Pcg64::seed(input_seed);
+    (0..N_HEADS)
+        .map(|_| Head {
+            q: rows(L, D, 0.3, &mut rng),
+            k: rows(L, D, 0.3, &mut rng),
+            v: Matrix::from_rows(&rows(L, DV, 1.0, &mut rng)),
+        })
+        .collect()
+}
+
+fn slice_heads(heads: &[Head], b: usize, e: usize) -> Vec<Head> {
+    heads
+        .iter()
+        .map(|h| Head {
+            q: h.q[b..e].to_vec(),
+            k: h.k[b..e].to_vec(),
+            v: h.v.row_block(b, e),
+        })
+        .collect()
+}
+
+/// Resident bytes of one fresh session — the one-session budget every
+/// churn workload uses (so eviction/restore traffic is guaranteed).
+fn one_session_bytes(precision: Precision, tag: &str) -> usize {
+    let dir = snapshot_dir(tag);
+    let mut pool = SessionPool::with_obs(
+        cfg(precision, 1, 0, dir),
+        Box::new(FsStore),
+        ObsConfig::off(),
+    );
+    let id = pool.create_session(1).unwrap();
+    pool.session_mut(id).unwrap().state_bytes()
+}
+
+fn tight_policy() -> RetryPolicy {
+    RetryPolicy {
+        quarantine_persistent: 2,
+        quarantine_any: 6,
+        backoff_base: 1,
+        backoff_cap: 2,
+    }
+}
+
+struct ObsRun {
+    sched: BatchScheduler,
+    ids: Vec<u64>,
+    responses: Vec<StepResponse>,
+}
+
+/// Drive the three-session, four-segment resampling workload through a
+/// one-session-budget pool (guaranteed eviction/restore churn) with the
+/// given obs config and scripted fault schedule; drains to idle and
+/// asserts the schedule quarantined nothing (use transient-only rules).
+fn run_workload(
+    precision: Precision,
+    threads: usize,
+    obs_cfg: ObsConfig,
+    rules: Vec<FaultRule>,
+    tag: &str,
+) -> ObsRun {
+    let budget = one_session_bytes(precision, &format!("{tag}_probe"));
+    let dir = snapshot_dir(tag);
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_obs(
+        cfg(precision, threads, budget, dir),
+        Box::new(store),
+        obs_cfg,
+    );
+    let ids: Vec<u64> = SESSION_SEEDS
+        .iter()
+        .map(|s| pool.create_session(*s).unwrap())
+        .collect();
+    // Arm the schedule only after the sessions exist, so scripted op
+    // counts start at the workload's start (as the chaos suite does).
+    handle.script(rules);
+    let mut sched = BatchScheduler::with_policy(pool, tight_policy());
+    let streams: Vec<Vec<Head>> =
+        (0..ids.len() as u64).map(|s| stream_inputs(7000 + s)).collect();
+    for r in 0..N_REQUESTS {
+        for (id, stream) in ids.iter().zip(&streams) {
+            let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+            sched.submit(StepRequest { session_id: *id, heads }).unwrap();
+        }
+    }
+    let outcome = sched.run_until_idle();
+    assert!(outcome.error.is_none(), "{tag}: {:?}", outcome.error);
+    assert!(
+        outcome.failures.is_empty(),
+        "{tag}: this workload's schedules must not quarantine"
+    );
+    ObsRun { sched, ids, responses: outcome.responses }
+}
+
+/// Responses flattened to exact bits, in completion order (f32 outputs
+/// widen exactly, so f64 bit equality is storage bit equality).
+fn response_bits(
+    responses: &[StepResponse],
+) -> Vec<(u64, u64, u64, Vec<u64>)> {
+    responses
+        .iter()
+        .map(|r| {
+            let bits: Vec<u64> = r
+                .outputs
+                .iter()
+                .flat_map(|o| {
+                    o.to_f64().data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                })
+                .collect();
+            (r.session_id, r.seq, r.start_position, bits)
+        })
+        .collect()
+}
+
+/// Event sequence with pool-unique path prefixes stripped (each run has
+/// its own pool tag and snapshot dir), leaving the schedule-relevant
+/// identity only.
+fn normalize_events(events: &[Event]) -> Vec<String> {
+    fn norm_path(path: &str) -> String {
+        let name = std::path::Path::new(path)
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        name.split_once("-session-")
+            .map(|(_, s)| format!("session-{s}"))
+            .unwrap_or_else(|| "probe".to_string())
+    }
+    events
+        .iter()
+        .map(|e| match &e.kind {
+            EventKind::StoreFault { op, path } => {
+                format!("store-fault op={op} path={}", norm_path(path))
+            }
+            EventKind::OrphanRetry { path, recovered } => format!(
+                "orphan-retry recovered={recovered} path={}",
+                norm_path(path)
+            ),
+            other => format!("{other}"),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- tests
+
+/// Property 1: obs at maximum verbosity changes no output bits relative
+/// to obs disabled — across thread counts and precisions, on a workload
+/// with resample epochs and eviction/restore churn.
+#[test]
+fn obs_full_outputs_bitwise_identical_to_off() {
+    for precision in [Precision::F64, Precision::F32] {
+        let ptag = match precision {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        };
+        for threads in [1usize, 4] {
+            let off = run_workload(
+                precision,
+                threads,
+                ObsConfig::off(),
+                Vec::new(),
+                &format!("bits_off_{ptag}_t{threads}"),
+            );
+            let full = run_workload(
+                precision,
+                threads,
+                ObsConfig::full(),
+                Vec::new(),
+                &format!("bits_full_{ptag}_t{threads}"),
+            );
+            assert_eq!(off.ids, full.ids);
+            assert_eq!(
+                response_bits(&off.responses),
+                response_bits(&full.responses),
+                "{ptag}/threads={threads}: obs level changed output bits"
+            );
+            // And the obs run did collect real telemetry.
+            let obs = full.sched.obs();
+            assert!(obs.evictions.get() > 0 && obs.restores.get() > 0);
+            assert!(obs.resample_epochs.get() > 0);
+        }
+    }
+}
+
+/// Property 2: for a fixed scripted fault schedule, the normalized event
+/// sequence, the deterministic histograms' bucket counts, the latency
+/// histograms' counts, and every counter are identical across worker
+/// thread counts.
+#[test]
+fn telemetry_artifacts_are_thread_count_invariant() {
+    // Transient blips on reads and writes: enough to fire store-fault,
+    // degraded-enter/exit and retry machinery without quarantining.
+    let rules = || {
+        vec![
+            FaultRule::on(StoreOp::Read, Fault::Transient).skip(1).fires(2),
+            FaultRule::on(StoreOp::Write, Fault::Transient).skip(4).fires(1),
+        ]
+    };
+    let collect = |threads: usize| {
+        let run = run_workload(
+            Precision::F32,
+            threads,
+            ObsConfig::full(),
+            rules(),
+            &format!("invariant_t{threads}"),
+        );
+        let obs = run.sched.obs().clone();
+        let counters: Vec<(String, u64)> = [
+            ("evictions", obs.evictions.get()),
+            ("restores", obs.restores.get()),
+            ("bytes_written", obs.snapshot_bytes_written.get()),
+            ("bytes_read", obs.snapshot_bytes_read.get()),
+            ("failures", obs.snapshot_failures.get()),
+            ("degraded_transitions", obs.degraded_transitions.get()),
+            ("requests", obs.requests_completed.get()),
+            ("rows", obs.rows_served.get()),
+            ("ticks", obs.ticks.get()),
+            ("epochs", obs.resample_epochs.get()),
+        ]
+        .map(|(k, v)| (k.to_string(), v))
+        .to_vec();
+        let latency_counts = vec![
+            obs.tick_ms.count(),
+            obs.forward_ms.count(),
+            obs.snapshot_io_ms.count(),
+            obs.resample_ms.count(),
+        ];
+        (
+            response_bits(&run.responses),
+            normalize_events(&obs.drain_events()),
+            obs.batch_sessions.bucket_counts(),
+            obs.request_rows.bucket_counts(),
+            latency_counts,
+            counters,
+        )
+    };
+    let (bits1, events1, batch1, rows1, lat1, counters1) = collect(1);
+    let (bits4, events4, batch4, rows4, lat4, counters4) = collect(4);
+    assert_eq!(bits1, bits4, "outputs moved with thread count");
+    assert_eq!(events1, events4, "event sequence moved with thread count");
+    assert_eq!(batch1, batch4, "batch-size histogram moved");
+    assert_eq!(rows1, rows4, "request-rows histogram moved");
+    assert_eq!(lat1, lat4, "latency histogram counts moved");
+    assert_eq!(counters1, counters4, "counters moved with thread count");
+
+    // The schedule actually produced the signals this test is about.
+    assert!(events1.iter().any(|e| e.starts_with("eviction")));
+    assert!(events1.iter().any(|e| e.starts_with("restore")));
+    assert!(events1.iter().any(|e| e.starts_with("resample-epoch")));
+    assert!(events1.iter().any(|e| e.starts_with("store-fault")));
+    assert!(events1.iter().any(|e| e.starts_with("degraded-enter")));
+    assert!(
+        counters1.iter().any(|(k, v)| k == "failures" && *v >= 3),
+        "the scripted faults must be counted: {counters1:?}"
+    );
+}
+
+/// Property 3: the Prometheus text exposition is pinned byte-for-byte.
+#[test]
+fn prometheus_exporter_golden() {
+    let reg = Registry::new();
+    reg.counter("rfa_test_total", "A test counter").add(3);
+    reg.gauge("rfa_test_gauge", "A test gauge").set(2.5);
+    reg.gauge_labeled(
+        "rfa_head_ess",
+        "session=\"0\",head=\"1\"".to_string(),
+        "Effective sample size",
+    )
+    .set(12.0);
+    let h = reg.histogram("rfa_test_ms", "A test histogram", &[1.0, 2.0]);
+    h.observe(0.5);
+    h.observe(1.5);
+    h.observe(5.0);
+    let expected = "\
+# HELP rfa_test_total A test counter
+# TYPE rfa_test_total counter
+rfa_test_total 3
+# HELP rfa_test_gauge A test gauge
+# TYPE rfa_test_gauge gauge
+rfa_test_gauge 2.5
+# HELP rfa_head_ess Effective sample size
+# TYPE rfa_head_ess gauge
+rfa_head_ess{session=\"0\",head=\"1\"} 12
+# HELP rfa_test_ms A test histogram
+# TYPE rfa_test_ms histogram
+rfa_test_ms_bucket{le=\"1\"} 1
+rfa_test_ms_bucket{le=\"2\"} 2
+rfa_test_ms_bucket{le=\"+Inf\"} 3
+rfa_test_ms_sum 7
+rfa_test_ms_count 3
+";
+    assert_eq!(prometheus_text(&reg), expected);
+}
+
+/// `PoolStats` is a view over the registry, the snapshot byte counters
+/// track real traffic, and quarantine/unquarantine transitions are
+/// counted and ring-logged.
+#[test]
+fn pool_stats_view_bytes_and_quarantine_counters() {
+    let budget = one_session_bytes(Precision::F64, "quar_probe");
+    let dir = snapshot_dir("quar");
+    let store = FaultyStore::new(Box::new(FsStore), Vec::new());
+    let handle = store.handle();
+    let mut pool = SessionPool::with_obs(
+        cfg(Precision::F64, 1, budget, dir),
+        Box::new(store),
+        ObsConfig::full(),
+    );
+    let ids: Vec<u64> = SESSION_SEEDS
+        .iter()
+        .map(|s| pool.create_session(*s).unwrap())
+        .collect();
+    // Session 0's snapshot reads fail persistently: the scheduler must
+    // quarantine it while the other two keep serving.
+    handle.script(vec![FaultRule::on(StoreOp::Read, Fault::Persistent)
+        .on_path(format!("session-{}.dkft", ids[0]))]);
+    let mut sched = BatchScheduler::with_policy(pool, tight_policy());
+    let streams: Vec<Vec<Head>> =
+        (0..ids.len() as u64).map(|s| stream_inputs(8000 + s)).collect();
+    for r in 0..2 {
+        for (id, stream) in ids.iter().zip(&streams) {
+            let heads = slice_heads(stream, r * CHUNK, (r + 1) * CHUNK);
+            sched.submit(StepRequest { session_id: *id, heads }).unwrap();
+        }
+    }
+    let outcome = sched.run_until_idle();
+    assert!(outcome.error.is_none());
+    assert_eq!(sched.quarantined_sessions(), vec![ids[0]]);
+
+    let obs = sched.obs().clone();
+    let stats = sched.pool().stats();
+    assert_eq!(stats.evictions, obs.evictions.get());
+    assert_eq!(stats.restores, obs.restores.get());
+    assert!(stats.evictions > 0 && stats.restores > 0);
+    assert!(obs.snapshot_bytes_written.get() > 0, "writes must be counted");
+    assert!(obs.snapshot_bytes_read.get() > 0, "reads must be counted");
+    assert_eq!(
+        sched.health().snapshot_failures,
+        obs.snapshot_failures.get(),
+        "HealthReport reads the same counter"
+    );
+    assert_eq!(obs.quarantines.get(), 1);
+    assert_eq!(obs.unquarantines.get(), 0);
+
+    sched.unquarantine(ids[0]).unwrap();
+    assert_eq!(obs.unquarantines.get(), 1);
+
+    let events = obs.drain_events();
+    assert!(events.iter().any(|e| matches!(
+        e.kind,
+        EventKind::Quarantine { session, .. } if session == ids[0]
+    )));
+    assert!(events.iter().any(|e| matches!(
+        e.kind,
+        EventKind::Unquarantine { session } if session == ids[0]
+    )));
+}
+
+/// The kernel-quality gauges carry real values after resample epochs:
+/// per-head ESS in (0, m], nonnegative Σ̂ anisotropy, the exact epoch
+/// count, and nonzero frozen-epoch bytes — plus one ring event and one
+/// counter bump per crossed boundary.
+#[test]
+fn kernel_quality_gauges_after_resampling() {
+    let dir = snapshot_dir("quality");
+    let mut pool = SessionPool::with_obs(
+        cfg(Precision::F64, 1, 0, dir),
+        Box::new(FsStore),
+        ObsConfig::full(),
+    );
+    let id = pool.create_session(7).unwrap();
+    let stream = stream_inputs(42);
+    for r in 0..N_REQUESTS {
+        let heads = slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK);
+        pool.session_mut(id).unwrap().step(&heads, CHUNK);
+    }
+    // L = 32 positions over K = 16 → exactly 2 epochs per head.
+    let expected_epochs = (L as u64 / K_EPOCH) * N_HEADS as u64;
+    let obs = pool.obs().clone();
+    assert_eq!(obs.resample_epochs.get(), expected_epochs);
+
+    let reg = obs.registry();
+    let ess = reg.gauge_family_values("rfa_head_ess");
+    assert_eq!(ess.len(), N_HEADS, "one ESS gauge per head");
+    assert!(
+        ess.iter().all(|&v| v > 0.0 && v <= M as f64),
+        "ESS must lie in (0, m]: {ess:?}"
+    );
+    let aniso = reg.gauge_family_values("rfa_head_sigma_anisotropy");
+    assert_eq!(aniso.len(), N_HEADS);
+    assert!(aniso.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    let epochs = reg.gauge_family_values("rfa_head_epochs");
+    assert!(
+        epochs.iter().all(|&v| v == (L as u64 / K_EPOCH) as f64),
+        "epoch gauges must match the boundary count: {epochs:?}"
+    );
+    let frozen = reg.gauge_family_values("rfa_head_frozen_bytes");
+    assert!(
+        frozen.iter().all(|&v| v > 0.0),
+        "frozen epochs must report resident bytes: {frozen:?}"
+    );
+    assert!(obs.ess_mean() > 0.0);
+
+    let epoch_events: Vec<Event> = obs
+        .drain_events()
+        .into_iter()
+        .filter(|e| matches!(e.kind, EventKind::ResampleEpoch { .. }))
+        .collect();
+    assert_eq!(epoch_events.len(), expected_epochs as usize);
+    // Events arrive in serial drain order: heads in order per step.
+    assert_eq!(
+        epoch_events[0].kind,
+        EventKind::ResampleEpoch { session: id, head: 0, epoch: 1 }
+    );
+}
