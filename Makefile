@@ -24,14 +24,19 @@ lint: fmt clippy
 
 # Fault-injection suite for rfa::serve (rust/tests/rfa_chaos.rs), run at
 # both ends of the SIMD dispatch — chaos schedules, quarantine membership
-# and post-heal bitwise recovery must be ISA-independent — and again at
+# and post-heal bitwise recovery must be ISA-independent — again at
 # full observability verbosity: max-verbosity telemetry must not change
-# one bit of any chaos outcome (the rfa::obs write-only rule), and the
-# obs suite itself (rust/tests/rfa_obs.rs) pins that contract directly.
+# one bit of any chaos outcome (the rfa::obs write-only rule), with the
+# obs suite itself (rust/tests/rfa_obs.rs) pinning that contract
+# directly — and once more with aggressive online resampling + frozen-
+# epoch compaction, so fault injection covers the epoch state machine
+# (maintained Cholesky factor, frozen ring, merge counter) through
+# eviction, fault-in, quarantine and replay.
 chaos:
 	$(CARGO) test -q --test rfa_chaos
 	RFA_SIMD=scalar $(CARGO) test -q --test rfa_chaos
 	RFA_OBS=full $(CARGO) test -q --test rfa_chaos
+	RFA_CHAOS_RESAMPLE=aggressive $(CARGO) test -q --test rfa_chaos
 	$(CARGO) test -q --test rfa_obs
 
 fmt:

@@ -21,10 +21,19 @@
 //! machinery on the same workload),
 //! `simd_vs_scalar_serve_s8_{f64,f32}` (one scheduling round under the
 //! forced-scalar fallback vs the dispatched SIMD kernels, with the
-//! effective ISA recorded as `active_isa`), and the observability
+//! effective ISA recorded as `active_isa`), the observability
 //! readout: `tick_latency_p50_ms`/`tick_latency_p99_ms` (from the obs
 //! registry's tick histogram over a resampling 8-session round) with
-//! `ess_mean` (mean per-head importance-weight effective sample size).
+//! `ess_mean` (mean per-head importance-weight effective sample size),
+//! and the epoch-churn triplet for long-lived resampling sessions:
+//! `resample_epoch_cost_ms` vs `resample_epoch_cost_ms_scratch` (one
+//! epoch's factor maintenance — streamed rank-1 updates plus the O(d²)
+//! boundary scale — against the from-scratch materialize+refactorize
+//! O(d³) boundary it replaces, with `resample_epoch_speedup` as the
+//! ratio), `frozen_readout_overhead` (wall-clock of an epoch-churn
+//! stream carrying 8 frozen epochs vs 1), and `compaction_bytes_saved`
+//! (resident session bytes with frozen-epoch compaction off vs on at
+//! window 2, after the frozen tail has filled).
 //!
 //! Run: `cargo bench --bench serving`.
 
@@ -34,12 +43,12 @@ use darkformer::obs::{ObsConfig, ObsLevel};
 use darkformer::rfa::engine::Head;
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::gaussian::{
-    anisotropic_covariance, MultivariateGaussian,
+    anisotropic_covariance, MultivariateGaussian, SecondMomentAccumulator,
 };
 use darkformer::rfa::serve::{
-    BatchScheduler, Fault, FaultRule, FaultyStore, FsStore, Precision,
-    ResampleConfig, SeededFaults, ServeConfig, SessionPool, StepRequest,
-    StoreOp,
+    BatchScheduler, CompactionConfig, Fault, FaultRule, FaultyStore,
+    FsStore, Precision, ResampleConfig, SeededFaults, ServeConfig,
+    SessionPool, StepRequest, StoreOp,
 };
 use darkformer::rfa::PrfEstimator;
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -257,6 +266,37 @@ fn bench_round(
     })
 }
 
+// ------------------------------------------------ epoch-churn scenario
+
+/// Boundary-factorization microbench shape: dimension, epoch length
+/// (positions between boundaries), and how many consecutive epochs one
+/// timed pass simulates. `CHOL_K << CHOL_D` is the regime the
+/// incremental path is built for — the tighter the epochs, the more the
+/// O(d³) refactorization dominates the from-scratch arm.
+const CHOL_D: usize = 64;
+const CHOL_K: usize = 8;
+const CHOL_EPOCHS: usize = 32;
+const CHOL_LAM: f64 = 0.05;
+
+/// Stream `rounds` copies of one pre-generated segment through a single
+/// long-lived resampling session and return its resident bytes at the
+/// end. Timing callers wrap the whole run; pool construction and input
+/// generation are identical across arms, so ratios isolate the
+/// per-position cost under test.
+fn churn_run(rc: &ResampleConfig, rounds: usize) -> usize {
+    let mut cfg = serve_config(Precision::F64, 1, 0);
+    cfg.resample = Some(rc.clone());
+    let mut pool = SessionPool::new(cfg);
+    let id = pool.create_session(0xE9).unwrap();
+    let inputs = session_inputs(1).remove(0);
+    for _ in 0..rounds {
+        std::hint::black_box(
+            pool.session_mut(id).unwrap().step(&inputs, CHUNK),
+        );
+    }
+    pool.session_mut(id).unwrap().state_bytes()
+}
+
 fn main() {
     let mut suite = BenchSuite::new("serving");
     let cores = std::thread::available_parallelism()
@@ -472,6 +512,7 @@ fn main() {
         epoch_positions: DRIFT_SEG as u64,
         max_epochs: DRIFT_ROUNDS,
         shrinkage: 0.05,
+        compaction: None,
     };
     let (cov_a, cov_b) = drift_covariances();
     let stream = drift_stream(&cov_a, &cov_b);
@@ -615,6 +656,121 @@ fn main() {
         "\nobs readout (8 sessions, resample K=64): tick p50 \
          {tick_p50:.3} ms, p99 {tick_p99:.3} ms, ess_mean {ess_mean:.2} \
          of m={M}"
+    );
+
+    // Epoch-churn cost structure of long-lived resampling sessions.
+    //
+    // (a) Boundary factorization A/B at the linalg level, from the same
+    // moment stream: the incremental arm folds each epoch's K keys into
+    // the maintained factor as √(1-λ)-scaled rank-1 updates (O(d²)
+    // each, paid during stepping) and finishes the boundary with an
+    // O(d²) scale; the from-scratch arm it replaces materializes the
+    // floored moment and refactorizes O(d³) at every boundary. Moment
+    // accumulation runs on both arms (common cost), so the ratio is the
+    // factorization work alone.
+    let (chol_acc, chol_l, chol_keys) = {
+        let mut rng = Pcg64::seed(0xCAB1E);
+        let mut acc = SecondMomentAccumulator::new(CHOL_D);
+        for _ in 0..3 * CHOL_D {
+            acc.accumulate(&rng.gaussian_vec(CHOL_D));
+        }
+        let mut u = acc.sum().scale(1.0 - CHOL_LAM);
+        for i in 0..CHOL_D {
+            u[(i, i)] += CHOL_LAM * acc.count() as f64;
+        }
+        let l = u.cholesky().expect("floored moment is SPD");
+        let keys: Vec<Vec<f64>> = (0..CHOL_EPOCHS * CHOL_K)
+            .map(|_| rng.gaussian_vec(CHOL_D))
+            .collect();
+        (acc, l, keys)
+    };
+    let scratch_ms = suite.bench("chol/boundary/scratch", 1, 5, || {
+        let mut acc = chol_acc.clone();
+        for e in 0..CHOL_EPOCHS {
+            for x in &chol_keys[e * CHOL_K..(e + 1) * CHOL_K] {
+                acc.accumulate(x);
+            }
+            let mut u = acc.sum().scale(1.0 - CHOL_LAM);
+            for i in 0..CHOL_D {
+                u[(i, i)] += CHOL_LAM * acc.count() as f64;
+            }
+            let l = u.cholesky().expect("floored moment stays SPD");
+            std::hint::black_box(
+                l.scale(1.0 / (acc.count() as f64).sqrt()),
+            );
+        }
+    });
+    let incremental_ms =
+        suite.bench("chol/boundary/incremental", 1, 5, || {
+            let mut acc = chol_acc.clone();
+            let mut l = chol_l.clone();
+            let up = (1.0 - CHOL_LAM).sqrt();
+            for e in 0..CHOL_EPOCHS {
+                for x in &chol_keys[e * CHOL_K..(e + 1) * CHOL_K] {
+                    acc.accumulate(x);
+                    let sx: Vec<f64> =
+                        x.iter().map(|&v| up * v).collect();
+                    l.cholesky_update_rank1(&sx);
+                }
+                std::hint::black_box(
+                    l.scale(1.0 / (acc.count() as f64).sqrt()),
+                );
+            }
+        });
+    let per_boundary_incr = incremental_ms / CHOL_EPOCHS as f64;
+    let per_boundary_scratch = scratch_ms / CHOL_EPOCHS as f64;
+    suite.metric("resample_epoch_cost_ms", per_boundary_incr);
+    suite.metric("resample_epoch_cost_ms_scratch", per_boundary_scratch);
+    suite.metric("resample_epoch_speedup", scratch_ms / incremental_ms);
+    println!(
+        "\nepoch boundary factorization (d={CHOL_D}, K={CHOL_K}): \
+         incremental {per_boundary_incr:.4} ms, from-scratch \
+         {per_boundary_scratch:.4} ms — {:.2}x",
+        scratch_ms / incremental_ms
+    );
+
+    // (b) What the frozen tail costs per position: the same epoch-churn
+    // stream (4 × SEG positions, a boundary every 16) retaining 8
+    // frozen epochs vs 1. Every live frozen epoch adds one extra
+    // feature-map readout per position, so the ratio is the marginal
+    // price of a deep attention window.
+    let churn_rc = |max_epochs: usize,
+                    compaction: Option<CompactionConfig>| {
+        ResampleConfig {
+            epoch_positions: 16,
+            max_epochs,
+            shrinkage: 0.05,
+            compaction,
+        }
+    };
+    const CHURN_ROUNDS: usize = 4;
+    let t_shallow = suite.bench("serve/f64/churn/max_epochs1", 1, 3, || {
+        std::hint::black_box(churn_run(&churn_rc(1, None), CHURN_ROUNDS));
+    });
+    let t_deep = suite.bench("serve/f64/churn/max_epochs8", 1, 3, || {
+        std::hint::black_box(churn_run(&churn_rc(8, None), CHURN_ROUNDS));
+    });
+    suite.metric("frozen_readout_overhead", t_deep / t_shallow);
+    println!(
+        "frozen-epoch readout overhead (8 retained epochs vs 1, K=16): \
+         {:.2}x",
+        t_deep / t_shallow
+    );
+
+    // (c) What compaction buys: resident bytes of the same long-lived
+    // session after 32 boundaries, frozen tail uncompacted (16 epochs
+    // deep) vs merged down to a 2-epoch window.
+    let bytes_off = churn_run(&churn_rc(16, None), CHURN_ROUNDS);
+    let bytes_on =
+        churn_run(&churn_rc(16, Some(CompactionConfig::keep(2))), CHURN_ROUNDS);
+    suite.metric(
+        "compaction_bytes_saved",
+        bytes_off.saturating_sub(bytes_on) as f64,
+    );
+    println!(
+        "frozen-epoch compaction (window 2 vs 16 retained): {bytes_off} \
+         -> {bytes_on} resident bytes ({} saved)",
+        bytes_off.saturating_sub(bytes_on)
     );
 
     if let Err(e) = suite.write() {

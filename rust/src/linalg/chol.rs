@@ -1,0 +1,107 @@
+//! Incremental Cholesky maintenance: rank-1 and blocked rank-k
+//! up/downdates of a lower-triangular factor, in place.
+//!
+//! Given `L` lower triangular with `A = L·Lᵀ`, these kernels rewrite
+//! `L` so the identity holds for `A ± x·xᵀ` in O(n²) per vector — the
+//! workhorse behind `rfa::serve`'s maintained-factor resample epochs,
+//! where refactorizing the shrunk second moment from scratch would pay
+//! O(n³) per head per boundary (see "Online bank resampling: the epoch
+//! contract" in `rfa::serve`).
+//!
+//! The recurrence is the classical plane-rotation scheme (Golub & Van
+//! Loan §6.5.4): column `k` combines the old column with the carried
+//! vector through a rotation chosen to zero the carried head entry.
+//! Updates (`+x·xᵀ`) are unconditionally stable — adding a positive
+//! semidefinite term keeps `A` SPD, and the new pivot
+//! `r = √(L²ₖₖ + x²ₖ) ≥ Lₖₖ > 0` never cancels. Downdates (`−x·xᵀ`)
+//! can leave the matrix indefinite, so they validate `L²ₖₖ − x²ₖ > 0`
+//! at every pivot and report failure without touching `self` —
+//! mirroring the `Option`-shaped SPD rejection of
+//! [`Matrix::cholesky`].
+
+use super::mat::Matrix;
+
+impl Matrix {
+    /// In-place rank-1 *update* of a lower Cholesky factor: on entry
+    /// `self = L` with `A = L·Lᵀ`; on exit `self·selfᵀ = A + x·xᵀ`.
+    ///
+    /// O(n²), no allocation beyond one carried n-vector. The caller
+    /// owns the invariant that `self` really is a Cholesky factor
+    /// (lower triangular, strictly positive diagonal) — e.g. the
+    /// output of [`Matrix::cholesky`] or a previous up/downdate; the
+    /// strict upper triangle is neither read nor written.
+    ///
+    /// Panics if `self` is not square or `x.len()` mismatches.
+    pub fn cholesky_update_rank1(&mut self, x: &[f64]) {
+        assert_eq!(
+            self.rows(),
+            self.cols(),
+            "cholesky_update_rank1 needs a square factor"
+        );
+        let n = self.rows();
+        assert_eq!(x.len(), n, "update vector length mismatch");
+        let mut w = x.to_vec();
+        for k in 0..n {
+            let lkk = self[(k, k)];
+            let r = (lkk * lkk + w[k] * w[k]).sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            self[(k, k)] = r;
+            for i in (k + 1)..n {
+                self[(i, k)] = (self[(i, k)] + s * w[i]) / c;
+                w[i] = c * w[i] - s * self[(i, k)];
+            }
+        }
+    }
+
+    /// In-place rank-1 *downdate*: on entry `self = L` with
+    /// `A = L·Lᵀ`; on success `self·selfᵀ = A − x·xᵀ` and `true` is
+    /// returned. If `A − x·xᵀ` is not positive definite (any pivot
+    /// `L²ₖₖ − w²ₖ` hits zero or below), returns `false` and leaves
+    /// `self` exactly as it was — SPD rejection is a clean refusal,
+    /// never a half-applied factor.
+    ///
+    /// Panics if `self` is not square or `x.len()` mismatches.
+    #[must_use = "a false return means the downdate was refused"]
+    pub fn cholesky_downdate_rank1(&mut self, x: &[f64]) -> bool {
+        assert_eq!(
+            self.rows(),
+            self.cols(),
+            "cholesky_downdate_rank1 needs a square factor"
+        );
+        let n = self.rows();
+        assert_eq!(x.len(), n, "downdate vector length mismatch");
+        let mut l = self.clone();
+        let mut w = x.to_vec();
+        for k in 0..n {
+            let lkk = l[(k, k)];
+            let d = lkk * lkk - w[k] * w[k];
+            if d <= 0.0 {
+                return false;
+            }
+            let r = d.sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            l[(k, k)] = r;
+            for i in (k + 1)..n {
+                l[(i, k)] = (l[(i, k)] - s * w[i]) / c;
+                w[i] = c * w[i] - s * l[(i, k)];
+            }
+        }
+        *self = l;
+        true
+    }
+
+    /// Blocked rank-k update: applies [`Matrix::cholesky_update_rank1`]
+    /// to each row of `xs` in order, so on exit
+    /// `self·selfᵀ = A + Σᵢ xsᵢ·xsᵀᵢ`. O(k·n²) total — the inter-epoch
+    /// cost of folding `k` new key observations into a maintained
+    /// second-moment factor. Application order is part of the bitwise
+    /// result; callers that need determinism must fix it (the serving
+    /// layer uses stream order).
+    pub fn cholesky_update(&mut self, xs: &[Vec<f64>]) {
+        for x in xs {
+            self.cholesky_update_rank1(x);
+        }
+    }
+}

@@ -46,10 +46,13 @@
 //! a new ISA without breaking it is in [`simd`]'s module docs.
 //!
 //! [`Matrix`] (= `Mat<f64>`) is the default precision and additionally
-//! carries every decomposition; [`Matrix32`] (= `Mat<f32>`) is the
+//! carries every decomposition (the incremental rank-1/rank-k Cholesky
+//! up/downdates live in the `chol` module, same `impl Matrix` surface);
+//! [`Matrix32`] (= `Mat<f32>`) is the
 //! attention engine's hot path — half the memory traffic, twice the
 //! lanes per register.
 
+mod chol;
 mod mat;
 mod scalar;
 pub mod simd;

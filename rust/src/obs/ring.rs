@@ -43,6 +43,9 @@ pub enum EventKind {
     DegradedExit,
     /// A previously failed snapshot unlink was retried.
     OrphanRetry { path: String, recovered: bool },
+    /// Head `head` of `session` merged its oldest frozen epoch into the
+    /// successor (`merges` is the head's cumulative merge count).
+    Compaction { session: u64, head: usize, merges: u64 },
 }
 
 impl fmt::Display for EventKind {
@@ -73,6 +76,10 @@ impl fmt::Display for EventKind {
             EventKind::OrphanRetry { path, recovered } => {
                 write!(f, "orphan-retry recovered={recovered} path={path}")
             }
+            EventKind::Compaction { session, head, merges } => write!(
+                f,
+                "compaction session={session} head={head} merges={merges}"
+            ),
         }
     }
 }

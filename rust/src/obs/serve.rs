@@ -69,6 +69,16 @@ pub struct ServeObs {
     /// Resample-epoch boundaries crossed (bank redraws), across all
     /// sessions and heads.
     pub resample_epochs: Arc<Counter>,
+    /// Rank-1 Cholesky updates folded into maintained Σ̂ factors, across
+    /// all sessions and heads (one per key observation while a factor is
+    /// live) — the O(d²) work that replaces per-boundary O(d³).
+    pub chol_rank1_updates: Arc<Counter>,
+    /// From-scratch refreshes of maintained Σ̂ factors (first boundary
+    /// plus doubling-rule refactorizations).
+    pub chol_refreshes: Arc<Counter>,
+    /// Frozen-epoch compaction merges (oldest epoch folded into its
+    /// successor), across all sessions and heads.
+    pub compactions: Arc<Counter>,
 
     // --- gauges (Basic+) ---------------------------------------------
     pub resident_sessions: Arc<Gauge>,
@@ -155,6 +165,18 @@ impl ServeObs {
             resample_epochs: c(
                 "rfa_resample_epochs_total",
                 "Resample-epoch boundaries crossed (bank redraws)",
+            ),
+            chol_rank1_updates: c(
+                "rfa_chol_rank1_updates_total",
+                "Rank-1 updates folded into maintained Cholesky factors",
+            ),
+            chol_refreshes: c(
+                "rfa_chol_refreshes_total",
+                "From-scratch refreshes of maintained Cholesky factors",
+            ),
+            compactions: c(
+                "rfa_compactions_total",
+                "Frozen-epoch compaction merges (oldest into successor)",
             ),
             resident_sessions: g(
                 "rfa_resident_sessions",
@@ -355,10 +377,13 @@ impl ServeObs {
 /// Anisotropy proxy of a bank's normalizer covariance Σ:
 /// `ln(trace(Σ)/d) − logdet(Σ)/d`, the log of the arithmetic-to-
 /// geometric mean ratio of Σ's eigenvalues — 0 iff Σ is a multiple of
-/// the identity, growing as the spectrum spreads. Computed from the
-/// existing Cholesky (one O(d³) factor per call; called only on serial
-/// post-epoch paths). Isotropic banks (no Σ) report 0; a non-SPD Σ
-/// (never produced by the shrinkage path) reports 0 rather than NaN.
+/// the identity, growing as the spectrum spreads. Pays one O(d³)
+/// `cholesky()` per call, so the serving layer only falls back to it for
+/// static-bank heads — online heads read the same proxy in O(d) from
+/// their maintained factor (`OnlineState::factor_anisotropy`) instead of
+/// refactorizing on every serial gauge publish. Isotropic banks (no Σ)
+/// report 0; a non-SPD Σ (never produced by the shrinkage path) reports
+/// 0 rather than NaN.
 pub fn bank_anisotropy(bank: &FeatureBank) -> f64 {
     let Some(sigma) = bank.norm_sigma() else {
         return 0.0;

@@ -17,6 +17,22 @@ impl MultivariateGaussian {
         Some(Self { chol, cov })
     }
 
+    /// Build from a covariance *and* its already-known lower Cholesky
+    /// factor, skipping the O(d³) factorization. The caller owns the
+    /// invariant `cov = chol·cholᵀ` (with `chol` lower triangular,
+    /// positive diagonal) — the serving layer's maintained-factor
+    /// resample path produces exactly this pair in O(d²) per epoch via
+    /// [`crate::linalg::Matrix::cholesky_update_rank1`].
+    pub fn from_parts(cov: Matrix, chol: Matrix) -> Self {
+        assert_eq!(cov.rows(), cov.cols(), "covariance must be square");
+        assert_eq!(
+            (chol.rows(), chol.cols()),
+            (cov.rows(), cov.cols()),
+            "factor/covariance shape mismatch"
+        );
+        Self { chol, cov }
+    }
+
     pub fn dim(&self) -> usize {
         self.cov.rows()
     }

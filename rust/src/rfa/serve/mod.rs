@@ -73,8 +73,9 @@
 //! every **epoch boundary** — the fixed absolute stream positions
 //! `K, 2K, 3K, …` with `K = epoch_positions` — it:
 //!
-//! 1. forms `Σ̂ = (1-λ)·C/count + λ·I` (shrinkage keeps Σ̂ SPD; one
-//!    O(d³) Cholesky per epoch),
+//! 1. produces `Σ̂ = (1-λ)·C/count + λ·I` and its Cholesky factor —
+//!    from the **maintained factor** (below), not a fresh O(d³)
+//!    factorization (shrinkage keeps Σ̂ SPD),
 //! 2. **freezes** the current `(bank, S, z)` triple, and
 //! 3. redraws a data-aware bank against Σ̂, seeded by a pure function of
 //!    `(session_seed, head, epoch)` — no RNG state carries across
@@ -96,24 +97,77 @@
 //! a sliding-window approximation, applied deterministically at
 //! boundaries.
 //!
+//! ## The maintained factor: boundaries in O(d²·k), not O(d³)
+//!
+//! Each online head maintains the lower Cholesky factor `L` of the
+//! *unnormalized* shrunk moment `U = (1-λ)·C + λ·floor·I` alongside `C`
+//! itself, via [`crate::linalg::Matrix::cholesky_update_rank1`]: every
+//! key observation folds `x = √(1-λ)·k` into `L` (O(d²), same stream
+//! order as the rank-1 update of `C`). The boundary then needs only the
+//! scaled-factor identity `chol(U/c) = L/√c`: with `c = count`,
+//! `U/count = (1-λ)·C/count + λ·(floor/count)·I`, so `L/√count` is an
+//! exact factor of a Σ̂ whose identity floor is `λ·floor/count` instead
+//! of `λ` — the one approximation of the scheme. `floor` is pinned to
+//! the count at the last full refresh and a refresh is forced whenever
+//! `count ≥ 2·floor` (the doubling rule), so the floor drifts by at
+//! most 2× between O(log stream-length) full O(d³) refactorizations;
+//! the first boundary is always a full refresh (the factor starts
+//! unmaintained, so the pre-boundary stream pays zero extra work when
+//! resampling is off). The drift only perturbs *which* Σ̂ the redraw
+//! targets — never determinism: `L` is a pure function of the key
+//! stream and the refresh schedule is a pure function of `count`, both
+//! of which snapshot exactly. The bank redraw consumes `(Σ̂, L/√count)`
+//! directly (`MultivariateGaussian::from_parts`), skipping the
+//! per-boundary factorization entirely; if a refresh ever finds the
+//! accumulated `U` numerically non-SPD the head falls back to the
+//! identity proposal for that epoch and retries at the next boundary,
+//! exactly as the materialize-from-scratch path did.
+//!
+//! ## Frozen-epoch compaction: bounding the tail
+//!
+//! [`session::ResampleConfig::compaction`]
+//! ([`session::CompactionConfig`]) bounds retained frozen triples to a
+//! `window` *before* `max_epochs` drops them. Where the `max_epochs`
+//! cap simply forgets the oldest epoch's keys, compaction **merges**
+//! the oldest frozen epoch into its successor: it draws `probes`
+//! Gaussian probe points from a pure-function RNG of `(seed, head,
+//! merge_index)`, evaluates both banks' feature maps on them, solves
+//! the ridge-regularized least squares `M = (Φ₁ᵀΦ₁ + ε·I)⁻¹ Φ₁ᵀ Φ₀`
+//! mapping old features onto successor features, and folds `S₁ += M·S₀`,
+//! `z₁ += M·z₀`. The merged epoch's contribution to every future
+//! readout is thereafter *approximated* in the successor's feature
+//! space — error governed by how well the successor bank spans the old
+//! one on the probe set (banks drawn from neighboring Σ̂ estimates
+//! overlap heavily, and the ridge `ε` caps amplification), and it
+//! decays in relative weight as the stream grows. Determinism survives
+//! because the probes, the merge schedule (deque length vs `window`,
+//! checked at boundaries only) and the arithmetic are all pure
+//! functions of `(seed, per-session request order)` — no data-dependent
+//! branching, no wall clock. **Off by default**: with `compaction:
+//! None` (including every pre-existing config literal) the retained-
+//! epoch behavior and every output bit match the previous stack
+//! exactly.
+//!
 //! The determinism contract extends unchanged: epoch boundaries are
 //! absolute positions (independent of how the stream is sliced into
 //! requests — a boundary mid-segment splits the segment internally),
 //! the bank redraw depends only on `(seed, head, epoch)` and the keys
-//! before the boundary, and all resample state snapshots exactly. So
+//! before the boundary, and all resample state snapshots exactly —
+//! including the maintained factor and the compaction merge count. So
 //! outputs remain a pure function of `(seed, per-session request
 //! order)` across thread counts, tick boundaries, and eviction — now
-//! across resample epochs too. With `resample: None` the serving path
-//! is bitwise identical to the pre-resampling stack, and an enabled
-//! path changes no bits before its first boundary (the combine of one
-//! live epoch is exact).
+//! across resample epochs and compaction merges too. With `resample:
+//! None` the serving path is bitwise identical to the pre-resampling
+//! stack, and an enabled path changes no bits before its first boundary
+//! (the combine of one live epoch is exact; the factor is lazily
+//! initialized at the first boundary).
 //!
 //! # Snapshot tensor naming scheme
 //!
 //! A session snapshot is a DKFT checkpoint with names:
 //!
 //! ```text
-//! session/version      u32[1]   snapshot schema version (2; v1 still loads)
+//! session/version      u32[1]   snapshot schema version (3; v1/v2 load)
 //! session/id           u32[2]   u64 as [lo, hi]
 //! session/seed         u32[2]   bank-draw seed as [lo, hi]
 //! session/position     u32[2]   stream position as [lo, hi]
@@ -143,6 +197,21 @@
 //! head{h}/frozen{j}/bank/sigma      f64[d, d]  (data-aware banks only)
 //! head{h}/frozen{j}/state           f64[n, dv] frozen S
 //! head{h}/frozen{j}/z               f64[n]     frozen z
+//! ```
+//!
+//! plus, in schema version 3 (read by presence, so v2 files load with a
+//! fresh factor state — the next boundary refreshes it — and no
+//! compaction):
+//!
+//! ```text
+//! session/resample/compaction/window  u32[1]   (only when configured)
+//! session/resample/compaction/probes  u32[1]
+//! session/resample/compaction/ridge   f64[1]
+//! head{h}/online/chol_floor           u32[2]   count at last refresh
+//! head{h}/online/chol_rank1           u32[2]   rank-1 updates folded
+//! head{h}/online/chol_refreshes       u32[2]   full refactorizations
+//! head{h}/online/compactions          u32[2]   merges applied
+//! head{h}/online/chol_factor          f64[d, d] maintained L (if live)
 //! ```
 //!
 //! State tensors are F64 even for f32 sessions — the running state
@@ -203,7 +272,8 @@
 //! ([`session::SessionPool::obs`] / [`scheduler::BatchScheduler::obs`])
 //! holding always-on counters (eviction/restore churn, snapshot bytes
 //! and failures, quarantine transitions, requests/rows/ticks, resample
-//! epochs), span-timed latency histograms (tick, forward fan-out,
+//! epochs, Cholesky factor maintenance — rank-1 updates and full
+//! refreshes — and compaction merges), span-timed latency histograms (tick, forward fan-out,
 //! snapshot IO, post-epoch kernel-quality recompute), pool gauges, the
 //! per-head kernel-quality gauges (importance-weight ESS, Σ̂ anisotropy,
 //! epoch count, frozen-epoch bytes), and — at full verbosity — a
@@ -246,9 +316,9 @@ pub use scheduler::{
     StepResponse,
 };
 pub use session::{
-    FrozenEpoch, HeadSlot, OnlineState, PoolStats, Precision,
-    ResampleConfig, ServeConfig, Session, SessionHeads, SessionPool,
-    StepOutput,
+    CompactionConfig, FrozenEpoch, HeadSlot, OnlineState, PoolStats,
+    Precision, ResampleConfig, ServeConfig, Session, SessionHeads,
+    SessionPool, StepOutput,
 };
 pub use snapshot::{load_session, save_session};
 pub use store::{

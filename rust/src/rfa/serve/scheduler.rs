@@ -177,14 +177,16 @@ struct SessionHealth {
 }
 
 /// Work item of one scheduling tick: one head of one scheduled session,
-/// at the pool's storage precision.
-struct HeadJob<'a, T: Scalar> {
+/// at the pool's storage precision. The `Accum = f64` bound mirrors
+/// [`HeadSlot::step`]'s (true of every precision — the sealed-trait
+/// accumulation policy).
+struct HeadJob<'a, T: Scalar<Accum = f64>> {
     slot: &'a mut HeadSlot<T>,
     input: &'a Head,
 }
 
 /// Run one precision's job list on the worker pool and wrap the outputs.
-fn fan_out<T: Scalar>(
+fn fan_out<T: Scalar<Accum = f64>>(
     mut jobs: Vec<HeadJob<'_, T>>,
     workers: usize,
     chunk: usize,

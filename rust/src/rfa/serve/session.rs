@@ -28,7 +28,7 @@ use crate::rfa::engine::{draw_head_banks, CausalState, Head};
 use crate::rfa::estimators::PrfEstimator;
 use crate::rfa::features::FeatureBank;
 use crate::rfa::gaussian::{MultivariateGaussian, SecondMomentAccumulator};
-use crate::rng::Pcg64;
+use crate::rng::{GaussianExt, Pcg64};
 
 use super::snapshot;
 use super::store::{FsStore, HealthReport, SnapshotStore, StoreError};
@@ -63,13 +63,67 @@ pub struct ResampleConfig {
     /// estimate `Σ̂ = (1-λ)·C/count + λ·I`, keeping Σ̂ SPD even early in
     /// the stream.
     pub shrinkage: f64,
+    /// Frozen-epoch compaction policy. `None` (the default of
+    /// [`ResampleConfig::every`]) keeps every retained epoch verbatim —
+    /// bitwise-identical to the pre-compaction serving stack; `Some`
+    /// bounds resident frozen state to `window` epochs by merging the
+    /// oldest into its successor (a documented approximation — see the
+    /// epoch contract in the [`super`] module docs).
+    pub compaction: Option<CompactionConfig>,
+}
+
+/// Frozen-epoch compaction: once more than `window` frozen epochs are
+/// resident, the oldest is merged into its successor by projecting its
+/// `(S, z)` state through the successor's feature bank — a ridge
+/// least-squares fit `M = (Φ₁ᵀΦ₁ + ε·I)⁻¹·Φ₁ᵀ·Φ₀` over `probes` seeded
+/// Gaussian probe points, then `S₁ += M·S₀`, `z₁ += M·z₀`. The merged
+/// epoch's readout is thereafter approximated in the successor's feature
+/// space (error = the feature-space projection residual on the probe
+/// distribution); determinism is unaffected because the probes are a
+/// pure function of `(session_seed, head, merge_index)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompactionConfig {
+    /// Max resident frozen epochs per head (≥ 1) before the oldest is
+    /// merged away. Bounds per-head resident state to O(window) instead
+    /// of O(max_epochs).
+    pub window: usize,
+    /// Probe points per merge (≥ 1); more probes = a better-conditioned
+    /// fit of the old feature map in the successor's basis.
+    pub probes: usize,
+    /// Ridge ε > 0 added to the probe Gram matrix so the fit stays
+    /// solvable even when `probes < m`.
+    pub ridge: f64,
+}
+
+impl CompactionConfig {
+    /// Keep at most `window` frozen epochs, with default fit size
+    /// (64 probes) and ridge (1e-8).
+    pub fn keep(window: usize) -> Self {
+        Self { window, probes: 64, ridge: 1e-8 }
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.window >= 1, "compaction window must be >= 1 epoch");
+        ensure!(self.probes >= 1, "compaction needs at least one probe");
+        ensure!(
+            self.ridge > 0.0 && self.ridge.is_finite(),
+            "compaction ridge must be positive and finite, got {}",
+            self.ridge
+        );
+        Ok(())
+    }
 }
 
 impl ResampleConfig {
-    /// Resample every `k` positions with default retention (8 epochs)
-    /// and shrinkage (0.05).
+    /// Resample every `k` positions with default retention (8 epochs),
+    /// shrinkage (0.05) and no compaction.
     pub fn every(k: u64) -> Self {
-        Self { epoch_positions: k, max_epochs: 8, shrinkage: 0.05 }
+        Self {
+            epoch_positions: k,
+            max_epochs: 8,
+            shrinkage: 0.05,
+            compaction: None,
+        }
     }
 
     pub(crate) fn validate(&self) -> Result<()> {
@@ -83,6 +137,9 @@ impl ResampleConfig {
             "resample shrinkage must be in (0, 1], got {}",
             self.shrinkage
         );
+        if let Some(cc) = &self.compaction {
+            cc.validate()?;
+        }
         Ok(())
     }
 }
@@ -193,15 +250,42 @@ impl<T: Scalar> FrozenEpoch<T> {
     }
 }
 
+/// The maintained Cholesky factor of the *unnormalized* shrunk moment
+/// `U = (1-λ)·C + λ·floor·I`, where `floor` is the observation count at
+/// the last from-scratch refresh, plus the monotone maintenance totals
+/// the serial telemetry drain diffs against. `chol` is `None` until the
+/// first epoch boundary (U is not factorized before any boundary work
+/// exists) and after a (pathological) failed refresh; every state here
+/// is persisted bitwise by snapshot schema v3 so evict→restore cannot
+/// perturb the refresh schedule or the update stream.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct FactorState {
+    /// Lower Cholesky factor `L` with `U = L·Lᵀ`, streamed forward one
+    /// rank-1 update per key observation.
+    pub(crate) chol: Option<Matrix>,
+    /// Observation count at the last from-scratch refresh — the scale
+    /// of the identity floor baked into `U`.
+    pub(crate) floor: u64,
+    /// Total rank-1 factor updates applied (monotone).
+    pub(crate) rank1: u64,
+    /// Total from-scratch refactorizations (monotone).
+    pub(crate) refreshes: u64,
+    /// Total frozen-epoch compaction merges (monotone; also the seed
+    /// index of the *next* merge's probe generator).
+    pub(crate) compactions: u64,
+}
+
 /// Per-head online-resampling state: the streaming second-moment
-/// estimate of the head's keys, the epoch counter, and the retained
-/// frozen `(bank, S, z)` triples of past epochs (oldest first).
+/// estimate of the head's keys, the epoch counter, the maintained
+/// Cholesky factor of the shrunk moment, and the retained frozen
+/// `(bank, S, z)` triples of past epochs (oldest first).
 pub struct OnlineState<T: Scalar> {
     pub(crate) cfg: ResampleConfig,
     pub(crate) seed: u64,
     pub(crate) head: usize,
     pub(crate) epoch: u64,
     pub(crate) moment: SecondMomentAccumulator,
+    pub(crate) factor: FactorState,
     pub(crate) frozen: VecDeque<FrozenEpoch<T>>,
 }
 
@@ -218,21 +302,24 @@ impl<T: Scalar> OnlineState<T> {
             head,
             epoch: 0,
             moment: SecondMomentAccumulator::new(d),
+            factor: FactorState::default(),
             frozen: VecDeque::new(),
         }
     }
 
-    /// Rebuild from snapshotted parts (the restore half of the v2
-    /// snapshot surface).
+    /// Rebuild from snapshotted parts (the restore half of the snapshot
+    /// surface; schema v2 restores carry a default [`FactorState`] — the
+    /// next boundary refreshes from scratch).
     pub(crate) fn from_parts(
         cfg: ResampleConfig,
         seed: u64,
         head: usize,
         epoch: u64,
         moment: SecondMomentAccumulator,
+        factor: FactorState,
         frozen: VecDeque<FrozenEpoch<T>>,
     ) -> Self {
-        Self { cfg, seed, head, epoch, moment, frozen }
+        Self { cfg, seed, head, epoch, moment, factor, frozen }
     }
 
     /// Completed resamples so far (0 = still on the initial bank).
@@ -254,6 +341,60 @@ impl<T: Scalar> OnlineState<T> {
     pub fn frozen_len(&self) -> usize {
         self.frozen.len()
     }
+
+    /// The maintained lower Cholesky factor of the unnormalized shrunk
+    /// moment `U = (1-λ)·C + λ·floor·I`; `None` before the first epoch
+    /// boundary.
+    pub fn chol_factor(&self) -> Option<&Matrix> {
+        self.factor.chol.as_ref()
+    }
+
+    /// Observation count at the last from-scratch factor refresh.
+    pub fn chol_floor(&self) -> u64 {
+        self.factor.floor
+    }
+
+    /// Total rank-1 factor updates applied so far (monotone).
+    pub fn chol_rank1_updates(&self) -> u64 {
+        self.factor.rank1
+    }
+
+    /// Total from-scratch refactorizations so far (monotone).
+    pub fn chol_refreshes(&self) -> u64 {
+        self.factor.refreshes
+    }
+
+    /// Total frozen-epoch compaction merges so far (monotone).
+    pub fn compactions(&self) -> u64 {
+        self.factor.compactions
+    }
+
+    /// O(d) anisotropy proxy of the effective covariance
+    /// `Σ̃ = U/count`, read straight off the maintained factor:
+    /// `ln(tr(Σ̃)/d) − logdet(Σ̃)/d` with
+    /// `logdet Σ̃ = 2·Σᵢ ln Lᵢᵢ − d·ln count` and the trace taken from
+    /// the running sum's diagonal. `None` when no factor is maintained
+    /// yet (pre-first-boundary, or after a failed refresh) — callers
+    /// fall back to the on-demand [`bank_anisotropy`] proxy.
+    pub fn factor_anisotropy(&self) -> Option<f64> {
+        let l = self.factor.chol.as_ref()?;
+        let count = self.moment.count();
+        if count == 0 {
+            return None;
+        }
+        let d = self.moment.dim();
+        let c = count as f64;
+        let lambda = self.cfg.shrinkage;
+        let mut trace = 0.0;
+        for i in 0..d {
+            trace += (1.0 - lambda) * self.moment.sum()[(i, i)] / c
+                + lambda * self.factor.floor as f64 / c;
+        }
+        let logdet = 2.0
+            * (0..d).map(|i| l[(i, i)].ln()).sum::<f64>()
+            - d as f64 * c.ln();
+        Some(((trace / d as f64).ln() - logdet / d as f64).max(0.0))
+    }
 }
 
 /// The epoch-`e` resample generator for head `h` of a session: a pure
@@ -264,6 +405,49 @@ fn resample_rng(seed: u64, head: usize, epoch: u64) -> Pcg64 {
         seed ^ epoch.wrapping_mul(0x9e37_79b9_7f4a_7c15),
         0x00da_7aaa_0000_0000 ^ head as u64,
     )
+}
+
+/// The probe generator of compaction merge `merge_index` for head `h`:
+/// like [`resample_rng`], a pure function of `(session_seed, h, index)`
+/// on a stream disjoint from the resample draws, so merges are
+/// deterministic across thread counts, ticks and evict→restore (the
+/// merge index is persisted as part of the factor state).
+fn compaction_rng(seed: u64, head: usize, merge_index: u64) -> Pcg64 {
+    Pcg64::seed_stream(
+        seed ^ merge_index.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        0x00da_7acc_0000_0000 ^ head as u64,
+    )
+}
+
+/// `U = (1-λ)·C + λ·floor·I` — the unnormalized shrunk moment whose
+/// lower Cholesky factor [`FactorState`] maintains across boundaries.
+/// Materialized O(d²) only on from-scratch refreshes.
+fn unnormalized_shrunk(sum: &Matrix, lambda: f64, floor: u64) -> Matrix {
+    let mut u = sum.scale(1.0 - lambda);
+    for i in 0..u.rows() {
+        u[(i, i)] += lambda * floor as f64;
+    }
+    u
+}
+
+/// The effective covariance the redraw and the feature normalizers see:
+/// `Σ̃ = U/count = (1-λ)·C/count + λ·(floor/count)·I`, materialized
+/// O(d²) straight from the running sum — never via `L·Lᵀ`. Between
+/// refreshes `floor/count ∈ (1/2, 1]` (the doubling rule), so Σ̃ tracks
+/// the exact shrunk estimate `Σ̂ = (1-λ)·C/count + λ·I` up to at most a
+/// 2× decay of the identity floor (see the epoch contract).
+fn effective_sigma(
+    sum: &Matrix,
+    lambda: f64,
+    floor: u64,
+    count: u64,
+) -> Matrix {
+    let c = count as f64;
+    let mut sigma = sum.scale((1.0 - lambda) / c);
+    for i in 0..sigma.rows() {
+        sigma[(i, i)] += lambda * floor as f64 / c;
+    }
+    sigma
 }
 
 /// One head of a session: its feature bank plus its running state at the
@@ -294,7 +478,13 @@ impl<T: Scalar> HeadSlot<T> {
     pub fn epoch(&self) -> u64 {
         self.online.as_ref().map_or(0, |o| o.epoch)
     }
+}
 
+/// The stepping half of a head slot. Bounded to `Scalar::Accum = f64`
+/// (true of every precision — the sealed-trait accumulation policy)
+/// so the epoch machinery can run factor maintenance and compaction
+/// merges directly on the f64 accumulator matrices.
+impl<T: Scalar<Accum = f64>> HeadSlot<T> {
     /// Advance this head by one request segment and return its output
     /// rows. Chunk blocking restarts at the segment start (the
     /// determinism contract in the module docs). The f64-side input
@@ -335,9 +525,22 @@ impl<T: Scalar> HeadSlot<T> {
             let k_span = &input.k[b..e];
             // Stream order: keys enter the moment estimate span by span,
             // so the estimate at a boundary is independent of how the
-            // stream was sliced into requests.
+            // stream was sliced into requests. The maintained factor
+            // streams forward with the same keys — `U += (1-λ)·k·kᵀ` is
+            // one O(d²) rank-1 update with `√(1-λ)·k` — in the same
+            // order, so factor and moment stay in lockstep regardless of
+            // request slicing. No factor exists before the first epoch
+            // boundary, so enabling resampling still changes no bits
+            // (and does no extra work) until a boundary is crossed.
+            let up_scale = (1.0 - online.cfg.shrinkage).sqrt();
             for key in k_span {
                 online.moment.accumulate(key);
+                if let Some(l) = online.factor.chol.as_mut() {
+                    let x: Vec<f64> =
+                        key.iter().map(|&k| up_scale * k).collect();
+                    l.cholesky_update_rank1(&x);
+                    online.factor.rank1 += 1;
+                }
             }
             let phi_q = self.bank.feature_matrix_t::<T>(q_span);
             let phi_k = self.bank.feature_matrix_t::<T>(k_span);
@@ -378,20 +581,67 @@ impl<T: Scalar> HeadSlot<T> {
             }
 
             // Epoch boundary reached: freeze the triple and redraw the
-            // bank against the shrunk second-moment estimate.
+            // bank against the maintained factor of the shrunk
+            // second-moment estimate (the epoch contract in the module
+            // docs).
             if online.moment.count() % k_epoch == 0 {
                 online.epoch += 1;
-                let sigma =
-                    online.moment.shrunk_estimate(online.cfg.shrinkage);
                 let d_in = self.bank.dim();
-                let gauss = MultivariateGaussian::new(sigma)
-                    .unwrap_or_else(|| {
-                        // Pathological rounding can defeat the shrinkage
-                        // floor; fall back to the isotropic geometry
-                        // deterministically rather than fail the step.
+                let count = online.moment.count();
+                let lambda = online.cfg.shrinkage;
+                // Refresh from scratch only when no factor exists yet
+                // (first boundary, restore from a pre-v3 snapshot, or a
+                // previously failed refresh) or the identity floor has
+                // decayed past 2× (count ≥ 2·floor) — the doubling rule
+                // that makes O(d³) refreshes O(log positions) per
+                // session and every other boundary O(d²·k).
+                let refresh = match &online.factor.chol {
+                    Some(_) => count >= 2 * online.factor.floor,
+                    None => true,
+                };
+                if refresh {
+                    let u = unnormalized_shrunk(
+                        online.moment.sum(),
+                        lambda,
+                        count,
+                    );
+                    match u.cholesky() {
+                        Some(l) => {
+                            online.factor.chol = Some(l);
+                            online.factor.floor = count;
+                            online.factor.refreshes += 1;
+                        }
+                        None => {
+                            // Pathological rounding can defeat the
+                            // shrinkage floor; drop the factor and fall
+                            // back to the isotropic geometry
+                            // deterministically rather than fail the
+                            // step (the next boundary retries).
+                            online.factor.chol = None;
+                        }
+                    }
+                }
+                let gauss = match &online.factor.chol {
+                    Some(l) => {
+                        // Scaled-factor identity: chol(U/c) = L/√c, so
+                        // the redraw consumes the maintained factor in
+                        // O(d²); Σ̃ for the feature normalizers is
+                        // materialized O(d²) from the running sum,
+                        // never via L·Lᵀ.
+                        let sigma = effective_sigma(
+                            online.moment.sum(),
+                            lambda,
+                            online.factor.floor,
+                            count,
+                        );
+                        let chol = l.scale(1.0 / (count as f64).sqrt());
+                        MultivariateGaussian::from_parts(sigma, chol)
+                    }
+                    None => {
                         MultivariateGaussian::new(Matrix::identity(d_in))
                             .expect("identity is SPD")
-                    });
+                    }
+                };
                 let mut rng =
                     resample_rng(online.seed, online.head, online.epoch);
                 let n = self.state.n_features();
@@ -408,6 +658,23 @@ impl<T: Scalar> HeadSlot<T> {
                 online
                     .frozen
                     .push_back(FrozenEpoch { bank: old_bank, state: old_state });
+                // Compaction (when configured) bounds resident frozen
+                // epochs to the window by merging oldest → successor;
+                // the max_epochs trim below is then a no-op unless the
+                // window exceeds it.
+                if let Some(cc) = online.cfg.compaction.clone() {
+                    while online.frozen.len() > cc.window
+                        && online.frozen.len() >= 2
+                    {
+                        let mut rng = compaction_rng(
+                            online.seed,
+                            online.head,
+                            online.factor.compactions,
+                        );
+                        compact_oldest(&mut online.frozen, &cc, &mut rng);
+                        online.factor.compactions += 1;
+                    }
+                }
                 while online.frozen.len() > online.cfg.max_epochs {
                     online.frozen.pop_front();
                 }
@@ -416,6 +683,51 @@ impl<T: Scalar> HeadSlot<T> {
         }
         out
     }
+}
+
+/// Merge the oldest frozen epoch into its successor (the compaction
+/// approximation): probe both feature maps at `cc.probes` seeded
+/// Gaussian points, fit the old map in the successor's feature basis by
+/// ridge least squares `M = (Φ₁ᵀΦ₁ + ε·I)⁻¹·Φ₁ᵀ·Φ₀`, and fold the old
+/// accumulators through it: `S₁ += M·S₀`, `z₁ += M·z₀`. All merge math
+/// runs in the f64 accumulator space (`Scalar::Accum`), so the merged
+/// state is a pure function of the two epochs and the probe stream —
+/// determinism survives. On the (ridge-guarded, practically
+/// unreachable) failure of the Gram inversion the oldest epoch is
+/// dropped instead — the same outcome the max_epochs trim would
+/// eventually produce, and equally deterministic.
+fn compact_oldest<T: Scalar<Accum = f64>>(
+    frozen: &mut VecDeque<FrozenEpoch<T>>,
+    cc: &CompactionConfig,
+    rng: &mut Pcg64,
+) {
+    debug_assert!(frozen.len() >= 2, "compaction needs a successor");
+    let old = frozen.pop_front().expect("compaction needs >= 2 epochs");
+    let succ = frozen.front_mut().expect("compaction needs a successor");
+    let d = old.bank.dim();
+    let m = old.bank.n_features();
+    let probes: Vec<Vec<f64>> =
+        (0..cc.probes).map(|_| rng.gaussian_vec(d)).collect();
+    let phi_old = old.bank.feature_matrix_t::<f64>(&probes);
+    let phi_succ = succ.bank.feature_matrix_t::<f64>(&probes);
+    let mut gram = phi_succ.transpose().matmul(&phi_succ);
+    for i in 0..m {
+        gram[(i, i)] += cc.ridge;
+    }
+    let Some(inv) = gram.inverse_spd() else {
+        return;
+    };
+    let map = inv.matmul(&phi_succ.transpose().matmul(&phi_old));
+    let s_merged = succ.state.state().add(&map.matmul(old.state.state()));
+    let z_old = map.matvec(old.state.z());
+    let z_merged: Vec<f64> = succ
+        .state
+        .z()
+        .iter()
+        .zip(&z_old)
+        .map(|(a, b)| a + b)
+        .collect();
+    succ.state = CausalState::from_parts(s_merged, z_merged);
 }
 
 /// The per-precision half of a session: every head at one compile-time
@@ -477,7 +789,10 @@ fn fresh_slots<T: Scalar>(
 /// Per-head kernel-quality readout for the obs gauges: importance-weight
 /// ESS, Σ̂ anisotropy, completed epochs, and resident bytes of the
 /// retained frozen epochs. Pure reads — called only from serial
-/// telemetry paths, never from the worker fan-out.
+/// telemetry paths, never from the worker fan-out. The anisotropy comes
+/// O(d) off the maintained factor when one exists; only static-bank
+/// heads (and online heads before their first boundary) fall back to
+/// the on-demand O(d³) [`bank_anisotropy`] proxy.
 fn slot_quality<T: Scalar>(
     slot: &HeadSlot<T>,
     dv: usize,
@@ -492,16 +807,21 @@ fn slot_quality<T: Scalar>(
             })
             .sum::<usize>()
     }) as u64;
+    let anisotropy = slot
+        .online
+        .as_ref()
+        .and_then(OnlineState::factor_anisotropy)
+        .unwrap_or_else(|| bank_anisotropy(&slot.bank));
     (
         slot.bank.effective_sample_size(),
-        bank_anisotropy(&slot.bank),
+        anisotropy,
         slot.epoch(),
         frozen_bytes,
     )
 }
 
 /// Advance every slot by one request segment, serially, heads in order.
-fn step_slots<T: Scalar>(
+fn step_slots<T: Scalar<Accum = f64>>(
     slots: &mut [HeadSlot<T>],
     inputs: &[Head],
     chunk: usize,
@@ -522,7 +842,8 @@ fn bank_floats(bank: &FeatureBank) -> usize {
 /// Resident bytes of a slot vector: per-head bank (omegas, weights,
 /// √weights, optional Σ) plus running state (`Scalar::Accum` = f64
 /// accumulators in every precision), plus — for online heads — the
-/// covariance accumulator and every retained frozen epoch's bank+state.
+/// covariance accumulator, the maintained Cholesky factor (once one
+/// exists) and every retained frozen epoch's bank+state.
 fn slots_bytes<T: Scalar>(slots: &[HeadSlot<T>], dv: usize) -> usize {
     const F64_BYTES: usize = std::mem::size_of::<f64>();
     let state_floats = |n: usize| n * dv + n;
@@ -534,6 +855,9 @@ fn slots_bytes<T: Scalar>(slots: &[HeadSlot<T>], dv: usize) -> usize {
             if let Some(online) = &h.online {
                 let d = online.moment.dim();
                 floats += d * d;
+                if online.factor.chol.is_some() {
+                    floats += d * d;
+                }
                 floats += online
                     .frozen
                     .iter()
@@ -546,6 +870,27 @@ fn slots_bytes<T: Scalar>(slots: &[HeadSlot<T>], dv: usize) -> usize {
             floats * F64_BYTES
         })
         .sum()
+}
+
+/// Per-head factor-maintenance totals `(rank1 updates, refreshes,
+/// compactions)` — the quantities [`Session::drain_epoch_telemetry`]
+/// diffs against its `reported_chol` baseline. Static-bank heads report
+/// zeros.
+fn head_chol_totals(heads: &SessionHeads) -> Vec<(u64, u64, u64)> {
+    fn totals<T: Scalar>(slots: &[HeadSlot<T>]) -> Vec<(u64, u64, u64)> {
+        slots
+            .iter()
+            .map(|s| {
+                s.online.as_ref().map_or((0, 0, 0), |o| {
+                    (o.factor.rank1, o.factor.refreshes, o.factor.compactions)
+                })
+            })
+            .collect()
+    }
+    match heads {
+        SessionHeads::F64(slots) => totals(slots),
+        SessionHeads::F32(slots) => totals(slots),
+    }
 }
 
 /// One streaming user: per-head banks + causal states, a monotone
@@ -561,6 +906,11 @@ pub struct Session {
     /// happen inside the worker fan-out, so the serial paths diff against
     /// this to emit counters/events without touching worker code.
     reported_epochs: Vec<u64>,
+    /// Last factor-maintenance totals per head already surfaced to
+    /// telemetry, as `(rank1 updates, refreshes, compactions)` — same
+    /// serial-diff scheme as `reported_epochs`, so the `rfa_chol_*` and
+    /// `rfa_compactions` counters stay write-only for workers.
+    reported_chol: Vec<(u64, u64, u64)>,
     /// The pool's observability handle (attached by the pool at create
     /// and restore). Write-only: nothing in the session reads it back.
     obs: Option<Arc<ServeObs>>,
@@ -594,6 +944,7 @@ impl Session {
             )),
         };
         let reported_epochs = vec![0; heads.len()];
+        let reported_chol = vec![(0, 0, 0); heads.len()];
         Self {
             id,
             seed,
@@ -602,6 +953,7 @@ impl Session {
             resample,
             heads,
             reported_epochs,
+            reported_chol,
             obs: None,
         }
     }
@@ -626,6 +978,7 @@ impl Session {
                 slots.iter().map(HeadSlot::epoch).collect()
             }
         };
+        let reported_chol = head_chol_totals(&heads);
         Self {
             id,
             seed,
@@ -634,6 +987,7 @@ impl Session {
             resample,
             heads,
             reported_epochs,
+            reported_chol,
             obs: None,
         }
     }
@@ -741,6 +1095,25 @@ impl Session {
             }
             *reported = cur;
             crossed.push(h);
+        }
+        // Factor-maintenance counters use the same serial diff: workers
+        // only bump plain per-head totals; this turns the deltas into
+        // shared counters and (for compaction merges) ring events.
+        let chol = head_chol_totals(&self.heads);
+        for (h, (&(rank1, refreshes, compactions), reported)) in
+            chol.iter().zip(&mut self.reported_chol).enumerate()
+        {
+            obs.chol_rank1_updates.add(rank1 - reported.0);
+            obs.chol_refreshes.add(refreshes - reported.1);
+            for m in reported.2 + 1..=compactions {
+                obs.compactions.inc();
+                obs.event(EventKind::Compaction {
+                    session: self.id,
+                    head: h,
+                    merges: m,
+                });
+            }
+            *reported = (rank1, refreshes, compactions);
         }
         if !crossed.is_empty() && obs.gauges_enabled() {
             let _span = obs.span(&obs.resample_ms);

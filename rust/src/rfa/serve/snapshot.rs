@@ -16,7 +16,14 @@
 //!
 //! Version 2 of the schema adds the resample-policy and per-head online
 //! tensors; version-1 files (written before resampling existed) still
-//! load, as static-bank sessions.
+//! load, as static-bank sessions. Version 3 adds the maintained
+//! Cholesky factor and its counters (`head{h}/online/chol_*`,
+//! `head{h}/online/compactions`) plus the optional compaction knob
+//! (`session/resample/compaction/*`); both are read by presence, so
+//! version-2 files load with a default [`FactorState`] (the next
+//! boundary refreshes the factor from the accumulator — one O(d³)
+//! catch-up that re-pins the identity floor to the then-current count)
+//! and no compaction.
 //!
 //! Precision dispatch follows the session-boundary rule: serialization
 //! reads the session's [`SessionHeads`] once, restoration matches the
@@ -35,13 +42,14 @@ use crate::rfa::features::FeatureBank;
 use crate::rfa::gaussian::SecondMomentAccumulator;
 
 use super::session::{
-    FrozenEpoch, HeadSlot, OnlineState, Precision, ResampleConfig, Session,
-    SessionHeads,
+    CompactionConfig, FactorState, FrozenEpoch, HeadSlot, OnlineState,
+    Precision, ResampleConfig, Session, SessionHeads,
 };
 
-/// Schema version stored under `session/version`. Version 1 (static
-/// banks only) is still accepted on read.
-pub const SNAPSHOT_VERSION: u32 = 2;
+/// Schema version stored under `session/version`. Versions 1 (static
+/// banks only) and 2 (no maintained factor / compaction) are still
+/// accepted on read.
+pub const SNAPSHOT_VERSION: u32 = 3;
 
 fn u64_tensor(v: u64) -> Tensor {
     Tensor::from_u32(vec![2], &[v as u32, (v >> 32) as u32])
@@ -161,6 +169,32 @@ fn insert_heads<T: Scalar<Accum = f64>>(
                 format!("head{h}/online/n_frozen"),
                 Tensor::from_u32(vec![1], &[online.frozen.len() as u32]),
             );
+            // v3: maintained-factor state. The factor matrix itself is
+            // optional (None until the first boundary, or after a failed
+            // refresh); the floor/counters always travel so telemetry
+            // baselines and the doubling rule resume exactly.
+            ck.insert(
+                format!("head{h}/online/chol_floor"),
+                u64_tensor(online.factor.floor),
+            );
+            ck.insert(
+                format!("head{h}/online/chol_rank1"),
+                u64_tensor(online.factor.rank1),
+            );
+            ck.insert(
+                format!("head{h}/online/chol_refreshes"),
+                u64_tensor(online.factor.refreshes),
+            );
+            ck.insert(
+                format!("head{h}/online/compactions"),
+                u64_tensor(online.factor.compactions),
+            );
+            if let Some(l) = &online.factor.chol {
+                ck.insert(
+                    format!("head{h}/online/chol_factor"),
+                    Tensor::from_f64(vec![d, d], l.data()),
+                );
+            }
             for (j, fe) in online.frozen.iter().enumerate() {
                 insert_bank(ck, &format!("head{h}/frozen{j}/bank"), fe.bank());
                 insert_state(ck, &format!("head{h}/frozen{j}"), fe.state(), dv);
@@ -218,12 +252,47 @@ fn read_heads<T: Scalar<Accum = f64>>(
                     )?;
                     frozen.push_back(FrozenEpoch { bank: fbank, state: fstate });
                 }
+                // v3 factor state, detected by presence so v2 files load
+                // with the default (next boundary refreshes from the
+                // accumulator).
+                let floor_name = format!("head{h}/online/chol_floor");
+                let factor = if ck.get(&floor_name).is_some() {
+                    let chol_name = format!("head{h}/online/chol_factor");
+                    let chol = if ck.get(&chol_name).is_some() {
+                        Some(Matrix::from_vec(
+                            d,
+                            d,
+                            ck.require_f64(&chol_name, &[d, d])?,
+                        ))
+                    } else {
+                        None
+                    };
+                    FactorState {
+                        chol,
+                        floor: read_u64(ck, &floor_name)?,
+                        rank1: read_u64(
+                            ck,
+                            &format!("head{h}/online/chol_rank1"),
+                        )?,
+                        refreshes: read_u64(
+                            ck,
+                            &format!("head{h}/online/chol_refreshes"),
+                        )?,
+                        compactions: read_u64(
+                            ck,
+                            &format!("head{h}/online/compactions"),
+                        )?,
+                    }
+                } else {
+                    FactorState::default()
+                };
                 Some(OnlineState::from_parts(
                     rc.clone(),
                     seed,
                     h,
                     epoch,
                     SecondMomentAccumulator::from_parts(cov, count),
+                    factor,
                     frozen,
                 ))
             }
@@ -271,6 +340,20 @@ pub fn session_checkpoint(session: &Session) -> Checkpoint {
                 "session/resample/shrinkage",
                 Tensor::from_f64(vec![1], &[rc.shrinkage]),
             );
+            if let Some(cc) = &rc.compaction {
+                ck.insert(
+                    "session/resample/compaction/window",
+                    Tensor::from_u32(vec![1], &[cc.window as u32]),
+                );
+                ck.insert(
+                    "session/resample/compaction/probes",
+                    Tensor::from_u32(vec![1], &[cc.probes as u32]),
+                );
+                ck.insert(
+                    "session/resample/compaction/ridge",
+                    Tensor::from_f64(vec![1], &[cc.ridge]),
+                );
+            }
         }
         None => {
             ck.insert("session/resample", Tensor::from_u32(vec![1], &[0]));
@@ -287,7 +370,7 @@ pub fn session_checkpoint(session: &Session) -> Checkpoint {
 /// and shape (descriptive errors, never panics, on malformed input).
 pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
     let version = read_scalar_u32(ck, "session/version")?;
-    if version != 1 && version != SNAPSHOT_VERSION {
+    if !(1..=SNAPSHOT_VERSION).contains(&version) {
         bail!("unsupported session snapshot version {version}");
     }
     let id = read_u64(ck, "session/id")?;
@@ -322,7 +405,32 @@ pub fn session_from_checkpoint(ck: &Checkpoint) -> Result<Session> {
         }
         let shrinkage =
             ck.require_f64("session/resample/shrinkage", &[1])?[0];
-        let rc = ResampleConfig { epoch_positions, max_epochs, shrinkage };
+        // v3 compaction knob, by presence (v2 files simply lack it).
+        let compaction = if ck.get("session/resample/compaction/window")
+            .is_some()
+        {
+            Some(CompactionConfig {
+                window: read_scalar_u32(
+                    ck,
+                    "session/resample/compaction/window",
+                )? as usize,
+                probes: read_scalar_u32(
+                    ck,
+                    "session/resample/compaction/probes",
+                )? as usize,
+                ridge: ck
+                    .require_f64("session/resample/compaction/ridge", &[1])?
+                    [0],
+            })
+        } else {
+            None
+        };
+        let rc = ResampleConfig {
+            epoch_positions,
+            max_epochs,
+            shrinkage,
+            compaction,
+        };
         rc.validate()
             .context("session snapshot carries an invalid resample policy")?;
         Some(rc)

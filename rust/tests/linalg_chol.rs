@@ -1,0 +1,220 @@
+//! Property suite for the incremental Cholesky kernels
+//! (`rust/src/linalg/chol.rs`): rank-1/rank-k updated factors must match
+//! from-scratch factorization within tolerance across adversarial
+//! dimensions and block sizes — including underdetermined counts with
+//! the serving layer's λ identity floor — update/downdate must be
+//! mutually inverse, and SPD rejection (both `cholesky()`'s and the
+//! downdate's) must be a clean refusal that leaves the factor untouched.
+
+use darkformer::linalg::Matrix;
+use darkformer::rfa::gaussian::SecondMomentAccumulator;
+use darkformer::rng::{GaussianExt, Pcg64};
+
+/// Adversarial dimension sweep shared by the property tests.
+const DIMS: [usize; 7] = [1, 2, 3, 5, 8, 16, 32];
+
+/// A well-conditioned random SPD matrix: `G·Gᵀ + d·I`.
+fn random_spd(d: usize, rng: &mut Pcg64) -> Matrix {
+    let g = Matrix::from_vec(d, d, rng.gaussian_vec(d * d));
+    let mut a = g.matmul(&g.transpose());
+    for i in 0..d {
+        a[(i, i)] += d as f64;
+    }
+    a
+}
+
+/// `A + Σᵢ xᵢ·xᵢᵀ`, materialized directly.
+fn add_outer(a: &Matrix, xs: &[Vec<f64>]) -> Matrix {
+    let d = a.rows();
+    let mut out = a.clone();
+    for x in xs {
+        for i in 0..d {
+            for j in 0..d {
+                out[(i, j)] += x[i] * x[j];
+            }
+        }
+    }
+    out
+}
+
+/// Max |L₁ − L₂| over the lower triangle (the strict upper triangle is
+/// outside the kernels' contract).
+fn lower_diff(l1: &Matrix, l2: &Matrix) -> f64 {
+    let d = l1.rows();
+    let mut worst = 0.0f64;
+    for i in 0..d {
+        for j in 0..=i {
+            worst = worst.max((l1[(i, j)] - l2[(i, j)]).abs());
+        }
+    }
+    worst
+}
+
+#[test]
+fn rank1_update_matches_from_scratch() {
+    let mut rng = Pcg64::seed(0xC401);
+    for d in DIMS {
+        for trial in 0..4 {
+            let a = random_spd(d, &mut rng);
+            let x = rng.gaussian_vec(d);
+            let mut l = a.cholesky().expect("random SPD must factor");
+            l.cholesky_update_rank1(&x);
+            // The lower Cholesky factor with positive diagonal is
+            // unique, so the updated factor must match the from-scratch
+            // factor of A + x·xᵀ entry for entry.
+            let scratch = add_outer(&a, std::slice::from_ref(&x))
+                .cholesky()
+                .expect("updated matrix stays SPD");
+            let diff = lower_diff(&l, &scratch);
+            assert!(
+                diff < 1e-9,
+                "d={d} trial={trial}: rank-1 update drifted {diff:e} \
+                 from the from-scratch factor"
+            );
+        }
+    }
+}
+
+#[test]
+fn rank_k_update_matches_from_scratch() {
+    let mut rng = Pcg64::seed(0xC402);
+    for d in DIMS {
+        // Block sizes below, at, and well above the dimension — the
+        // serving layer's inter-epoch blocks land anywhere in this range.
+        for k in [1, d.saturating_sub(1).max(1), d, 2 * d + 3] {
+            let a = random_spd(d, &mut rng);
+            let xs: Vec<Vec<f64>> =
+                (0..k).map(|_| rng.gaussian_vec(d)).collect();
+            let mut l = a.cholesky().expect("random SPD must factor");
+            l.cholesky_update(&xs);
+            let scratch = add_outer(&a, &xs)
+                .cholesky()
+                .expect("updated matrix stays SPD");
+            let diff = lower_diff(&l, &scratch);
+            // Tolerance scales mildly with the accumulated update mass.
+            let tol = 1e-9 * (1.0 + k as f64);
+            assert!(
+                diff < tol,
+                "d={d} k={k}: rank-k update drifted {diff:e} from the \
+                 from-scratch factor"
+            );
+        }
+    }
+}
+
+/// The serving layer's exact maintenance loop, underdetermined: freeze
+/// the identity floor at a count *below* the dimension (the raw moment
+/// is rank deficient — only the λ floor keeps U factorable), then stream
+/// further keys as `√(1-λ)·k` rank-1 updates and compare against a
+/// from-scratch factorization of `U = (1-λ)·C + λ·floor·I` every step.
+#[test]
+fn streamed_maintenance_matches_from_scratch_underdetermined() {
+    let mut rng = Pcg64::seed(0xC403);
+    for (d, floor_count) in [(6, 2), (8, 3), (16, 5), (32, 7)] {
+        for lambda in [1e-3, 0.05, 0.5] {
+            let mut acc = SecondMomentAccumulator::new(d);
+            let keys: Vec<Vec<f64>> =
+                (0..floor_count).map(|_| rng.gaussian_vec(d)).collect();
+            for k in &keys {
+                acc.accumulate(k);
+            }
+            let unnorm = |acc: &SecondMomentAccumulator| {
+                let mut u = acc.sum().scale(1.0 - lambda);
+                for i in 0..d {
+                    u[(i, i)] += lambda * floor_count as f64;
+                }
+                u
+            };
+            let mut l = unnorm(&acc)
+                .cholesky()
+                .expect("λ floor must keep U SPD while underdetermined");
+            let up_scale = (1.0 - lambda).sqrt();
+            for step in 0..3 * d {
+                let key = rng.gaussian_vec(d);
+                acc.accumulate(&key);
+                let x: Vec<f64> =
+                    key.iter().map(|&v| up_scale * v).collect();
+                l.cholesky_update_rank1(&x);
+                let scratch = unnorm(&acc)
+                    .cholesky()
+                    .expect("U stays SPD as observations accrue");
+                let diff = lower_diff(&l, &scratch);
+                assert!(
+                    diff < 1e-8,
+                    "d={d} λ={lambda} step={step}: maintained factor \
+                     drifted {diff:e} from scratch"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn downdate_inverts_update() {
+    let mut rng = Pcg64::seed(0xC404);
+    for d in DIMS {
+        let a = random_spd(d, &mut rng);
+        let reference = a.cholesky().expect("random SPD must factor");
+        let x = rng.gaussian_vec(d);
+        let mut l = reference.clone();
+        l.cholesky_update_rank1(&x);
+        assert!(
+            l.cholesky_downdate_rank1(&x),
+            "d={d}: downdating an immediately preceding update must \
+             succeed"
+        );
+        let diff = lower_diff(&l, &reference);
+        assert!(
+            diff < 1e-9,
+            "d={d}: update∘downdate drifted {diff:e} from the original \
+             factor"
+        );
+    }
+}
+
+#[test]
+fn refused_downdate_leaves_factor_bitwise_unchanged() {
+    let mut rng = Pcg64::seed(0xC405);
+    for d in DIMS {
+        let a = random_spd(d, &mut rng);
+        let l = a.cholesky().expect("random SPD must factor");
+        // x long enough that A − x·xᵀ is indefinite: ‖x‖² beyond the
+        // largest possible eigenvalue (trace bounds it).
+        let trace: f64 = (0..d).map(|i| a[(i, i)]).sum();
+        let scale = (2.0 * trace).sqrt();
+        let mut x = vec![0.0; d];
+        x[d - 1] = scale; // late pivot: earlier pivots may pass first
+        let mut attempted = l.clone();
+        assert!(
+            !attempted.cholesky_downdate_rank1(&x),
+            "d={d}: indefinite downdate must be refused"
+        );
+        // Refusal is a clean no-op: every bit of the factor survives.
+        assert_eq!(
+            attempted.data(),
+            l.data(),
+            "d={d}: refused downdate touched the factor"
+        );
+    }
+}
+
+#[test]
+fn spd_rejection_preserved() {
+    // The base factorization still refuses indefinite input…
+    let indefinite = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+    assert!(indefinite.cholesky().is_none());
+    // …and an update never breaks SPD: updating the refused matrix's
+    // SPD shift keeps factoring.
+    let mut shifted = indefinite;
+    for i in 0..2 {
+        shifted[(i, i)] += 3.0;
+    }
+    let mut l = shifted.cholesky().expect("shifted matrix is SPD");
+    l.cholesky_update_rank1(&[10.0, -7.0]);
+    let rebuilt = l.matmul(&l.transpose());
+    let expected = add_outer(&shifted, &[vec![10.0, -7.0]]);
+    assert!(
+        rebuilt.max_abs_diff(&expected) < 1e-9,
+        "update must keep L·Lᵀ = A + x·xᵀ"
+    );
+}

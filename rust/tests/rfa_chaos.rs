@@ -19,6 +19,16 @@
 //! Alongside the sweep, targeted tests pin the degraded-mode admission
 //! control, orphaned-unlink accounting, quarantine submit gating, and
 //! the never-a-torn-final-file guarantee of crash-safe snapshot writes.
+//!
+//! Set `RFA_CHAOS_RESAMPLE=aggressive` to run every schedule with an
+//! aggressive online-resampling + frozen-epoch-compaction config (tiny
+//! epochs, window-1-adjacent compaction), so fault injection also
+//! covers the epoch state machine: the maintained Cholesky factor, the
+//! frozen-epoch ring and the merge counter all ride through eviction,
+//! fault-in, quarantine and replay. Under that knob the bitwise
+//! reference is a clean (never-faulted, single-threaded) pool run —
+//! the engine-built serial reference has no epoch boundaries and is
+//! not a valid oracle for a resampling session.
 
 use std::path::PathBuf;
 
@@ -30,9 +40,10 @@ use darkformer::rfa::engine::{
 };
 use darkformer::rfa::estimators::Sampling;
 use darkformer::rfa::serve::{
-    BatchScheduler, DrainOutcome, Fault, FaultHandle, FaultRule,
-    FaultyStore, FsStore, Precision, RetryPolicy, SeededFaults, ServeConfig,
-    SessionPool, StepRequest, StepResponse, StoreOp,
+    BatchScheduler, CompactionConfig, DrainOutcome, Fault, FaultHandle,
+    FaultRule, FaultyStore, FsStore, Precision, ResampleConfig, RetryPolicy,
+    SeededFaults, ServeConfig, SessionPool, StepRequest, StepResponse,
+    StoreOp,
 };
 use darkformer::rfa::PrfEstimator;
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -62,6 +73,28 @@ fn snapshot_dir(tag: &str) -> PathBuf {
     dir
 }
 
+/// The `RFA_CHAOS_RESAMPLE` knob: `aggressive` turns on tiny-epoch
+/// online resampling with window-1-adjacent frozen-epoch compaction, so
+/// every chaos schedule exercises the epoch state machine (maintained
+/// factor, frozen ring, merge counter) through eviction/fault-in/replay.
+/// Epoch length 5 is deliberately coprime to the chunk size 8: epoch
+/// boundaries land mid-request, so snapshot/restore crosses them.
+fn chaos_resample() -> Option<ResampleConfig> {
+    match std::env::var("RFA_CHAOS_RESAMPLE").as_deref() {
+        Ok("aggressive") => Some(ResampleConfig {
+            epoch_positions: 5,
+            max_epochs: 3,
+            shrinkage: 0.05,
+            compaction: Some(CompactionConfig {
+                window: 2,
+                probes: 24,
+                ridge: 1e-6,
+            }),
+        }),
+        _ => None,
+    }
+}
+
 fn cfg(
     precision: Precision,
     threads: usize,
@@ -77,7 +110,7 @@ fn cfg(
         threads,
         memory_budget,
         snapshot_dir: dir,
-        resample: None,
+        resample: chaos_resample(),
     }
 }
 
@@ -364,17 +397,27 @@ fn chaos_sweep_no_loss_deterministic_and_bitwise_after_heal() {
             Precision::F64 => "f64",
             Precision::F32 => "f32",
         };
-        let expected: Vec<Vec<Matrix>> = SESSION_SEEDS
-            .iter()
-            .enumerate()
-            .map(|(s, seed)| {
-                serial_reference(
-                    *seed,
-                    &stream_inputs(7000 + s as u64),
-                    precision,
-                )
-            })
-            .collect();
+        // The bitwise oracle. Without the resample knob the engine-built
+        // serial reference applies; with it, epoch boundaries redraw the
+        // banks mid-stream, so the oracle is a clean never-faulted pool
+        // run (single-threaded — the contract makes thread count, faults
+        // and eviction all invisible to the output bits).
+        let expected: Vec<Vec<Matrix>> = if chaos_resample().is_some() {
+            run_chaos(precision, 1, Vec::new(), None, &format!("ref_{ptag}"))
+                .streams
+        } else {
+            SESSION_SEEDS
+                .iter()
+                .enumerate()
+                .map(|(s, seed)| {
+                    serial_reference(
+                        *seed,
+                        &stream_inputs(7000 + s as u64),
+                        precision,
+                    )
+                })
+                .collect()
+        };
         for (name, rules, seeded) in schedules() {
             let runs: Vec<ChaosRun> = [1usize, 4]
                 .iter()

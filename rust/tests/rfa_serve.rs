@@ -29,8 +29,9 @@ use darkformer::rfa::gaussian::{
     anisotropic_covariance, MultivariateGaussian,
 };
 use darkformer::rfa::serve::{
-    load_session, save_session, BatchScheduler, Precision, ResampleConfig,
-    ServeConfig, SessionHeads, SessionPool, StepRequest,
+    load_session, save_session, BatchScheduler, CompactionConfig,
+    Precision, ResampleConfig, ServeConfig, SessionHeads, SessionPool,
+    StepRequest,
 };
 use darkformer::rfa::{FeatureBank, PrfEstimator};
 use darkformer::rng::{GaussianExt, Pcg64};
@@ -638,6 +639,7 @@ fn resample_epochs_advance_and_redraw_data_aware_banks() {
         epoch_positions: CHUNK as u64,
         max_epochs: 2,
         shrinkage: 0.05,
+        compaction: None,
     };
     let dir = snapshot_dir("resample_epochs");
     let mut pool = SessionPool::new(cfg_resample(
@@ -720,6 +722,7 @@ fn online_resampling_is_bitwise_noop_before_first_boundary() {
             epoch_positions: (L + 1) as u64,
             max_epochs: 3,
             shrinkage: 0.1,
+            compaction: None,
         };
         let stream = stream_inputs(9300);
         let expected = serial_reference(&iso_est(), 808, &stream, precision);
@@ -760,6 +763,7 @@ fn check_online_resume(precision: Precision, max_epochs: usize, tag: &str) {
         epoch_positions: 12,
         max_epochs,
         shrinkage: 0.05,
+        compaction: None,
     };
     let stream = stream_inputs(9100);
     let seed = 4242u64;
@@ -867,6 +871,358 @@ fn online_evict_restore_bitwise_across_epochs_f32() {
     // max_epochs = 1 exercises the frozen-epoch drop at the second
     // boundary — the sliding-window path must also restore exact-bits.
     check_online_resume(Precision::F32, 1, "online_resume_f32");
+}
+
+// ------------------------------------- (d2) frozen-epoch compaction
+
+/// Drive one session's full stream through a direct pool under `rc`,
+/// returning (per-head output rows, per-head `(frozen_len, compactions)`
+/// probes, resident state bytes).
+fn run_resampled(
+    rc: ResampleConfig,
+    precision: Precision,
+    tag: &str,
+) -> (Vec<Vec<f64>>, Vec<(usize, u64)>, usize) {
+    let dir = snapshot_dir(tag);
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        precision,
+        1,
+        0,
+        dir,
+        rc,
+    ));
+    let id = pool.create_session(7070).unwrap();
+    let stream = stream_inputs(9600);
+    let mut outs: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for r in 0..N_REQUESTS {
+        let step = pool
+            .session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        for (h, out) in step.iter().enumerate() {
+            outs[h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    let session = pool.session_mut(id).unwrap();
+    fn probe<T: darkformer::linalg::Scalar>(
+        slots: &[darkformer::rfa::serve::HeadSlot<T>],
+    ) -> Vec<(usize, u64)> {
+        slots
+            .iter()
+            .map(|s| {
+                let o = s.online().unwrap();
+                (o.frozen_len(), o.compactions())
+            })
+            .collect()
+    }
+    let probes = match session.heads() {
+        SessionHeads::F64(slots) => probe(slots),
+        SessionHeads::F32(slots) => probe(slots),
+    };
+    let bytes = session.state_bytes();
+    (outs, probes, bytes)
+}
+
+#[test]
+fn compaction_bounds_frozen_epochs_and_off_is_bitwise_noop() {
+    // K = CHUNK: every request crosses one boundary → 4 frozen epochs
+    // without compaction (cap 8 never binds).
+    let rc_off = ResampleConfig {
+        epoch_positions: CHUNK as u64,
+        max_epochs: 8,
+        shrinkage: 0.05,
+        compaction: None,
+    };
+    let mut rc_wide = rc_off.clone();
+    rc_wide.compaction = Some(CompactionConfig::keep(8));
+    let mut rc_on = rc_off.clone();
+    rc_on.compaction =
+        Some(CompactionConfig { window: 1, probes: 16, ridge: 1e-8 });
+
+    for precision in [Precision::F64, Precision::F32] {
+        let (out_off, probes_off, bytes_off) =
+            run_resampled(rc_off.clone(), precision, "compact_off");
+        let (out_wide, probes_wide, _) =
+            run_resampled(rc_wide.clone(), precision, "compact_wide");
+        let (_, probes_on, bytes_on) =
+            run_resampled(rc_on.clone(), precision, "compact_on");
+
+        // A window the deque never exceeds is a structural no-op: same
+        // retained epochs, zero merges, and bitwise-identical outputs.
+        assert_eq!(
+            out_off, out_wide,
+            "{precision:?}: an untriggered compaction window changed bits"
+        );
+        assert_eq!(probes_off, vec![(N_REQUESTS, 0); N_HEADS]);
+        assert_eq!(probes_wide, probes_off);
+
+        // window = 1 holds exactly one frozen epoch per head, merging
+        // the other N_REQUESTS - 1 — and the resident state shrinks.
+        assert_eq!(
+            probes_on,
+            vec![(1, (N_REQUESTS - 1) as u64); N_HEADS],
+            "{precision:?}: compaction window not enforced"
+        );
+        assert!(
+            bytes_on < bytes_off,
+            "{precision:?}: compaction must shrink resident bytes \
+             ({bytes_on} vs {bytes_off})"
+        );
+    }
+}
+
+/// Snapshot-v3 acceptance half: with boundaries at 12/24 (mid-request
+/// and on a request edge) *and* a window-1 compaction merge at the
+/// second boundary, evict→restore→continue is bitwise identical to the
+/// uninterrupted stream, and the scheduler reproduces the same bits at
+/// worker counts {1, 4}.
+fn check_compaction_resume(precision: Precision, tag: &str) {
+    let rc = ResampleConfig {
+        epoch_positions: 12,
+        max_epochs: 8,
+        shrinkage: 0.05,
+        compaction: Some(CompactionConfig {
+            window: 1,
+            probes: 16,
+            ridge: 1e-8,
+        }),
+    };
+    let stream = stream_inputs(9100);
+    let seed = 4242u64;
+
+    // Uninterrupted reference.
+    let dir = snapshot_dir(&format!("{tag}_ref"));
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        precision,
+        1,
+        0,
+        dir,
+        rc.clone(),
+    ));
+    let id = pool.create_session(seed).unwrap();
+    let mut expected: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for r in 0..N_REQUESTS {
+        let outs = pool
+            .session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        for (h, out) in outs.iter().enumerate() {
+            expected[h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    // Two boundaries crossed; window 1 forced one merge per head.
+    match pool.session_mut(id).unwrap().heads() {
+        SessionHeads::F64(slots) => {
+            for slot in slots {
+                let o = slot.online().unwrap();
+                assert_eq!((o.frozen_len(), o.compactions()), (1, 1));
+                assert!(o.chol_factor().is_some(), "factor must be live");
+            }
+        }
+        SessionHeads::F32(slots) => {
+            for slot in slots {
+                let o = slot.online().unwrap();
+                assert_eq!((o.frozen_len(), o.compactions()), (1, 1));
+                assert!(o.chol_factor().is_some(), "factor must be live");
+            }
+        }
+    }
+
+    // Same stream, evicted after every segment: the maintained factor,
+    // its counters and the merged frozen state all cross the v3
+    // snapshot — any loss would diverge the later segments.
+    let dir = snapshot_dir(&format!("{tag}_resume"));
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        precision,
+        1,
+        0,
+        dir,
+        rc.clone(),
+    ));
+    let id = pool.create_session(seed).unwrap();
+    let mut resumed: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for r in 0..N_REQUESTS {
+        let outs = pool
+            .session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        for (h, out) in outs.iter().enumerate() {
+            resumed[h].extend_from_slice(out.to_f64().data());
+        }
+        if r + 1 < N_REQUESTS {
+            pool.evict(id).unwrap();
+        }
+    }
+    for h in 0..N_HEADS {
+        assert_eq!(
+            expected[h], resumed[h],
+            "{precision:?} head {h}: evict→restore across a resample + \
+             compaction boundary changed bits"
+        );
+    }
+
+    // Scheduler transport at {1, 4} workers.
+    for threads in [1usize, 4] {
+        let dir = snapshot_dir(&format!("{tag}_sched{threads}"));
+        let mut pool = SessionPool::new(cfg_resample(
+            iso_est(),
+            precision,
+            threads,
+            0,
+            dir,
+            rc.clone(),
+        ));
+        let ids = vec![pool.create_session(seed).unwrap()];
+        let mut sched = BatchScheduler::new(pool);
+        let got = run_scheduled(
+            &mut sched,
+            &ids,
+            std::slice::from_ref(&stream),
+            false,
+        );
+        for h in 0..N_HEADS {
+            assert_eq!(
+                got[0][h].data(),
+                expected[h].as_slice(),
+                "{precision:?} threads={threads} head {h}: scheduled \
+                 compaction stream diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn compaction_evict_restore_bitwise_f64() {
+    check_compaction_resume(Precision::F64, "compact_resume_f64");
+}
+
+#[test]
+fn compaction_evict_restore_bitwise_f32() {
+    check_compaction_resume(Precision::F32, "compact_resume_f32");
+}
+
+// ----------------------------------- (d3) snapshot schema compatibility
+
+#[test]
+fn snapshot_v2_files_still_load_and_serve() {
+    use darkformer::checkpoint::{Checkpoint, Tensor};
+    use darkformer::rfa::serve::snapshot::{
+        session_checkpoint, session_from_checkpoint,
+    };
+
+    // An online session past two boundaries, so the v3 snapshot carries
+    // a live maintained factor.
+    let rc = ResampleConfig {
+        epoch_positions: CHUNK as u64,
+        max_epochs: 4,
+        shrinkage: 0.05,
+        compaction: None,
+    };
+    let dir = snapshot_dir("v2_load");
+    let mut pool = SessionPool::new(cfg_resample(
+        iso_est(),
+        Precision::F64,
+        1,
+        0,
+        dir,
+        rc,
+    ));
+    let id = pool.create_session(1717).unwrap();
+    let stream = stream_inputs(9800);
+    for r in 0..2 {
+        pool.session_mut(id)
+            .unwrap()
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+    }
+    let ck = session_checkpoint(pool.session_mut(id).unwrap());
+    assert!(
+        ck.get("head0/online/chol_factor").is_some(),
+        "post-boundary v3 snapshot must carry the maintained factor"
+    );
+
+    // Rewrite as a v2 file: drop every v3-only tensor, stamp version 2.
+    let mut v2 = Checkpoint::new();
+    for name in ck.names().cloned().collect::<Vec<_>>() {
+        if name.contains("/online/chol_")
+            || name.ends_with("/online/compactions")
+            || name.contains("resample/compaction")
+            || name == "session/version"
+        {
+            continue;
+        }
+        v2.insert(name.clone(), ck.get(&name).unwrap().clone());
+    }
+    v2.insert("session/version", Tensor::from_u32(vec![1], &[2]));
+
+    let mut restored =
+        session_from_checkpoint(&v2).expect("v2 snapshot must load");
+    assert_eq!(restored.position(), (2 * CHUNK) as u64);
+    assert_eq!(restored.head_epochs(), vec![2; N_HEADS]);
+    // The factor state comes back fresh (v2 predates it) and the session
+    // keeps serving: the next boundary refreshes from scratch.
+    for r in 2..N_REQUESTS {
+        let outs = restored
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        assert_eq!(outs.len(), N_HEADS);
+    }
+    assert_eq!(restored.head_epochs(), vec![N_REQUESTS as u64; N_HEADS]);
+}
+
+#[test]
+fn snapshot_v1_files_still_load_bitwise() {
+    use darkformer::checkpoint::{Checkpoint, Tensor};
+    use darkformer::rfa::serve::snapshot::{
+        session_checkpoint, session_from_checkpoint,
+    };
+
+    // A static-bank session's v3 snapshot differs from a v1 file only in
+    // the version stamp and the `session/resample` flag — strip both to
+    // reconstruct a genuine pre-resampling file.
+    let dir = snapshot_dir("v1_load");
+    let mut pool =
+        SessionPool::new(cfg(iso_est(), Precision::F64, 1, 0, dir));
+    let id = pool.create_session(2323).unwrap();
+    let stream = stream_inputs(9801);
+    pool.session_mut(id)
+        .unwrap()
+        .step(&slice_heads(&stream, 0, CHUNK), CHUNK);
+    let ck = session_checkpoint(pool.session_mut(id).unwrap());
+
+    let mut v1 = Checkpoint::new();
+    for name in ck.names().cloned().collect::<Vec<_>>() {
+        if name == "session/version" || name.starts_with("session/resample")
+        {
+            continue;
+        }
+        v1.insert(name.clone(), ck.get(&name).unwrap().clone());
+    }
+    v1.insert("session/version", Tensor::from_u32(vec![1], &[1]));
+
+    let mut restored =
+        session_from_checkpoint(&v1).expect("v1 snapshot must load");
+    assert!(restored.resample_config().is_none());
+    // Continuing the stream reproduces the uninterrupted serial
+    // reference bit for bit — v1 restoration is still lossless.
+    let mut got: Vec<Vec<f64>> = vec![Vec::new(); N_HEADS];
+    for r in 1..N_REQUESTS {
+        let outs = restored
+            .step(&slice_heads(&stream, r * CHUNK, (r + 1) * CHUNK), CHUNK);
+        for (h, out) in outs.iter().enumerate() {
+            got[h].extend_from_slice(out.to_f64().data());
+        }
+    }
+    let expected = serial_reference(&iso_est(), 2323, &stream, Precision::F64);
+    for h in 0..N_HEADS {
+        assert_eq!(
+            got[h].as_slice(),
+            &expected[h].data()[CHUNK * DV..],
+            "head {h}: v1-restored session diverged from the serial \
+             reference"
+        );
+    }
 }
 
 // --------------------------------------------- (e) scheduler bugfixes
